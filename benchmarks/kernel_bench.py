@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: us/call of the jnp reference paths on this CPU
+host (the Pallas kernels target TPU; interpret-mode timing is not meaningful)
+plus derived arithmetic intensities from the kernel's tile math.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.segment_agg.ref import edge_mlp_agg_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    B, H, S, D = 1, 4, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    fa = jax.jit(lambda q, k, v: attention_ref(q, k, v, scale=D ** -0.5))
+    us = _time(fa, q, q, q)
+    flops = 4 * B * H * S * S * D
+    rows.append(("flash_attention_ref_1k", us, f"gflops={flops/1e9:.2f}"))
+
+    E, N, FIN, HID = 8192, 2048, 24, 16
+    feats = jnp.asarray(rng.normal(size=(E, FIN)), jnp.float32)
+    dst = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+    w = jnp.ones(E)
+    w1 = jnp.asarray(rng.normal(size=(FIN, HID)), jnp.float32)
+    b1 = jnp.zeros(HID)
+    w2 = jnp.asarray(rng.normal(size=(HID, HID)), jnp.float32)
+    b2 = jnp.zeros(HID)
+    sa = jax.jit(lambda f: edge_mlp_agg_ref(f, w1, b1, w2, b2, dst, w, N))
+    us = _time(sa, feats)
+    rows.append(("segment_agg_ref_8k_edges", us,
+                 f"gflops={2*E*(FIN*HID+HID*HID)/1e9:.3f}"))
+
+    V, D2, Bb, bag = 100_000, 64, 4096, 4
+    table = jnp.asarray(rng.normal(size=(V, D2)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, (Bb, bag)), jnp.int32)
+    eb = jax.jit(embedding_bag_ref)
+    us = _time(eb, table, idx)
+    rows.append(("embedding_bag_ref_4k_bags", us,
+                 f"gbytes={(Bb*bag*D2*4)/1e9:.4f}"))
+
+    if verbose:
+        for r in rows:
+            print(f"{r[0]}: {r[1]:.0f} us  ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

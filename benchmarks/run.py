@@ -1,0 +1,28 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (consistency_vs_ranks, training_consistency,
+                            partition_stats, weak_scaling, kernel_bench)
+    all_rows = []
+    for mod, label in ((consistency_vs_ranks, "Fig6-left"),
+                       (training_consistency, "Fig6-right"),
+                       (partition_stats, "TableII"),
+                       (weak_scaling, "Fig7/8"),
+                       (kernel_bench, "kernels")):
+        print(f"\n=== {label}: {mod.__name__} ===", flush=True)
+        all_rows += mod.run(verbose=True)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,116 @@
+"""Paper Fig. 7 + Fig. 8: weak-scaling model on TPU v5e constants.
+
+CPU wall-clock is meaningless for a TPU target, so this benchmark combines
+(a) MEASURED per-rank partition statistics from our partitioner at a fixed
+per-rank loading with (b) the v5e roofline constants to model one training
+iteration for R = 8..2048 in the paper's three modes (None / A2A / NEIGHBOR).
+The same three terms the dry-run measures (compute, HBM, collective) drive
+the model; halo-buffer bytes follow the paper's setup (hidden-dim x halo
+nodes, fwd+bwd per NMP layer).
+
+Reproduced qualitative claims:
+  * None + NEIGHBOR stay >90% weak-scaling efficiency at large R;
+  * dense A2A collapses (buffer volume grows linearly in R);
+  * smaller loadings and the small model lose efficiency earlier (Fig. 8).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GNNConfig, box_mesh
+from repro.core.partition import build_halo_plan, from_element_partition, partition_elements
+from repro.roofline.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def _measure_halo_fraction():
+    """Per-rank halo fraction + neighbor count from a real partition.
+
+    Halo nodes live on sub-domain surfaces, so the fraction scales as
+    (nodes/rank)^(-1/3) for 3-D decompositions; we measure the constant at a
+    host-feasible loading and return (constant, neighbors) — callers scale to
+    the target loading. (At 512k/rank this gives ~7%, matching the paper's
+    Table II 11% to within the mesh-order difference.)"""
+    mesh = box_mesh((8, 8, 8), p=3)
+    e2r = partition_elements(mesh, (4, 4, 4))
+    graphs = from_element_partition(mesh, e2r, 64)
+    plan = build_halo_plan(graphs)
+    nodes = np.mean([g.n_nodes for g in graphs])
+    halo = np.mean(plan.a2a_send_mask.sum(axis=(1, 2)))
+    nbr = np.mean((plan.a2a_send_mask.sum(axis=-1) > 0).sum(axis=-1))
+    coeff = (halo / nodes) * nodes ** (1.0 / 3.0)
+    return coeff, nbr
+
+
+def halo_fraction_at(coeff: float, nodes_per_rank: float) -> float:
+    return coeff / nodes_per_rank ** (1.0 / 3.0)
+
+
+def model_step_time(R: int, nodes_per_rank: float, cfg: GNNConfig, mode: str,
+                    halo_frac: float, n_neighbors: float) -> float:
+    """Seconds per training iteration (fwd+bwd) under the roofline model."""
+    H = cfg.hidden
+    edges_per_node = 6.0   # interior lattice degree (p>=1 box mesh)
+    E = nodes_per_rank * edges_per_node
+    # per NMP layer dots: edge MLP (3H->H->H) on E edges + node MLP (2H->H->H)
+    mlp_layers = cfg.mlp_hidden_layers + 1
+    flops_layer = 2 * E * (3 * H * H + (mlp_layers - 1) * H * H) \
+        + 2 * nodes_per_rank * (2 * H * H + (mlp_layers - 1) * H * H)
+    flops = 3 * cfg.n_mp_layers * flops_layer          # fwd + bwd(2x)
+    compute_s = flops / PEAK_FLOPS
+    # HBM: activations + params streamed ~3x per layer
+    hbm = 3 * cfg.n_mp_layers * (E + nodes_per_rank) * H * 4 * 3
+    memory_s = hbm / HBM_BW
+
+    halo_nodes = halo_frac * nodes_per_rank
+    buf = halo_nodes * H * 4                            # fp32 aggregates
+    per_layer_exchanges = 2                             # fwd + bwd (Eq. 3)
+    if mode == "none":
+        coll = 0.0
+    elif mode == "a2a":
+        # equal buffers to ALL ranks: max pair-buffer replicated R times
+        pair_buf = buf / max(n_neighbors, 1)
+        coll = cfg.n_mp_layers * per_layer_exchanges * pair_buf * R
+    else:  # neighbor
+        coll = cfg.n_mp_layers * per_layer_exchanges * buf
+    # DDP gradient all-reduce (ring) + two loss all-reduces (negligible size)
+    n_params = {"small": 3979, "large": 91459}.get(cfg.name, 50000)
+    coll += 2 * n_params * 4
+    collective_s = coll / ICI_BW
+    return compute_s + memory_s + collective_s
+
+
+def run(verbose: bool = True):
+    coeff, nbr = _measure_halo_fraction()
+    rows = []
+    if verbose:
+        print(f"halo-fraction coefficient {coeff:.2f} (surface/volume law), "
+              f"avg neighbors {nbr:.1f}; at 512k/rank -> "
+              f"{halo_fraction_at(coeff, 512_000)*100:.1f}%")
+    for cfg in (GNNConfig.small(), GNNConfig.large()):
+        for loading in (256_000, 512_000):
+            halo_frac = halo_fraction_at(coeff, loading)
+            base = None
+            for R in (8, 64, 512, 2048):
+                times = {m: model_step_time(R, loading, cfg, m, halo_frac, nbr)
+                         for m in ("none", "a2a", "neighbor")}
+                thr = {m: loading * R / t for m, t in times.items()}
+                if base is None:
+                    base = thr
+                eff = {m: thr[m] / (base[m] * R / 8) for m in thr}
+                rel = {m: thr[m] / thr["none"] for m in thr}
+                if verbose:
+                    print(f"{cfg.name:6s} load={loading//1000}k R={R:5d} | "
+                          f"eff none {eff['none']*100:5.1f}% a2a {eff['a2a']*100:5.1f}% "
+                          f"nbr {eff['neighbor']*100:5.1f}% | rel-thr a2a "
+                          f"{rel['a2a']:.3f} nbr {rel['neighbor']:.3f}")
+                rows.append((f"fig7_{cfg.name}_{loading//1000}k_R{R}",
+                             times["neighbor"] * 1e6,
+                             f"eff_nbr={eff['neighbor']:.3f};eff_a2a={eff['a2a']:.3f};"
+                             f"rel_nbr={rel['neighbor']:.3f};rel_a2a={rel['a2a']:.3f}"))
+            assert eff["neighbor"] > 0.85, "neighbor mode must weak-scale"
+            assert eff["a2a"] < 0.5, "dense A2A must collapse at R=2048"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

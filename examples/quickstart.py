@@ -1,0 +1,59 @@
+"""Quickstart: build a mesh-based graph, partition it, and verify consistency.
+
+Runs on 1 CPU device in ~a minute:
+  1. generate a spectral-element box mesh (GLL points -> graph);
+  2. partition into R=4 sub-graphs with halo metadata;
+  3. evaluate the paper's consistent GNN un-partitioned and partitioned;
+  4. show Eq. 2 holds (outputs identical) and what breaks without halos.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn, partition_mesh,
+    gather_node_features, scatter_node_outputs, taylor_green_velocity,
+)
+from repro.core.reference import (
+    gnn_forward_stacked, rank_static_inputs,
+)
+
+
+def main():
+    # 1) mesh: 4x4x2 spectral elements at polynomial order p=3
+    mesh = box_mesh((4, 4, 2), p=3)
+    print(f"SEM mesh: {mesh.n_elem} elements, {mesh.n_nodes} unique GLL nodes")
+
+    # 2) partition (NekRS-style 2x2x1 blocks) — coincident nodes become halos
+    pg = partition_mesh(mesh, (2, 2, 1))
+    print(f"partitioned R={pg.R}: N_pad={pg.n_pad}, E_pad={pg.e_pad}, "
+          f"halo rounds={pg.halo.n_rounds}")
+
+    # 3) the paper's GNN on Taylor-Green-vortex velocity
+    cfg = GNNConfig.small()
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    vel = taylor_green_velocity(mesh.coords)
+
+    pg1 = partition_mesh(mesh, (1, 1, 1))
+    y_ref = gnn_forward_stacked(
+        params, jnp.asarray(gather_node_features(pg1, vel)),
+        rank_static_inputs(pg1, mesh.coords), HaloSpec(mode=NONE))
+    y_ref = scatter_node_outputs(pg1, np.asarray(y_ref))
+
+    meta = rank_static_inputs(pg, mesh.coords)
+    x = jnp.asarray(gather_node_features(pg, vel))
+    y_con = scatter_node_outputs(pg, np.asarray(
+        gnn_forward_stacked(params, x, meta, HaloSpec(mode=A2A))))
+    y_std = scatter_node_outputs(pg, np.asarray(
+        gnn_forward_stacked(params, x, meta, HaloSpec(mode=NONE))))
+
+    print(f"max |consistent - unpartitioned| = {np.abs(y_con - y_ref).max():.2e}"
+          "   (Eq. 2 holds)")
+    print(f"max |standard   - unpartitioned| = {np.abs(y_std - y_ref).max():.2e}"
+          "   (halo-less NMP is wrong at partition boundaries)")
+
+
+if __name__ == "__main__":
+    main()

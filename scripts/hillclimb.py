@@ -1,0 +1,52 @@
+"""§Perf hillclimb driver: run a cell with named override sets, re-lower,
+re-analyze, and print the roofline terms per iteration.
+
+    PYTHONPATH=src python scripts/hillclimb.py graphcast ogb_products \
+        '{}' '{"remat":true}' '{"remat":true,"act_bf16":true}' ...
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell
+from repro.roofline.hlo_analysis import analyze
+
+OUT = Path("runs/hillclimb")
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    OUT.mkdir(parents=True, exist_ok=True)
+    results = []
+    for i, ov_json in enumerate(sys.argv[3:]):
+        ov = json.loads(ov_json)
+        tag = f"hc{i}_" + "_".join(sorted(ov)) if ov else "hc0_baseline"
+        try:
+            rec = run_cell(arch, shape, False, save_hlo=True, overrides=ov, tag=tag)
+            s = analyze(Path(rec["hlo_path"]).read_text(), total_devices=256)
+            t = s.terms()
+            row = dict(tag=tag, overrides=ov,
+                       peak_gib=rec["per_device_bytes"]["peak_estimate"] / 2 ** 30,
+                       compute_ms=t["compute_s"] * 1e3, memory_ms=t["memory_s"] * 1e3,
+                       collective_ms=t["collective_s"] * 1e3,
+                       dot_flops=s.dot_flops, wire_bytes=s.collective_wire_bytes,
+                       by_collective=s.by_collective,
+                       compile_s=rec["compile_s"])
+            print(f"[{tag}] peak {row['peak_gib']:8.1f} GiB | compute "
+                  f"{row['compute_ms']:9.1f} ms | memory {row['memory_ms']:9.1f} ms | "
+                  f"collective {row['collective_ms']:8.1f} ms", flush=True)
+        except Exception as e:
+            row = dict(tag=tag, overrides=ov, error=f"{type(e).__name__}: {e}")
+            print(f"[{tag}] FAIL {type(e).__name__}: {str(e)[:300]}", flush=True)
+        results.append(row)
+    out_path = OUT / f"{arch}_{shape}.json"
+    existing = json.loads(out_path.read_text()) if out_path.exists() else []
+    out_path.write_text(json.dumps(existing + results, indent=1))
+    print(f"-> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: consistent distributed mesh-based GNNs in JAX (SC24-W reproduction
++ TPU-pod framework). See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,41 @@
+"""Architecture registry: 10 assigned archs + the paper's own GNN.
+
+Modules are imported lazily so that e.g. LM-only workflows don't pull the
+equivariant-irreps machinery.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+# arch id -> (module path, family)
+ARCHS: Dict[str, tuple] = {
+    # LM family
+    "deepseek-v2-236b": ("repro.configs.deepseek_v2_236b", "lm"),
+    "dbrx-132b": ("repro.configs.dbrx_132b", "lm"),
+    "llama3.2-3b": ("repro.configs.llama3_2_3b", "lm"),
+    "granite-34b": ("repro.configs.granite_34b", "lm"),
+    "gemma2-2b": ("repro.configs.gemma2_2b", "lm"),
+    # GNN family
+    "mace": ("repro.configs.mace", "gnn"),
+    "graphcast": ("repro.configs.graphcast", "gnn"),
+    "gat-cora": ("repro.configs.gat_cora", "gnn"),
+    "nequip": ("repro.configs.nequip", "gnn"),
+    # RecSys
+    "dlrm-rm2": ("repro.configs.dlrm_rm2", "recsys"),
+    # the paper's own architecture (not part of the 40-cell matrix)
+    "paper-gnn": ("repro.configs.paper_gnn", "gnn"),
+}
+
+
+def get_arch(arch_id: str):
+    path, family = ARCHS[arch_id]
+    return importlib.import_module(path), family
+
+
+def family_of(arch_id: str) -> str:
+    return ARCHS[arch_id][1]
+
+
+def assigned_archs():
+    return [a for a in ARCHS if a != "paper-gnn"]

@@ -1,0 +1,33 @@
+"""DBRX 132B [hf:databricks/dbrx-base]: 40L d6144, GQA kv=8, MoE 16e top-4."""
+from repro.models.transformer.config import MoEConfig, TransformerConfig
+
+ARCH_ID = "dbrx-132b"
+FAMILY = "lm"
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        vocab=100352, d_model=6144, n_layers=40,
+        n_q=48, n_kv=8, head_dim=128,
+        d_ff=10752, mlp_variant="swiglu",
+        moe=MoEConfig(n_experts=16, top_k=4, d_ff=10752,
+                      capacity_factor=1.25, renormalize=True, aux_coef=0.01),
+        rope_theta=500000.0,
+        tied_embeddings=False,
+        train_microbatches=16,
+        remat="full",   # dots policy would save per-layer expert/mlp matmul outputs
+        attn_parallel="heads",                    # 48 heads / 16 = 3 per device
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        vocab=256, d_model=32, n_layers=2,
+        n_q=4, n_kv=2, head_dim=16,
+        d_ff=48, mlp_variant="swiglu",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff=48, capacity_factor=2.0),
+        tied_embeddings=False,
+        attn_parallel="heads",
+    )

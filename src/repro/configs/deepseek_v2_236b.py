@@ -1,0 +1,42 @@
+"""DeepSeek-V2 236B [arXiv:2405.04434]: 60L d5120, MLA (kv_lora=512),
+MoE 160 routed top-6 + 2 shared experts (d_ff 1536), first layer dense."""
+from repro.models.transformer.config import MLAConfig, MoEConfig, TransformerConfig
+
+ARCH_ID = "deepseek-v2-236b"
+FAMILY = "lm"
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        vocab=102400, d_model=5120, n_layers=60,
+        n_q=128, n_kv=128, head_dim=192,          # MLA qk_dim = 128 nope + 64 rope
+        d_ff=12288,                               # first dense layer hidden
+        mlp_variant="swiglu",
+        mla=MLAConfig(q_lora=1536, kv_lora=512, qk_nope=128, qk_rope=64, v_dim=128),
+        moe=MoEConfig(n_experts=160, top_k=6, d_ff=1536, n_shared=2,
+                      first_dense_layers=1, first_dense_ff=12288,
+                      capacity_factor=1.25, renormalize=False, aux_coef=0.003),
+        rope_theta=10000.0,
+        tied_embeddings=False,
+        train_microbatches=16,
+        remat="full",   # dots policy would save per-layer expert/mlp matmul outputs
+        attn_parallel="heads",                    # 128 heads / 16 = 8 per device
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        vocab=256, d_model=32, n_layers=3,
+        n_q=4, n_kv=4, head_dim=24,
+        d_ff=64, mlp_variant="swiglu",
+        mla=MLAConfig(q_lora=48, kv_lora=32, qk_nope=16, qk_rope=8, v_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=16, n_shared=1,
+                      first_dense_layers=1, first_dense_ff=64,
+                      # E/K => capacity == local token count: drop-free, so
+                      # smoke tests can compare prefill/decode/forward exactly
+                      capacity_factor=4.0, renormalize=False),
+        tied_embeddings=False,
+        attn_parallel="heads",
+    )

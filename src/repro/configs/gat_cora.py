@@ -1,0 +1,64 @@
+"""GAT-Cora [arXiv:1710.10903]: 2L, hidden 8, 8 heads, attn aggregation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import gnn_common as G
+from repro.models.gnn_zoo.gat import GATConfig, gat_forward, init_gat
+
+ARCH_ID = "gat-cora"
+FAMILY = "gnn"
+
+
+def config(shape: dict | None = None) -> GATConfig:
+    shape = shape or G.GNN_SHAPES["full_graph_sm"]
+    if shape["kind"] == "molecule":
+        return GATConfig(in_dim=8, hidden=8, heads=8, n_classes=1, n_layers=2)
+    return GATConfig(in_dim=shape["d_feat"], hidden=8, heads=8,
+                     n_classes=shape["n_classes"], n_layers=2)
+
+
+def smoke_config() -> GATConfig:
+    return GATConfig(in_dim=16, hidden=4, heads=2, n_classes=3, n_layers=2)
+
+
+def _inputs_factory(shape, R, n_pad, e_pad, graph_axis, edge_parallel=False):
+    sds = jax.ShapeDtypeStruct
+    d = shape.get("d_feat", 8)
+    inputs = {"x": sds((R, n_pad, d), jnp.float32),
+              "labels": sds((R, n_pad), jnp.int32)}
+    specs = {"x": P(graph_axis, None, None), "labels": P(graph_axis, None)}
+    return inputs, specs
+
+
+def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
+    cfg = config(shape)
+    regression = shape["kind"] == "molecule"
+
+    def loss_local(params, inputs, meta):
+        x = inputs["x"][0]
+        out = gat_forward(params, x, meta, halo, cfg)
+        if regression:
+            tgt = inputs["labels"][0].astype(jnp.float32)[:, None]
+            return G.consistent_mse_loss(out, tgt, meta["node_inv_mult"], (graph_axis,))
+        return G.consistent_ce_loss(out, inputs["labels"][0],
+                                    meta["node_inv_mult"], (graph_axis,))
+    return loss_local
+
+
+def _param_factory(shape):
+    cfg = config(shape)
+    return jax.eval_shape(functools.partial(init_gat, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def build_dryrun_cell(shape_id, mesh, overrides=None):
+    return G.build_gnn_dryrun_cell(
+        shape_id, mesh,
+        loss_local_factory=_loss_local_factory,
+        inputs_factory=_inputs_factory,
+        param_factory=_param_factory,
+        overrides=overrides)

@@ -1,0 +1,36 @@
+"""Gemma-2-2B [arXiv:2408.00118]: 26L d2304, 8H/kv4 head_dim 256, GeGLU 9216,
+alternating local(4096)/global attention, logit softcaps, pre+post norms."""
+from repro.models.transformer.config import TransformerConfig
+
+ARCH_ID = "gemma2-2b"
+FAMILY = "lm"
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        vocab=256000, d_model=2304, n_layers=26,
+        n_q=8, n_kv=4, head_dim=256,
+        d_ff=9216, mlp_variant="geglu",
+        rope_theta=10000.0,
+        window=4096, window_pattern="alternate",
+        attn_softcap=50.0, final_softcap=30.0,
+        post_norms=True, gemma_norm=True,
+        tied_embeddings=True,
+        train_microbatches=4,
+        attn_parallel="seq",                      # 8 heads don't divide 16
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        vocab=256, d_model=32, n_layers=2,
+        n_q=4, n_kv=2, head_dim=16,
+        d_ff=64, mlp_variant="geglu",
+        window=8, window_pattern="alternate",
+        attn_softcap=50.0, final_softcap=30.0,
+        post_norms=True, gemma_norm=True,
+        tied_embeddings=True,
+        attn_parallel="seq",
+    )

@@ -1,0 +1,249 @@
+"""GNN-family shapes + dry-run cell machinery.
+
+Mesh layout for GNN cells on the production mesh (see DESIGN.md):
+  * 'data' axis  = the paper's spatial graph decomposition (R = 16
+    sub-graphs; halo ppermute/all_to_all run over 'data');
+  * 'model' axis = hidden-dim tensor parallelism where the arch is wide
+    enough (GraphCast d=512); replicated otherwise (v1 — the §Perf log
+    hillclimbs edge-parallel sharding over 'model' for one cell);
+  * 'pod' axis   = data parallelism over snapshots (gradient psum only).
+
+The full-config dry-run builds *spec-only* partitioned metadata
+(`synthetic_partitioned_meta`): shapes + XOR-pairing ppermute rounds, no
+host-side partitioning of 61M-edge graphs. Smoke tests run the REAL
+partitioner on reduced graphs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+GNN_SHAPES: Dict[str, dict] = {
+    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556, d_feat=1433,
+                          n_classes=7),
+    "minibatch_lg": dict(kind="minibatch", n_nodes=232965, n_edges=114615892,
+                         batch_nodes=1024, fanouts=(15, 10), d_feat=602,
+                         n_classes=41),
+    "ogb_products": dict(kind="full", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(kind="molecule", n_nodes=30, n_edges=64, batch=128),
+}
+
+
+def _round_up(x, m=128):
+    # multiple of 128 so the edge dim can also shard over the model axis
+    # (edge-parallel §Perf mode)
+    return ((int(x) + m - 1) // m) * m
+
+
+EDGE_KEYS = ("edge_src", "edge_dst", "edge_mask", "edge_inv_mult")
+
+
+def xor_rounds(R: int, k: int) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """k ppermute rounds from XOR pairings (valid perfect matchings for R=2^j)."""
+    rounds = []
+    for c in range(1, k + 1):
+        perm = []
+        for r in range(R):
+            s = r ^ c
+            if s < R:
+                perm.append((r, s))
+        rounds.append(tuple(perm))
+    return tuple(rounds)
+
+
+def synthetic_partitioned_meta(R: int, n_nodes: int, n_edges_directed: int,
+                               halo_frac: float = 0.12, k_rounds: int = 8,
+                               imbalance: float = 1.10):
+    """ShapeDtypeStructs of ``PartitionedGraphs.device_arrays()`` for a graph
+    of this size partitioned R ways (dry-run only — no data)."""
+    n_pad = _round_up(n_nodes * imbalance / R + 1)
+    e_pad = _round_up(n_edges_directed * imbalance / R + 1)
+    buf = _round_up(max(n_pad * halo_frac / 4, 8))
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    meta = dict(
+        node_mask=sds((R, n_pad), f32), node_inv_mult=sds((R, n_pad), f32),
+        edge_src=sds((R, e_pad), i32), edge_dst=sds((R, e_pad), i32),
+        edge_mask=sds((R, e_pad), f32), edge_inv_mult=sds((R, e_pad), f32),
+        a2a_send_idx=sds((R, R, buf), i32), a2a_send_mask=sds((R, R, buf), f32),
+        a2a_recv_idx=sds((R, R, buf), i32), a2a_recv_mask=sds((R, R, buf), f32),
+        nbr_send_idx=sds((R, k_rounds, buf), i32),
+        nbr_send_mask=sds((R, k_rounds, buf), f32),
+        nbr_recv_idx=sds((R, k_rounds, buf), i32),
+        nbr_recv_mask=sds((R, k_rounds, buf), f32),
+    )
+    return meta, n_pad, e_pad
+
+
+def meta_specs(meta, graph_axis: str, edge_parallel: bool = False):
+    out = {}
+    for k, v in meta.items():
+        if edge_parallel and k in EDGE_KEYS:
+            out[k] = P(graph_axis, "model", *([None] * (v.ndim - 2)))
+        else:
+            out[k] = P(graph_axis, *([None] * (v.ndim - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generic distributed GNN train step (shard_map over the whole mesh)
+# ---------------------------------------------------------------------------
+
+def make_gnn_train_step(loss_local, mesh: Mesh, in_specs_inputs, graph_axis: str,
+                        opt: AdamWConfig, edge_parallel: bool = False):
+    """loss_local(params, inputs, meta) -> scalar (may use collectives).
+
+    Returns (step, wrap) where step(state, inputs, meta) -> (state', loss) is
+    ready for jit with the in_specs produced alongside.
+    """
+    all_axes = tuple(mesh.axis_names)
+
+    def step_local(state, inputs, meta):
+        meta_l = {k: v[0] for k, v in meta.items()}
+
+        def loss_fn(p):
+            return loss_local(p, inputs, meta_l)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, all_axes), grads)
+        loss = jax.lax.pmean(loss, all_axes)
+        new_p, new_opt, _ = adamw_update(grads, state["opt"], state["params"], opt)
+        return {"params": new_p, "opt": new_opt}, loss
+
+    def wrap(meta):
+        return jax.shard_map(
+            step_local, mesh=mesh,
+            in_specs=(P(), in_specs_inputs,
+                      meta_specs(meta, graph_axis, edge_parallel)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+
+    return step_local, wrap
+
+
+def make_gnn_eval_step(fwd_local, mesh: Mesh, in_specs_inputs, out_specs,
+                       graph_axis: str):
+    def eval_local(params, inputs, meta):
+        meta_l = {k: v[0] for k, v in meta.items()}
+        return fwd_local(params, inputs, meta_l)
+
+    def wrap(meta):
+        return jax.shard_map(
+            eval_local, mesh=mesh,
+            in_specs=(P(), in_specs_inputs, meta_specs(meta, graph_axis)),
+            out_specs=out_specs, check_vma=False,
+        )
+    return eval_local, wrap
+
+
+def consistent_ce_loss(logits, labels, node_inv_mult, axes):
+    """Partition-consistent node-classification cross entropy (Eq. 6 analog)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    s = jnp.sum(-ll * node_inv_mult)
+    n = jnp.sum(node_inv_mult)
+    return jax.lax.psum(s, axes) / jnp.maximum(jax.lax.psum(n, axes), 1e-9)
+
+
+def consistent_mse_loss(pred, target, node_inv_mult, axes):
+    err = jnp.sum((pred - target) ** 2, axis=-1) if pred.ndim > 1 else (pred - target) ** 2
+    s = jnp.sum(err * node_inv_mult)
+    n = jnp.sum(node_inv_mult)
+    return jax.lax.psum(s, axes) / jnp.maximum(jax.lax.psum(n, axes), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# dry-run cell builder shared by the four GNN archs
+# ---------------------------------------------------------------------------
+
+def build_gnn_dryrun_cell(shape_id: str, mesh: Mesh, *,
+                          loss_local_factory, inputs_factory, param_factory,
+                          halo_mode: str = NEIGHBOR, n_params_meta: int = 0,
+                          overrides=None):
+    overrides = overrides or {}
+    edge_parallel = bool(overrides.get("edge_parallel"))
+    """Wire one (gnn arch x shape) cell.
+
+    loss_local_factory(shape, halo, graph_axis, mesh) -> loss_local(params, inputs, meta_l)
+    inputs_factory(shape, R_graph, n_pad, e_pad, batch_axes) -> (inputs_sds, inputs_specs)
+    param_factory(shape) -> params ShapeDtypeStruct tree (replicated P()).
+    """
+    shape = dict(GNN_SHAPES[shape_id])
+    graph_axis = "data"
+    R = mesh.shape[graph_axis]
+    kind = shape["kind"]
+
+    if kind == "full":
+        meta, n_pad, e_pad = synthetic_partitioned_meta(
+            R, shape["n_nodes"], shape["n_edges"] * 2)
+        halo = HaloSpec(mode=halo_mode, axis=graph_axis, perms=xor_rounds(R, 8))
+        batch_axes = ()
+    elif kind == "minibatch":
+        n_pad, e_pad = _minibatch_pads(shape)
+        meta = _block_meta_sds(R, n_pad, e_pad)
+        halo = HaloSpec(mode=NONE, axis=graph_axis)
+        batch_axes = ()
+    else:  # molecule: per-device block-diagonal batch
+        per_dev = max(shape["batch"] // R, 1)
+        n_pad = per_dev * shape["n_nodes"]
+        e_pad = per_dev * shape["n_edges"]
+        meta = _block_meta_sds(R, n_pad, e_pad)
+        halo = HaloSpec(mode=NONE, axis=graph_axis)
+        batch_axes = ()
+
+    inputs, input_specs = inputs_factory(shape, R, n_pad, e_pad, graph_axis,
+                                          edge_parallel=edge_parallel)
+    loss_local = loss_local_factory(shape, halo, graph_axis, mesh,
+                                    overrides=overrides)
+    params_sds = param_factory(shape)
+    opt = AdamWConfig()
+    opt_sds = jax.eval_shape(functools.partial(init_adamw, cfg=opt), params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+
+    step_local, wrap = make_gnn_train_step(loss_local, mesh, input_specs,
+                                           graph_axis, opt,
+                                           edge_parallel=edge_parallel)
+
+    def step(state, inputs_, meta_):
+        return wrap(meta_)(state, inputs_, meta_)
+
+    args = (state_sds, inputs, meta)
+    in_specs = (P(), input_specs, meta_specs(meta, graph_axis, edge_parallel))
+    out_specs = (P(), P())
+    cell_meta = dict(kind=kind, n_pad=n_pad, e_pad=e_pad,
+                     halo_mode=halo.mode, graph_axis=graph_axis,
+                     donate=(0,))
+    return step, args, in_specs, out_specs, cell_meta
+
+
+def _minibatch_pads(shape):
+    from repro.graph.sampler import SampledBlock
+    seeds_per_dev = max(shape["batch_nodes"] // 16, 1)
+    n_pad, e_pad = SampledBlock.pad_sizes(seeds_per_dev, shape["fanouts"])
+    return _round_up(n_pad), _round_up(e_pad)
+
+
+def _block_meta_sds(R, n_pad, e_pad):
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    # no-halo meta still carries (tiny) halo arrays so device_arrays keys match
+    return dict(
+        node_mask=sds((R, n_pad), f32), node_inv_mult=sds((R, n_pad), f32),
+        edge_src=sds((R, e_pad), i32), edge_dst=sds((R, e_pad), i32),
+        edge_mask=sds((R, e_pad), f32), edge_inv_mult=sds((R, e_pad), f32),
+        a2a_send_idx=sds((R, R, 8), i32), a2a_send_mask=sds((R, R, 8), f32),
+        a2a_recv_idx=sds((R, R, 8), i32), a2a_recv_mask=sds((R, R, 8), f32),
+        nbr_send_idx=sds((R, 1, 8), i32), nbr_send_mask=sds((R, 1, 8), f32),
+        nbr_recv_idx=sds((R, 1, 8), i32), nbr_recv_mask=sds((R, 1, 8), f32),
+    )

@@ -1,0 +1,30 @@
+"""Granite-34B-code [arXiv:2405.04324]: 88L d6144, MQA (kv=1), gelu MLP 24576."""
+from repro.models.transformer.config import TransformerConfig
+
+ARCH_ID = "granite-34b"
+FAMILY = "lm"
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        vocab=49152, d_model=6144, n_layers=88,
+        n_q=48, n_kv=1, head_dim=128,
+        d_ff=24576, mlp_variant="gelu_mlp",
+        rope_theta=10000.0,
+        tied_embeddings=True,
+        train_microbatches=16,
+        remat="full",   # dots policy would save per-layer expert/mlp matmul outputs
+        attn_parallel="heads",                    # 48 / 16 = 3
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        vocab=256, d_model=32, n_layers=2,
+        n_q=4, n_kv=1, head_dim=16,
+        d_ff=96, mlp_variant="gelu_mlp",
+        tied_embeddings=True,
+        attn_parallel="heads",
+    )

@@ -1,0 +1,97 @@
+"""GraphCast [arXiv:2212.12794]: 16L d512 encoder-processor-decoder.
+
+The assigned generic-graph shapes exercise the processor at scale; the
+weather configuration (mesh_refinement=6, n_vars=227, icosahedral multimesh)
+is available via ``weather_config`` and examples/graphcast_weather.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import gnn_common as G
+from repro.models.gnn_zoo.graphcast import (
+    GraphCastConfig, graphcast_forward, init_graphcast,
+)
+
+ARCH_ID = "graphcast"
+FAMILY = "gnn"
+EDGE_IN = 4
+
+
+def config(shape: dict | None = None) -> GraphCastConfig:
+    shape = shape or G.GNN_SHAPES["full_graph_sm"]
+    if shape["kind"] == "molecule":
+        return GraphCastConfig(in_dim=8, hidden=512, n_layers=16, out_dim=1,
+                               edge_in=EDGE_IN)
+    return GraphCastConfig(in_dim=shape["d_feat"], hidden=512, n_layers=16,
+                           out_dim=shape["n_classes"], edge_in=EDGE_IN)
+
+
+def weather_config(refinement: int = 6) -> GraphCastConfig:
+    return GraphCastConfig(in_dim=227, hidden=512, n_layers=16, out_dim=227,
+                           edge_in=EDGE_IN, name=f"graphcast-weather-r{refinement}")
+
+
+def smoke_config() -> GraphCastConfig:
+    return GraphCastConfig(in_dim=16, hidden=32, n_layers=3, out_dim=4,
+                           mlp_hidden_layers=1)
+
+
+def _inputs_factory(shape, R, n_pad, e_pad, graph_axis, edge_parallel=False):
+    sds = jax.ShapeDtypeStruct
+    d = shape.get("d_feat", 8)
+    inputs = {"x": sds((R, n_pad, d), jnp.float32),
+              "edge_feats": sds((R, e_pad, EDGE_IN), jnp.float32),
+              "labels": sds((R, n_pad), jnp.int32)}
+    specs = {"x": P(graph_axis, None, None),
+             "edge_feats": P(graph_axis, "model" if edge_parallel else None, None),
+             "labels": P(graph_axis, None)}
+    return inputs, specs
+
+
+def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
+    cfg = config(shape)
+    ov = overrides or {}
+    if ov.get("edge_parallel"):
+        cfg = type(cfg)(**{**cfg.__dict__, "edge_parallel_axes": ("model",)})
+    if ov.get("remat"):
+        cfg = type(cfg)(**{**cfg.__dict__, "remat": True})
+    if ov.get("act_bf16"):
+        cfg = type(cfg)(**{**cfg.__dict__, "act_dtype": jnp.bfloat16})
+    if ov.get("remat_segment"):
+        cfg = type(cfg)(**{**cfg.__dict__, "remat_segment": int(ov["remat_segment"])})
+    params_bf16 = bool(ov.get("params_bf16"))
+    regression = shape["kind"] == "molecule"
+
+    def loss_local(params, inputs, meta):
+        if params_bf16:
+            params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params)
+        out = graphcast_forward(params, inputs["x"][0], inputs["edge_feats"][0],
+                                meta, halo, cfg)
+        if regression:
+            tgt = inputs["labels"][0].astype(jnp.float32)[:, None]
+            return G.consistent_mse_loss(out, tgt, meta["node_inv_mult"], (graph_axis,))
+        return G.consistent_ce_loss(out, inputs["labels"][0],
+                                    meta["node_inv_mult"], (graph_axis,))
+    return loss_local
+
+
+def _param_factory(shape):
+    cfg = config(shape)
+    return jax.eval_shape(functools.partial(init_graphcast, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_dryrun_cell(shape_id, mesh, overrides=None):
+    return G.build_gnn_dryrun_cell(
+        shape_id, mesh,
+        loss_local_factory=_loss_local_factory,
+        inputs_factory=_inputs_factory,
+        param_factory=_param_factory,
+        overrides=overrides)

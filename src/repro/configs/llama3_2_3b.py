@@ -1,0 +1,29 @@
+"""Llama-3.2-3B [hf:meta-llama/Llama-3.2-3B]: 28L d3072, GQA kv=8, swiglu 8192."""
+from repro.models.transformer.config import TransformerConfig
+
+ARCH_ID = "llama3.2-3b"
+FAMILY = "lm"
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID,
+        vocab=128256, d_model=3072, n_layers=28,
+        n_q=24, n_kv=8, head_dim=128,
+        d_ff=8192, mlp_variant="swiglu",
+        rope_theta=500000.0,
+        tied_embeddings=True,
+        train_microbatches=4,
+        attn_parallel="seq",                      # 24 heads don't divide 16
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke",
+        vocab=256, d_model=32, n_layers=2,
+        n_q=4, n_kv=2, head_dim=16,
+        d_ff=64, mlp_variant="swiglu",
+        tied_embeddings=True,
+        attn_parallel="seq",
+    )

@@ -1,0 +1,52 @@
+"""Shared helpers for LM architecture configs: sharding rules + shape table."""
+from __future__ import annotations
+
+from typing import Dict
+
+from jax.sharding import Mesh
+
+from repro.models.transformer.config import TransformerConfig
+from repro.sharding import Rules
+
+
+# The four LM input-shape cells (assignment spec).
+LM_SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def batch_axes_for(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def lm_rules(mesh: Mesh, cfg: TransformerConfig) -> Rules:
+    """Logical-dim -> mesh-axis rules.
+
+    TP over 'model' for mlp/vocab/experts (+ heads when divisible); FSDP over
+    'data' for the embed dim of every weight; activations batch-sharded over
+    ('pod','data'). Heads that don't divide the model axis stay replicated —
+    those archs use sequence-parallel attention instead (cfg.attn_parallel).
+    """
+    n_model = mesh.shape["model"]
+    heads_ok = cfg.n_q % n_model == 0
+    kv_ok = cfg.n_kv % n_model == 0
+    return {
+        "act_batch": batch_axes_for(mesh),
+        "act_vocab": "model",
+        "act_heads": "model" if heads_ok else None,
+        "act_kv_heads": "model" if kv_ok else None,
+        "vocab": "model",
+        "embed": "data",
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": None,
+        "q_lora": None,
+        "kv_lora": None,
+        "layers": None,
+    }

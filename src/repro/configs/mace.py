@@ -1,0 +1,71 @@
+"""MACE [arXiv:2206.07697]: 2L, 128 channels, l_max=2, correlation 3, 8 RBF."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import gnn_common as G
+from repro.models.gnn_zoo.mace import MACEConfig, init_mace, mace_forward
+
+ARCH_ID = "mace"
+FAMILY = "gnn"
+
+
+def config(shape: dict | None = None) -> MACEConfig:
+    return MACEConfig(n_layers=2, hidden_mul=128, l_max=2, correlation=3,
+                      n_rbf=8, cutoff=5.0)
+
+
+def smoke_config() -> MACEConfig:
+    return MACEConfig(n_layers=2, hidden_mul=8, l_max=1, correlation=3,
+                      n_rbf=4, cutoff=3.0, n_species=4)
+
+
+def _inputs_factory(shape, R, n_pad, e_pad, graph_axis, edge_parallel=False):
+    sds = jax.ShapeDtypeStruct
+    inputs = {"species": sds((R, n_pad), jnp.int32),
+              "pos": sds((R, n_pad, 3), jnp.float32),
+              "target": sds((R, n_pad), jnp.float32)}
+    specs = {"species": P(graph_axis, None),
+             "pos": P(graph_axis, None, None),
+             "target": P(graph_axis, None)}
+    return inputs, specs
+
+
+def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
+    cfg = config(shape)
+    ov = overrides or {}
+    kw = {}
+    if ov.get("remat"):
+        kw["remat"] = True
+    if ov.get("act_bf16"):
+        kw["act_dtype"] = jnp.bfloat16
+    if ov.get("edge_parallel"):
+        kw["edge_parallel_axes"] = ("model",)
+    if kw:
+        cfg = type(cfg)(**{**cfg.__dict__, **kw})
+
+    def loss_local(params, inputs, meta):
+        e_site = mace_forward(params, inputs["species"][0], inputs["pos"][0],
+                              meta, halo, cfg)
+        return G.consistent_mse_loss(e_site, inputs["target"][0],
+                                     meta["node_inv_mult"], (graph_axis,))
+    return loss_local
+
+
+def _param_factory(shape):
+    cfg = config(shape)
+    return jax.eval_shape(functools.partial(init_mace, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_dryrun_cell(shape_id, mesh, overrides=None):
+    return G.build_gnn_dryrun_cell(
+        shape_id, mesh,
+        loss_local_factory=_loss_local_factory,
+        inputs_factory=_inputs_factory,
+        param_factory=_param_factory,
+        overrides=overrides)

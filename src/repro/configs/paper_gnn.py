@@ -1,0 +1,19 @@
+"""The paper's own architecture (Table I): consistent encode-process-decode
+GNN, 'small' (N_H=8, M=4, 2 MLP hidden) and 'large' (N_H=32, M=4, 5 hidden),
+trained on Taylor-Green-vortex velocity autoencoding over SEM meshes."""
+from repro.core.gnn import GNNConfig
+
+ARCH_ID = "paper-gnn"
+FAMILY = "gnn"
+
+
+def config() -> GNNConfig:
+    return GNNConfig.large()
+
+
+def small_config() -> GNNConfig:
+    return GNNConfig.small()
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(hidden=4, n_mp_layers=2, mlp_hidden_layers=1)

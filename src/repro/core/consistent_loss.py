@@ -1,0 +1,56 @@
+"""Consistent loss function (Sec. II-C, Eq. 6) and consistent node reductions.
+
+The MSE over a partitioned graph equals the un-partitioned Eq. 5 value:
+squared errors are weighted by inverse node multiplicity 1/d_i (padding and
+halo rows carry weight 0), summed locally, then AllReduce'd (psum) together
+with the effective node count N_eff = psum(sum_i 1/d_i).
+
+``axis_names`` lists every mesh axis the reduction spans — for the production
+mesh that is ('graph',) for the spatial sum; data-parallel averaging across
+('data','pod') is applied by the caller on the already-consistent loss.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _psum(x, axis_names: Sequence[str]):
+    if not axis_names:
+        return x
+    return jax.lax.psum(x, tuple(axis_names))
+
+
+def consistent_mse(
+    y: jnp.ndarray,                 # [N_pad, Fy] or [B, N_pad, Fy] local prediction
+    y_hat: jnp.ndarray,             # same shape, target
+    node_inv_mult: jnp.ndarray,     # [N_pad] (0 on padding)
+    axis_names: Sequence[str] = (),
+) -> jnp.ndarray:
+    """Eq. 6: partition-invariant MSE. Returns a scalar (replicated)."""
+    fy = y.shape[-1]
+    err2 = jnp.sum((y - y_hat) ** 2, axis=-1)          # [..., N_pad]
+    w = node_inv_mult
+    s_r = jnp.sum(err2 * w, axis=-1)                   # Eq. 6b, [B] or scalar
+    n_r = jnp.sum(w)                                    # Eq. 6c local term
+    s = _psum(jnp.mean(s_r) if s_r.ndim else s_r, axis_names)   # AllReduce #1
+    n_eff = _psum(n_r, axis_names)                     # AllReduce #2
+    return s / (n_eff * fy)
+
+
+def consistent_node_sum(
+    values: jnp.ndarray,            # [N_pad, ...] local node values
+    node_inv_mult: jnp.ndarray,
+    axis_names: Sequence[str] = (),
+) -> jnp.ndarray:
+    """Partition-invariant sum over graph nodes of an arbitrary node field."""
+    w = node_inv_mult[(...,) + (None,) * (values.ndim - 1)]
+    return _psum(jnp.sum(values * w, axis=0), axis_names)
+
+
+def consistent_node_count(node_inv_mult: jnp.ndarray,
+                          axis_names: Sequence[str] = ()) -> jnp.ndarray:
+    """N_eff of Eq. 6c — equals the un-partitioned node count."""
+    return _psum(jnp.sum(node_inv_mult), axis_names)

@@ -1,0 +1,206 @@
+"""Differentiable halo exchanges (Sec. II-B Eq. 4c-d), TPU-native.
+
+Three modes, matching the paper's study:
+
+* ``NONE``     — skip the exchange: the *inconsistent* baseline.
+* ``A2A``      — ``jax.lax.all_to_all`` with equal-size buffers to every rank
+                 (the paper's naive differentiable baseline).
+* ``NEIGHBOR`` — the paper's N-A2A insight adapted to ICI: K rounds of
+                 ``jax.lax.ppermute`` (collective-permute = neighbor DMA),
+                 one round per color of the rank-adjacency edge coloring.
+                 K is bounded by the max number of neighboring ranks
+                 (7-15 in paper Table II), independent of R.
+
+All modes are differentiable: JAX's transpose rules for ppermute/all_to_all
+provide Eq. 3's gradient consistency with no custom VJP code (the torch
+implementation needed torch.distributed.nn for this).
+
+The "synchronization" (Eq. 4d) is fused into the exchange: received buffers
+are scatter-added directly onto the owning local rows, which is arithmetically
+identical to materializing halo rows then summing coincident groups. Combine
+op 'max' supports the consistent edge-softmax extension (Sec. 4 of DESIGN.md).
+
+``wire_dtype`` optionally compresses on-wire buffers (e.g. bf16) —
+a beyond-paper optimization measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NONE = "none"
+A2A = "a2a"
+NEIGHBOR = "neighbor"
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """Static (trace-time) halo configuration: mode, axis, ppermute rounds.
+
+    ``rounds2d`` enables TWO-LEVEL halo exchange (sub-graphs spread over two
+    mesh axes, e.g. 16x16 = 256 spatial partitions): each round is a sequence
+    of (axis, perm) hops — a uniform grid shift (dd, dm) is routed as one
+    ppermute along each axis (torus routing; diagonal neighbor pairs take
+    two hops). Used with mode NEIGHBOR; overrides ``perms`` when non-empty.
+    """
+    mode: str                                  # none | a2a | neighbor
+    axis: str = "graph"                        # mesh axis carrying sub-graphs
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...] = ()   # per-round ppermute pairs
+    wire_dtype: Optional[jnp.dtype] = None     # e.g. jnp.bfloat16 compression
+    rounds2d: Tuple = ()   # per round: ((axis, ((s,d),...)), ...) hop chain
+
+
+def _scatter_combine(a: jnp.ndarray, idx: jnp.ndarray, upd: jnp.ndarray, op: str) -> jnp.ndarray:
+    """Scatter ``upd`` rows into ``a`` at node rows ``idx`` along axis -2."""
+    if a.ndim == upd.ndim + 0 and a.ndim == 3:  # [B, N, F] with idx [M]
+        if op == "sum":
+            return a.at[:, idx].add(upd)
+        return a.at[:, idx].max(upd)
+    if op == "sum":
+        return a.at[idx].add(upd)
+    return a.at[idx].max(upd)
+
+
+def _maybe_compress(buf: jnp.ndarray, spec: HaloSpec) -> Tuple[jnp.ndarray, jnp.dtype]:
+    if spec.wire_dtype is not None and buf.dtype != spec.wire_dtype:
+        return buf.astype(spec.wire_dtype), buf.dtype
+    return buf, buf.dtype
+
+
+def halo_sync(
+    a: jnp.ndarray,
+    meta: dict,
+    spec: HaloSpec,
+    combine: str = "sum",
+) -> jnp.ndarray:
+    """Exchange + synchronize local aggregates across coincident node copies.
+
+    Args:
+      a: local aggregates, [N_pad, F] or [B, N_pad, F] (per shard).
+      meta: per-shard halo arrays from ``PartitionedGraphs.device_arrays``
+        (leading rank axis already sliced away by shard_map), i.e.
+        a2a_send_idx [R, Bf], ..., nbr_send_idx [K, Bn], ...
+      spec: HaloSpec (mode + static perms).
+      combine: 'sum' (Eq. 4d) or 'max' (consistent softmax extension).
+    Returns:
+      a* with every coincident copy holding the combined value.
+    """
+    if spec.mode == NONE:
+        return a
+
+    batched = a.ndim == 3
+    neutral = 0.0 if combine == "sum" else _NEG
+
+    def take(idx):
+        return a[:, idx] if batched else a[idx]
+
+    if spec.mode == A2A:
+        send_idx = meta["a2a_send_idx"]       # [R, Bf]
+        send_mask = meta["a2a_send_mask"]
+        recv_idx = meta["a2a_recv_idx"]
+        recv_mask = meta["a2a_recv_mask"]
+        buf = take(send_idx)                  # [(B,) R, Bf, F]
+        m = send_mask[..., None]
+        buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
+        buf, orig_dtype = _maybe_compress(buf, spec)
+        if batched:
+            # all_to_all splits the rank axis; move it leading
+            buf = jnp.moveaxis(buf, 1, 0)     # [R, B, Bf, F]
+            got = jax.lax.all_to_all(buf, spec.axis, split_axis=0, concat_axis=0)
+            got = jnp.moveaxis(got, 0, 1).astype(orig_dtype)   # [B, R, Bf, F]
+            got_flat = got.reshape(got.shape[0], -1, got.shape[-1])
+        else:
+            got = jax.lax.all_to_all(buf, spec.axis, split_axis=0, concat_axis=0)
+            got = got.astype(orig_dtype)
+            got_flat = got.reshape(-1, got.shape[-1])
+        rm = recv_mask.reshape(-1)[..., None]
+        upd = got_flat * rm if combine == "sum" else jnp.where(rm > 0, got_flat, neutral)
+        return _scatter_combine(a, recv_idx.reshape(-1), upd, combine)
+
+    if spec.mode == NEIGHBOR and spec.rounds2d:
+        out = a
+        for k, hops in enumerate(spec.rounds2d):
+            send_idx = meta["nbr_send_idx"][k]
+            send_mask = meta["nbr_send_mask"][k]
+            recv_idx = meta["nbr_recv_idx"][k]
+            recv_mask = meta["nbr_recv_mask"][k]
+            buf = take(send_idx)
+            m = send_mask[..., None]
+            buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
+            buf, orig_dtype = _maybe_compress(buf, spec)
+            for axis, perm in hops:                 # chained torus hops
+                buf = jax.lax.ppermute(buf, axis, perm=list(perm))
+            buf = buf.astype(orig_dtype)
+            rm = recv_mask[..., None]
+            upd = buf * rm if combine == "sum" else jnp.where(rm > 0, buf, neutral)
+            out = _scatter_combine(out, recv_idx, upd, combine)
+        return out
+
+    if spec.mode == NEIGHBOR:
+        out = a
+        for k, perm in enumerate(spec.perms):
+            if not perm:
+                continue
+            send_idx = meta["nbr_send_idx"][k]     # [Bn]
+            send_mask = meta["nbr_send_mask"][k]
+            recv_idx = meta["nbr_recv_idx"][k]
+            recv_mask = meta["nbr_recv_mask"][k]
+            buf = take(send_idx)
+            m = send_mask[..., None]
+            buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
+            buf, orig_dtype = _maybe_compress(buf, spec)
+            got = jax.lax.ppermute(buf, spec.axis, perm=list(perm)).astype(orig_dtype)
+            rm = recv_mask[..., None]
+            upd = got * rm if combine == "sum" else jnp.where(rm > 0, got, neutral)
+            out = _scatter_combine(out, recv_idx, upd, combine)
+        return out
+
+    raise ValueError(f"unknown halo mode {spec.mode!r}")
+
+
+def halo_spec_from_plan(plan, mode: str, axis: str = "graph",
+                        wire_dtype=None) -> HaloSpec:
+    """Build the static HaloSpec from a host-side ``HaloPlan``."""
+    perms = tuple(tuple(( int(a), int(b)) for a, b in rnd) for rnd in plan.perms)
+    return HaloSpec(mode=mode, axis=axis, perms=perms, wire_dtype=wire_dtype)
+
+
+def halo_sync_reference(a_stacked: jnp.ndarray, meta_stacked: dict, spec: HaloSpec,
+                        combine: str = "sum") -> jnp.ndarray:
+    """Single-device oracle for halo_sync over stacked [R, ...] arrays.
+
+    Emulates the A2A exchange with plain gathers (no collectives); used to run
+    consistency tests fast on one device and as the vmap-style reference the
+    shard_map path is checked against.
+    """
+    R = a_stacked.shape[0]
+    send_idx = meta_stacked["a2a_send_idx"]     # [R, R, Bf]
+    send_mask = meta_stacked["a2a_send_mask"]
+    recv_idx = meta_stacked["a2a_recv_idx"]
+    recv_mask = meta_stacked["a2a_recv_mask"]
+    neutral = 0.0 if combine == "sum" else _NEG
+    out = a_stacked
+    batched = a_stacked.ndim == 4               # [R, B, N, F]
+    for r in range(R):
+        for s in range(R):
+            # buffer sent by rank s to rank r
+            idx_s = send_idx[s, r]
+            m_s = send_mask[s, r][..., None]
+            buf = a_stacked[s][:, idx_s] if batched else a_stacked[s][idx_s]
+            buf = buf * m_s if combine == "sum" else jnp.where(m_s > 0, buf, neutral)
+            if spec.wire_dtype is not None:
+                buf = buf.astype(spec.wire_dtype).astype(a_stacked.dtype)
+            rm = recv_mask[r, s][..., None]
+            upd = buf * rm if combine == "sum" else jnp.where(rm > 0, buf, neutral)
+            tgt = recv_idx[r, s]
+            if batched:
+                new_r = out[r].at[:, tgt].add(upd) if combine == "sum" else out[r].at[:, tgt].max(upd)
+            else:
+                new_r = out[r].at[tgt].add(upd) if combine == "sum" else out[r].at[tgt].max(upd)
+            out = out.at[r].set(new_r)
+    return out

@@ -1,0 +1,96 @@
+"""Single-device stacked-rank reference evaluation of the consistent GNN.
+
+Runs the R-rank partitioned model on ONE device by looping ranks in python
+and emulating the halo exchange with plain gathers (``halo_sync_reference``).
+This is the oracle used by tests and the Fig. 6 benchmarks; the production
+shard_map path must agree with it exactly (same arithmetic, real collectives).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn as rnn
+from repro.core.gnn import GNNConfig, build_edge_inputs
+from repro.core.halo import HaloSpec, halo_sync_reference
+from repro.core.mesh_gen import SEMMesh, edge_features as static_edge_features
+from repro.core.partition import PartitionedGraphs, gather_node_features
+from repro.graph import segment
+
+
+def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray) -> Dict[str, jnp.ndarray]:
+    """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats."""
+    meta = {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}
+    coords_r = gather_node_features(pg, coords)
+    ef = []
+    for r in range(pg.R):
+        e = np.stack([pg.edge_src[r], pg.edge_dst[r]], axis=-1)
+        ef.append(static_edge_features(coords_r[r], e) * pg.edge_mask[r][:, None])
+    meta["static_edge_feats"] = jnp.asarray(np.stack(ef).astype(np.float32))
+    return meta
+
+
+def gnn_forward_stacked(
+    params: rnn.Params,
+    x: jnp.ndarray,                  # [R, N_pad, F_x]
+    meta: Dict[str, jnp.ndarray],    # stacked arrays incl. static_edge_feats
+    halo: HaloSpec,
+) -> jnp.ndarray:
+    """Paper GNN forward over all R ranks on one device (reference halo)."""
+    R, n_pad = x.shape[0], x.shape[1]
+    hs, es = [], []
+    for r in range(R):
+        meta_r = {k: v[r] for k, v in meta.items()}
+        e_in = build_edge_inputs(x[r], meta_r["static_edge_feats"], meta_r)
+        hs.append(rnn.mlp(params["node_enc"], x[r]) * meta_r["node_mask"][..., None])
+        es.append(rnn.mlp(params["edge_enc"], e_in) * meta_r["edge_mask"][..., None])
+    h, e = jnp.stack(hs), jnp.stack(es)
+
+    for lp in params["mp"]:
+        new_e, aggs = [], []
+        for r in range(R):
+            xi, xj = h[r][meta["edge_src"][r]], h[r][meta["edge_dst"][r]]
+            er = e[r] + rnn.mlp(lp["edge"], jnp.concatenate([xi, xj, e[r]], axis=-1))
+            er = er * meta["edge_mask"][r][..., None]
+            w = er * meta["edge_inv_mult"][r][..., None]
+            aggs.append(segment.segment_sum(w, meta["edge_dst"][r], n_pad))
+            new_e.append(er)
+        agg = jnp.stack(aggs)
+        if halo.mode != "none":
+            agg = halo_sync_reference(agg, meta, halo, combine="sum")
+        h = jnp.stack([
+            (h[r] + rnn.mlp(lp["node"], jnp.concatenate([agg[r], h[r]], axis=-1)))
+            * meta["node_mask"][r][..., None]
+            for r in range(R)
+        ])
+        e = jnp.stack(new_e)
+
+    return jnp.stack([rnn.mlp(params["node_dec"], h[r]) * meta["node_mask"][r][..., None]
+                      for r in range(R)])
+
+
+def consistent_loss_stacked(y: jnp.ndarray, y_hat: jnp.ndarray,
+                            meta: Dict[str, jnp.ndarray], fy: int) -> jnp.ndarray:
+    """Eq. 6 with the psum replaced by an explicit sum over the stacked ranks."""
+    err2 = jnp.sum((y - y_hat) ** 2, axis=-1)          # [R, N_pad]
+    s = jnp.sum(err2 * meta["node_inv_mult"])
+    n_eff = jnp.sum(meta["node_inv_mult"])
+    return s / (n_eff * fy)
+
+
+def loss_and_grad_stacked(
+    params: rnn.Params,
+    x: jnp.ndarray,
+    y_hat: jnp.ndarray,
+    meta: Dict[str, jnp.ndarray],
+    halo: HaloSpec,
+    fy: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, rnn.Params]:
+    def f(p):
+        y = gnn_forward_stacked(p, x, meta, halo)
+        return consistent_loss_stacked(y, y_hat, meta, fy), y
+    (loss, y), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, y, grads

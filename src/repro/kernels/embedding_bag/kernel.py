@@ -1,0 +1,58 @@
+"""Pallas TPU embedding-bag: scalar-prefetched dynamic row gather + pooling.
+
+DLRM's hot path is a ragged gather over a >=GB table followed by a bag-sum —
+on TPU the idiomatic implementation is ``PrefetchScalarGridSpec``: the bag
+indices are prefetched as scalars, and the *table BlockSpec index_map reads
+them* to DMA exactly the needed row-block per grid step (HBM->VMEM), so
+arbitrary rows stream through VMEM without materializing a gathered copy.
+
+Grid: (n_bags, bag_size); row blocks of (1, D); bag accumulation in VMEM
+scratch, flushed on the last bag element.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, row_ref, out_ref, acc_scr):
+    h = pl.program_id(1)
+    nh = pl.num_programs(1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += row_ref[0].astype(jnp.float32)
+
+    @pl.when(h == nh - 1)
+    def _flush():
+        out_ref[0] = acc_scr[...].astype(out_ref.dtype)
+
+
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, *,
+                  interpret: bool = False) -> jnp.ndarray:
+    """table [V, D]; idx [B, H] int32 -> [B, D] sum-pooled bags."""
+    B, H = idx.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H),
+        in_specs=[
+            # the table row block to fetch is chosen by the prefetched indices
+            pl.BlockSpec((1, D), lambda b, h, idx_pref: (idx_pref[b, h], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, h, idx_pref: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((D,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(idx, table)

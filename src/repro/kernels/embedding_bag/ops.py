@@ -1,0 +1,13 @@
+"""Jit'd wrapper for the embedding-bag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag as _kernel_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table, idx, *, interpret: bool = False):
+    return _kernel_call(table, idx, interpret=interpret)

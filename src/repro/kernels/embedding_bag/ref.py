@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx):
+    """table [V, D]; idx [B, H] -> sum-pooled bags [B, D]."""
+    return jnp.take(table, idx, axis=0).sum(axis=1)

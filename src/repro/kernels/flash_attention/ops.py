@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the flash attention kernel (GQA layout glue)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    window: int = 0, softcap: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    GQA is handled by repeating KV head-wise into the fused (B*H) grid axis.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * Hq, -1, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * Hq, -1, D)
+    out = flash_attention_fwd(qf, kf, vf, scale=scale, causal=causal,
+                              window=window, softcap=softcap,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused edge-MLP + destination-aligned segment-sum.
+
+The paper's NMP hot loop is (edge MLP -> 1/d_ij-weighted aggregate). A naive
+XLA lowering writes the MLP output to HBM, re-reads it for the scatter-add,
+and the scatter itself is serialized. TPU-native design here:
+
+  * host-side layout pass (``ops.dst_aligned_layout``) sorts edges by
+    destination and pads so that edge block j of node block i only touches
+    dst rows [i*BN, (i+1)*BN): the output BlockSpec becomes a pure function
+    of the grid — no data-dependent scatter;
+  * grid (n_node_blocks, n_edge_blocks): the MLP (two MXU matmuls) runs on
+    the [BE, F] edge tile in VMEM; the tile's contribution is accumulated
+    into a [BN, H] VMEM scratch via a one-hot matmul (dst-local one-hot x
+    e_new — an MXU op, not a scatter), flushed to HBM on the last edge block;
+  * e_new is streamed out tile-by-tile (needed by the next NMP layer).
+
+Mesh graphs have bounded degree, so dst-aligned padding is tight (measured
+in tests); power-law graphs pay more — reported by the layout pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(feats_ref, dstl_ref, wgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+            enew_ref, agg_ref, acc_scr, *, block_n: int, block_e: int):
+    ej = pl.program_id(1)
+    ne = pl.num_programs(1)
+
+    @pl.when(ej == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    feats = feats_ref[0, 0].astype(jnp.float32)          # [BE, Fin]
+    h = jax.lax.dot(feats, w1_ref[...].astype(jnp.float32)) + b1_ref[...]
+    h = jax.nn.elu(h)
+    e_new = jax.lax.dot(h, w2_ref[...].astype(jnp.float32)) + b2_ref[...]
+    enew_ref[0, 0] = e_new.astype(enew_ref.dtype)
+
+    # dst-local one-hot [BE, BN]: aggregation as an MXU matmul, not a scatter
+    dstl = dstl_ref[0, 0]                                # [BE] in [0, BN)
+    wgt = wgt_ref[0, 0]                                  # [BE] (0 on padding)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
+              == dstl[:, None]).astype(jnp.float32) * wgt[:, None]
+    acc_scr[...] += jax.lax.dot_general(
+        onehot, e_new, (((0,), (0,)), ((), ())))         # [BN, H]
+
+    @pl.when(ej == ne - 1)
+    def _flush():
+        agg_ref[0] = acc_scr[...].astype(agg_ref.dtype)
+
+
+def edge_mlp_agg(feats, dst_local, weights, w1, b1, w2, b2, *,
+                 n_node_blocks: int, block_n: int, block_e: int,
+                 interpret: bool = False):
+    """feats: [NB, NE, BE, Fin] dst-aligned tiles (see ops.dst_aligned_layout);
+    dst_local: [NB, NE, BE] in [0, BN); weights: same shape (0 = padding).
+
+    Returns (e_new [NB, NE, BE, H], agg [NB, BN, H]).
+    """
+    NB, NE, BE, Fin = feats.shape
+    H = w2.shape[1]
+    kern = functools.partial(_kernel, block_n=block_n, block_e=block_e)
+    return pl.pallas_call(
+        kern,
+        grid=(NB, NE),
+        in_specs=[
+            pl.BlockSpec((1, 1, BE, Fin), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((Fin, w1.shape[1]), lambda i, j: (0, 0)),
+            pl.BlockSpec((w1.shape[1],), lambda i, j: (0,)),
+            pl.BlockSpec((w1.shape[1], H), lambda i, j: (0, 0)),
+            pl.BlockSpec((H,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_n, H), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, NE, BE, H), feats.dtype),
+            jax.ShapeDtypeStruct((NB, block_n, H), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n, H), jnp.float32)],
+        interpret=interpret,
+    )(feats, dst_local, weights, w1, b1, w2, b2)

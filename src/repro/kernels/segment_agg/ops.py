@@ -1,0 +1,57 @@
+"""Host layout pass + jit'd wrapper for the fused segment-aggregation kernel."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg.kernel import edge_mlp_agg
+
+
+def dst_aligned_layout(dst: np.ndarray, n_nodes: int, block_n: int,
+                       block_e: int) -> dict:
+    """Sort edges by destination and pad per node-block to edge-block
+    multiples. Returns index maps + the padding overhead (waste fraction)."""
+    order = np.argsort(dst, kind="stable")
+    dst_sorted = dst[order]
+    nb = math.ceil(n_nodes / block_n)
+    per_block_edges = []
+    for i in range(nb):
+        sel = np.nonzero((dst_sorted >= i * block_n) & (dst_sorted < (i + 1) * block_n))[0]
+        per_block_edges.append(sel)
+    ne = max(1, max((math.ceil(len(s) / block_e) for s in per_block_edges), default=1))
+    perm = np.full((nb, ne * block_e), -1, dtype=np.int64)   # -> original edge id
+    for i, sel in enumerate(per_block_edges):
+        perm[i, :len(sel)] = order[sel]
+    waste = 1.0 - (dst.shape[0] / perm.size) if perm.size else 0.0
+    return dict(perm=perm.reshape(nb, ne, block_e), n_node_blocks=nb,
+                n_edge_blocks=ne, waste=waste)
+
+
+def fused_edge_mlp_agg(feats, dst, weights, w1, b1, w2, b2, layout, *,
+                       n_nodes: int, block_n: int, block_e: int,
+                       interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """feats [E, Fin] in original edge order; applies the dst-aligned layout,
+    runs the kernel, and scatters e_new back to the original order.
+
+    Returns (e_new [E, H], agg [n_nodes_padded_to_block, H])."""
+    perm = jnp.asarray(layout["perm"])                      # [NB, NE, BE]
+    safe = jnp.clip(perm, 0, feats.shape[0] - 1)
+    valid = (perm >= 0).astype(feats.dtype)
+    tile_feats = feats[safe] * valid[..., None]
+    tile_dstl = (dst[safe] - (jnp.arange(layout["n_node_blocks"])[:, None, None]
+                              * block_n)).astype(jnp.int32)
+    tile_w = weights[safe] * valid
+
+    e_tiles, agg = edge_mlp_agg(tile_feats, tile_dstl, tile_w, w1, b1, w2, b2,
+                                n_node_blocks=layout["n_node_blocks"],
+                                block_n=block_n, block_e=block_e,
+                                interpret=interpret)
+    # un-permute e_new to original edge order
+    e_new = jnp.zeros((feats.shape[0], e_tiles.shape[-1]), e_tiles.dtype)
+    e_new = e_new.at[safe.reshape(-1)].add(
+        e_tiles.reshape(-1, e_tiles.shape[-1]) * valid.reshape(-1, 1))
+    return e_new, agg.reshape(-1, agg.shape[-1])

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused edge-MLP + segment aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_mlp_agg_ref(feats, w1, b1, w2, b2, dst, weights, n_nodes: int):
+    """feats [E, F_in] (pre-gathered [x_i ++ x_j ++ e_ij]); 2-layer ELU MLP;
+    weighted (1/d_ij) segment-sum to dst. Returns (e_new [E, H], agg [N, H])."""
+    h = jax.nn.elu(feats @ w1 + b1)
+    e_new = h @ w2 + b2
+    agg = jax.ops.segment_sum(e_new * weights[:, None], dst, num_segments=n_nodes)
+    return e_new, agg

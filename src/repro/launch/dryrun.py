@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init, and the production meshes need 512 host devices.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, assigned_archs, family_of, get_arch
+from repro.launch.mesh import batch_axes_of, make_production_mesh
+from repro.sharding import named_shardings
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "runs" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# per-family cell builders: return (fn, args_sds, in_specs, out_specs, meta)
+# ---------------------------------------------------------------------------
+
+def build_lm_cell(arch_mod, shape_id: str, mesh, overrides=None):
+    from repro.configs.lm_common import LM_SHAPES, lm_rules
+    from repro.models.transformer.model import ParallelCtx
+    from repro.models.transformer import steps as S
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = arch_mod.config()
+    overrides = dict(overrides or {})
+    step_ov = {k: overrides.pop(k) for k in
+               ("n_micro", "cast_per_micro", "accum_bf16") if k in overrides}
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = LM_SHAPES[shape_id]
+    rules = lm_rules(mesh, cfg)
+    batch_axes = batch_axes_of(mesh)
+    kind = shape["kind"]
+    B, seq = shape["global_batch"], shape["seq_len"]
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+    if B == 1:
+        # long-context decode: batch unshardable; spread the KV sequence over
+        # (data, model) = 256 shards instead so every chip participates
+        batch_axes = ()
+        rules = dict(rules, act_batch=None)
+        cfg = cfg.with_(seq_shard_decode=("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, batch_axes=batch_axes, rules=rules)
+
+    meta = dict(n_params=cfg.n_params(), n_active=cfg.n_active_params(),
+                n_layers=cfg.n_layers, kind=kind, seq=seq, batch=B)
+
+    if kind == "train":
+        opt = AdamWConfig(moment_dtype=jnp.bfloat16)
+        state_sds, state_specs = S.lm_train_state_specs(cfg, ctx, opt)
+        inputs = S.lm_input_specs(cfg, ctx, shape)
+        # micro-batch must stay divisible by the batch shard count
+        n_micro = int(step_ov.get("n_micro",
+                                  max(1, min(cfg.train_microbatches, B // n_batch_shards))))
+        step = S.make_train_step(
+            cfg, ctx, opt, n_micro=n_micro,
+            cast_per_micro=bool(step_ov.get("cast_per_micro", False)),
+            accum_dtype=jnp.bfloat16 if step_ov.get("accum_bf16") else jnp.float32)
+        args = (state_sds, inputs["tokens"][0], inputs["targets"][0])
+        in_specs = (state_specs, inputs["tokens"][1], inputs["targets"][1])
+        out_specs = (state_specs, None)
+        meta["model_flops"] = 6 * meta["n_active"] * B * seq
+        meta["n_micro"] = n_micro
+        meta["donate"] = (0,)
+        return step, args, in_specs, out_specs, meta
+
+    params_sds, pspecs = S.lm_param_specs(cfg, ctx)
+    if kind == "prefill":
+        inputs = S.lm_input_specs(cfg, ctx, shape)
+        step = S.make_prefill_step(cfg, ctx, capacity=seq)
+        from repro.models.transformer.model import cache_specs
+        cspecs = cache_specs(cfg, ctx, B)
+        args = (params_sds, inputs["tokens"][0])
+        in_specs = (pspecs, inputs["tokens"][1])
+        out_specs = (P(ctx.batch_axes, None), cspecs)
+        meta["model_flops"] = 2 * meta["n_active"] * B * seq
+        return step, args, in_specs, out_specs, meta
+
+    # decode
+    inputs = S.lm_input_specs(cfg, ctx, shape)
+    step = S.make_decode_step(cfg, ctx)
+    args = (params_sds, inputs["cache"][0], inputs["tokens"][0], inputs["cache_len"][0])
+    in_specs = (pspecs, inputs["cache"][1], inputs["tokens"][1], inputs["cache_len"][1])
+    out_specs = (None, inputs["cache"][1])
+    meta["model_flops"] = 2 * meta["n_active"] * B * 1
+    meta["donate"] = (1,)   # cache updated in place
+    return step, args, in_specs, out_specs, meta
+
+
+def build_gnn_cell(arch_mod, shape_id: str, mesh, overrides=None):
+    return arch_mod.build_dryrun_cell(shape_id, mesh, overrides=overrides)
+
+
+def build_recsys_cell(arch_mod, shape_id: str, mesh, overrides=None):
+    return arch_mod.build_dryrun_cell(shape_id, mesh, overrides=overrides)
+
+
+BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell, "recsys": build_recsys_cell}
+
+
+def shapes_for_family(family: str):
+    if family == "lm":
+        from repro.configs.lm_common import LM_SHAPES
+        return list(LM_SHAPES)
+    if family == "gnn":
+        from repro.configs.gnn_common import GNN_SHAPES
+        return list(GNN_SHAPES)
+    from repro.configs.recsys_common import RECSYS_SHAPES
+    return list(RECSYS_SHAPES)
+
+
+# ---------------------------------------------------------------------------
+# lower + compile + record
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, save_hlo: bool = True,
+             overrides=None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mod, family = get_arch(arch_id)
+    t0 = time.time()
+    step, args, in_specs, out_specs, meta = BUILDERS[family](mod, shape_id, mesh,
+                                                             overrides=overrides)
+    in_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, in_specs,
+        is_leaf=lambda s: isinstance(s, P) or s is None)
+    out_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, out_specs,
+        is_leaf=lambda s: isinstance(s, P) or s is None)
+    donate = tuple(meta.pop("donate", ()))
+    lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    colls = Counter(COLLECTIVE_RE.findall(txt))
+
+    rec = dict(
+        arch=arch_id, shape=shape_id,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=512 if multi_pod else 256,
+        lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+        status="ok",
+        per_device_bytes=dict(
+            arguments=ma.argument_size_in_bytes,
+            outputs=ma.output_size_in_bytes,
+            temp=ma.temp_size_in_bytes,
+            alias=ma.alias_size_in_bytes,
+            peak_estimate=ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        ),
+        cost=dict(flops=ca.get("flops", 0.0),
+                  bytes_accessed=ca.get("bytes accessed", 0.0),
+                  transcendentals=ca.get("transcendentals", 0.0)),
+        collective_op_counts=dict(colls),
+        meta=meta,
+        tag=tag,
+    )
+    if save_hlo:
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        stem = f"{arch_id}_{shape_id}_{rec['mesh']}" + (f"_{tag}" if tag else "")
+        (ARTIFACT_DIR / f"{stem}.hlo.txt").write_text(txt)
+        rec["hlo_path"] = str(ARTIFACT_DIR / f"{stem}.hlo.txt")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default=None, help="arch id (default: all assigned)")
+    ap.add_argument("--shape", default=None, help="shape id (default: all for family)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR / "records.jsonl"))
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else assigned_archs()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    out = Path(args.out)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        family = family_of(arch)
+        shapes = [args.shape] if args.shape else shapes_for_family(family)
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp, save_hlo=not args.no_hlo,
+                                   tag=args.tag)
+                    n_ok += 1
+                    print(f"[OK] {label}: compile {rec['compile_s']}s, "
+                          f"peak/dev {rec['per_device_bytes']['peak_estimate']/2**30:.2f} GiB, "
+                          f"flops/dev {rec['cost']['flops']:.3e}", flush=True)
+                except Exception as e:
+                    rec = dict(arch=arch, shape=shape,
+                               mesh="2x16x16" if mp else "16x16",
+                               status="fail", error=f"{type(e).__name__}: {e}",
+                               tb=traceback.format_exc()[-2000:], tag=args.tag)
+                    n_fail += 1
+                    print(f"[FAIL] {label}: {type(e).__name__}: {str(e)[:300]}", flush=True)
+                with out.open("a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"dry-run done: {n_ok} ok, {n_fail} fail")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

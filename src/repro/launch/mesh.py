@@ -1,0 +1,26 @@
+"""Production mesh construction (single-pod 16x16 and 2-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (smoke tests must see 1 device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """General helper with Auto axis types (silences the 0.9 deprecation)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes_of(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

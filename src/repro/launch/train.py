@@ -1,0 +1,55 @@
+"""Production training launcher (CLI): consistent GNN on partitioned meshes.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --elements 4 4 2 --order 3 --ranks 2 2 1 --steps 200 \
+        --halo neighbor --model small --ckpt /tmp/ckpt
+
+Uses every substrate layer: SEM mesh gen -> partitioner -> shard_map step
+with real halo collectives -> AdamW -> prefetching loader -> async
+checkpoints -> straggler monitor. On a real pod, remove the XLA_FLAGS
+override (jax.distributed.initialize picks up the topology).
+"""
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+
+import numpy as np
+
+from repro.core import GNNConfig, box_mesh, partition_mesh
+from repro.launch.mesh import make_mesh
+from repro.train.loop import TrainConfig, train_consistent_gnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--elements", type=int, nargs=3, default=[4, 4, 2])
+    ap.add_argument("--order", type=int, default=3)
+    ap.add_argument("--ranks", type=int, nargs=3, default=[2, 2, 1])
+    ap.add_argument("--data-parallel", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--halo", default="neighbor", choices=["neighbor", "a2a", "none"])
+    ap.add_argument("--model", default="small", choices=["small", "large"])
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    sem = box_mesh(tuple(args.elements), p=args.order)
+    pg = partition_mesh(sem, tuple(args.ranks))
+    R = int(np.prod(args.ranks))
+    mesh_dev = make_mesh((args.data_parallel, R), ("data", "graph"))
+    cfg = GNNConfig.small() if args.model == "small" else GNNConfig.large()
+    print(f"mesh: {sem.n_elem} elems p={args.order} ({sem.n_nodes} nodes); "
+          f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}")
+
+    tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
+                       halo_mode=args.halo, ckpt_dir=args.ckpt)
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg)
+    print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
+          f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")
+
+
+if __name__ == "__main__":
+    main()

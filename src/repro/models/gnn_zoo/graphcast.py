@@ -1,0 +1,170 @@
+"""GraphCast [arXiv:2212.12794]: encoder-processor-decoder interaction-net GNN.
+
+Two operating modes:
+
+* generic-graph mode (the assigned x-shape cells): node-feature encoder MLP ->
+  16 interaction-network processor layers on the given graph (each is exactly
+  the paper's consistent NMP layer: edge MLP, 1/d_ij-scaled aggregation, halo
+  sync, node MLP, residual) -> decoder MLP.
+
+* weather mode (``examples/graphcast_weather.py``): proper grid2mesh /
+  multimesh / mesh2grid edge sets over an icosahedral refinement, built by
+  ``icosahedral_mesh`` below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.consistent_mp import init_nmp_layer, nmp_layer
+from repro.core.halo import HaloSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    in_dim: int = 227           # n_vars (weather); overridden by shape d_feat
+    hidden: int = 512
+    n_layers: int = 16
+    out_dim: int = 227
+    mlp_hidden_layers: int = 1
+    edge_in: int = 4            # generic geometric edge feats
+    name: str = "graphcast"
+    # --- perf knobs (EXPERIMENTS §Perf) ---
+    remat: bool = False             # recompute processor layers in backward
+    act_dtype: object = jnp.float32  # bf16 halves activation carries
+    edge_parallel_axes: tuple = ()   # 2nd-level edge sharding (psum combine)
+    remat_segment: int = 1           # sqrt(L) checkpointing: layers per segment
+
+
+def init_graphcast(key, cfg: GraphCastConfig):
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    # stacked processor layers (scanned)
+    stacked = jax.vmap(
+        lambda k: init_nmp_layer(k, cfg.hidden, cfg.mlp_hidden_layers))(layer_keys)
+    return {
+        "node_enc": nn.init_mlp(ks[1], cfg.in_dim, [cfg.hidden], cfg.hidden),
+        "edge_enc": nn.init_mlp(ks[2], cfg.edge_in, [cfg.hidden], cfg.hidden),
+        "proc": stacked,
+        "node_dec": nn.init_mlp(ks[3], cfg.hidden, [cfg.hidden], cfg.out_dim,
+                                final_layernorm=False),
+    }
+
+
+def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
+                      cfg: GraphCastConfig):
+    """x: [N_pad, in_dim]; edge_feats: [E_pad, edge_in] -> [N_pad, out_dim]."""
+    h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
+    e = nn.mlp(params["edge_enc"], edge_feats) * meta["edge_mask"][..., None]
+    h = h.astype(cfg.act_dtype)
+    e = e.astype(cfg.act_dtype)
+
+    def body(carry, p_l):
+        hc, ec = carry
+        hn, en = nmp_layer(p_l, hc, ec, meta, halo,
+                           edge_parallel_axes=cfg.edge_parallel_axes)
+        return (hn.astype(cfg.act_dtype), en.astype(cfg.act_dtype)), None
+
+    seg = cfg.remat_segment
+    if cfg.remat and seg > 1:
+        # sqrt(L) checkpointing: only every seg-th layer boundary is saved;
+        # inner layers recompute during the (checkpointed) segment backward
+        stacked = params["proc"]
+        n_seg = jax.tree.leaves(stacked)[0].shape[0] // seg
+        seg_params = jax.tree.map(
+            lambda x: x.reshape((n_seg, seg) + x.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def seg_body(carry, p_seg):
+            out, _ = jax.lax.scan(body, carry, p_seg)
+            return out, None
+
+        (h, e), _ = jax.lax.scan(seg_body, (h, e), seg_params)
+    else:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, e), _ = jax.lax.scan(body, (h, e), params["proc"])
+    return nn.mlp(params["node_dec"], h.astype(jnp.float32)) \
+        * meta["node_mask"][..., None]
+
+
+# ---------------------------------------------------------------------------
+# icosahedral multimesh (weather mode)
+# ---------------------------------------------------------------------------
+
+def icosahedral_mesh(refinements: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Refined icosahedron: (vertices [V,3] unit sphere, multimesh edges [E,2]).
+
+    The multimesh contains the union of edge sets at every refinement level
+    (GraphCast's long+short range message passing)."""
+    phi = (1 + 5 ** 0.5) / 2
+    verts = np.array([
+        [-1, phi, 0], [1, phi, 0], [-1, -phi, 0], [1, -phi, 0],
+        [0, -1, phi], [0, 1, phi], [0, -1, -phi], [0, 1, -phi],
+        [phi, 0, -1], [phi, 0, 1], [-phi, 0, -1], [-phi, 0, 1],
+    ], dtype=np.float64)
+    verts /= np.linalg.norm(verts, axis=1, keepdims=True)
+    faces = np.array([
+        [0, 11, 5], [0, 5, 1], [0, 1, 7], [0, 7, 10], [0, 10, 11],
+        [1, 5, 9], [5, 11, 4], [11, 10, 2], [10, 7, 6], [7, 1, 8],
+        [3, 9, 4], [3, 4, 2], [3, 2, 6], [3, 6, 8], [3, 8, 9],
+        [4, 9, 5], [2, 4, 11], [6, 2, 10], [8, 6, 7], [9, 8, 1],
+    ])
+    all_edges = set()
+
+    def add_edges(fs):
+        for f in fs:
+            for a, b in ((f[0], f[1]), (f[1], f[2]), (f[2], f[0])):
+                all_edges.add((min(a, b), max(a, b)))
+
+    add_edges(faces)
+    vlist = [v for v in verts]
+    for _ in range(refinements):
+        cache = {}
+        new_faces = []
+
+        def midpoint(a, b):
+            key = (min(a, b), max(a, b))
+            if key not in cache:
+                m = vlist[a] + vlist[b]
+                m /= np.linalg.norm(m)
+                vlist.append(m)
+                cache[key] = len(vlist) - 1
+            return cache[key]
+
+        for f in faces:
+            ab, bc, ca = midpoint(f[0], f[1]), midpoint(f[1], f[2]), midpoint(f[2], f[0])
+            new_faces += [[f[0], ab, ca], [ab, f[1], bc], [ca, bc, f[2]],
+                          [ab, bc, ca]]
+        faces = np.array(new_faces)
+        add_edges(faces)
+    verts = np.stack(vlist)
+    edges = np.array(sorted(all_edges), dtype=np.int64)
+    return verts, edges
+
+
+def latlon_grid(n_lat: int, n_lon: int) -> np.ndarray:
+    """[n_lat*n_lon, 3] unit-sphere points of a regular lat-lon grid."""
+    lats = np.linspace(-np.pi / 2, np.pi / 2, n_lat)
+    lons = np.linspace(0, 2 * np.pi, n_lon, endpoint=False)
+    lat, lon = np.meshgrid(lats, lons, indexing="ij")
+    return np.stack([np.cos(lat) * np.cos(lon), np.cos(lat) * np.sin(lon),
+                     np.sin(lat)], axis=-1).reshape(-1, 3)
+
+
+def grid2mesh_edges(grid_xyz: np.ndarray, mesh_xyz: np.ndarray, k: int = 4) -> np.ndarray:
+    """Connect each grid point to its k nearest mesh vertices ([E,2]: grid->mesh)."""
+    # chunked brute-force kNN (host-side, small meshes in tests/examples)
+    out = []
+    for i0 in range(0, grid_xyz.shape[0], 4096):
+        chunk = grid_xyz[i0:i0 + 4096]
+        d = ((chunk[:, None] - mesh_xyz[None]) ** 2).sum(-1)
+        nn_idx = np.argsort(d, axis=1)[:, :k]
+        gi = np.repeat(np.arange(i0, i0 + chunk.shape[0]), k)
+        out.append(np.stack([gi, nn_idx.reshape(-1)], axis=-1))
+    return np.concatenate(out)

@@ -1,0 +1,351 @@
+"""Minimal O(3)-irrep machinery for NequIP/MACE (l <= 3, with parity).
+
+Design choice (see DESIGN.md §hardware-adaptation): instead of porting e3nn's
+convention-laden analytic Clebsch-Gordan pipeline, the coupling tensors are
+derived *numerically* on the host, once, from our own real spherical-harmonic
+definitions:
+
+  * Wigner matrices D_l(R) in the real-SH basis are obtained by least-squares
+    from SH evaluations at rotated sample points (exact to fp64 round-off);
+  * the CG tensor C for (l1 x l2 -> l3) is the (1-dimensional) null space of
+    the equivariance constraint  C - D3^T C (D1 (x) D2)  stacked over random
+    rotations, found by SVD.
+
+This is self-consistent by construction — equivariance of every tensor
+product holds to ~1e-12 regardless of basis conventions — and all tensors are
+tiny ([2l+1]^3 <= 343) host-side constants baked into the jit'd graph.
+
+Parity bookkeeping: an irrep is (l, p) with p = +-1; SH of a displacement
+carries p = (-1)^l; tensor-product parity multiplies; E(3) selection keeps
+only parity-consistent paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import L as PLeaf
+
+
+# ---------------------------------------------------------------------------
+# real spherical harmonics (unnormalized but fixed convention)
+# ---------------------------------------------------------------------------
+
+def sh_l(vec: np.ndarray | jnp.ndarray, l: int):
+    """Real solid harmonics of degree l for unit-ish vectors [..., 3].
+
+    Components ordered by our own fixed convention. Works under numpy or jnp.
+    """
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    xp = jnp if isinstance(vec, jnp.ndarray) else np
+    if l == 0:
+        return xp.ones(vec.shape[:-1] + (1,), vec.dtype)
+    if l == 1:
+        return xp.stack([x, y, z], axis=-1)
+    if l == 2:
+        return xp.stack([
+            x * y, y * z, z * x,
+            x * x - y * y,
+            2 * z * z - x * x - y * y,
+        ], axis=-1)
+    if l == 3:
+        return xp.stack([
+            x * y * z,
+            x * (x * x - 3 * y * y),
+            y * (3 * x * x - y * y),
+            z * (x * x - y * y),
+            x * (4 * z * z - x * x - y * y),
+            y * (4 * z * z - x * x - y * y),
+            z * (2 * z * z - 3 * x * x - 3 * y * y),
+        ], axis=-1)
+    raise NotImplementedError(l)
+
+
+def _rand_rotations(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(n, 4))
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    w, x, y, z = qs.T
+    return np.stack([
+        np.stack([1 - 2 * (y * y + z * z), 2 * (x * y - z * w), 2 * (x * z + y * w)], -1),
+        np.stack([2 * (x * y + z * w), 1 - 2 * (x * x + z * z), 2 * (y * z - x * w)], -1),
+        np.stack([2 * (x * z - y * w), 2 * (y * z + x * w), 1 - 2 * (x * x + y * y)], -1),
+    ], axis=-2)
+
+
+@functools.lru_cache(maxsize=None)
+def wigner_d(l: int, key: int = 0) -> np.ndarray:
+    """Not used directly — see ``wigner_d_from_R``; cached sample points."""
+    raise NotImplementedError
+
+
+def wigner_d_from_R(l: int, R: np.ndarray) -> np.ndarray:
+    """D_l(R) in our real-SH basis: Y_l(R v) = D_l(R) Y_l(v)."""
+    if l == 0:
+        return np.ones((1, 1))
+    rng = np.random.default_rng(l * 7919 + 13)
+    pts = rng.normal(size=(max(64, 4 * (2 * l + 1) ** 2), 3))
+    Y = sh_l(pts, l)                      # [P, 2l+1]
+    Yr = sh_l(pts @ R.T, l)               # [P, 2l+1]
+    D, *_ = np.linalg.lstsq(Y, Yr, rcond=None)
+    return D.T                             # Yr^T = D Y^T
+
+
+@functools.lru_cache(maxsize=None)
+def clebsch_gordan(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real coupling tensor C [2l1+1, 2l2+1, 2l3+1] (None if path forbidden).
+
+    C is the null space of the *bilinear-map equivariance* constraint
+
+        sum_{ab} D1_{aA} D2_{bB} C_{abc}  =  sum_C D3_{cC} C_{ABC}    for all R,
+
+    which is the correct condition for ``out_c = C_{abc} x_a y_b`` to be
+    covariant even though our (unnormalized real-SH) Wigner matrices are not
+    orthogonal. Solved once on the host by SVD over stacked rotations.
+    """
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return None
+    d1, d2, d3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    n = d1 * d2 * d3
+    eye1, eye2, eye3 = np.eye(d1), np.eye(d2), np.eye(d3)
+    rows = []
+    for R in _rand_rotations(6, seed=l1 * 100 + l2 * 10 + l3):
+        D1 = wigner_d_from_R(l1, R)
+        D2 = wigner_d_from_R(l2, R)
+        D3 = wigner_d_from_R(l3, R)
+        # T1[(A,B,c),(a,b,c')] = D1_{aA} D2_{bB} delta_{c c'}
+        T1 = np.einsum("aA,bB,cx->ABxabc", D1, D2, eye3).reshape(n, n)
+        # T2[(A,B,c),(a',b',C)] = delta_{Aa'} delta_{Bb'} D3_{cC}
+        T2 = np.einsum("Aa,Bb,cC->ABcabC", eye1, eye2, D3).reshape(n, n)
+        rows.append(T1 - T2)
+    A = np.concatenate(rows, axis=0)
+    _, s, vt = np.linalg.svd(A)
+    if s[-1] > 1e-8 * s[0]:
+        return None
+    c = vt[-1].reshape(d1, d2, d3)
+    c = c / np.linalg.norm(c)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# irreps containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Irreps:
+    """List of (multiplicity, l, parity) blocks; arrays are [..., dim]."""
+    blocks: Tuple[Tuple[int, int, int], ...]   # (mul, l, p)
+
+    @staticmethod
+    def make(spec: Sequence[Tuple[int, int, int]]) -> "Irreps":
+        return Irreps(tuple((int(m), int(l), int(p)) for m, l, p in spec))
+
+    @staticmethod
+    def scalars(mul: int) -> "Irreps":
+        return Irreps(((mul, 0, 1),))
+
+    @property
+    def dim(self) -> int:
+        return sum(m * (2 * l + 1) for m, l, _ in self.blocks)
+
+    def slices(self):
+        out, off = [], 0
+        for m, l, p in self.blocks:
+            d = m * (2 * l + 1)
+            out.append((slice(off, off + d), m, l, p))
+            off += d
+        return out
+
+    def mul_of(self, l: int, p: int) -> int:
+        return sum(m for m, ll, pp in self.blocks if ll == l and pp == p)
+
+
+def split_irreps(x: jnp.ndarray, irreps: Irreps):
+    """[..., dim] -> list of [..., mul, 2l+1] blocks."""
+    out = []
+    for sl, m, l, p in irreps.slices():
+        out.append(x[..., sl].reshape(x.shape[:-1] + (m, 2 * l + 1)))
+    return out
+
+
+def merge_irreps(blocks: List[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [b.reshape(b.shape[:-2] + (-1,)) for b in blocks], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# weighted tensor product (the NequIP/MACE workhorse)
+# ---------------------------------------------------------------------------
+
+def tp_paths(ir1: Irreps, ir2: Irreps, ir_out: Irreps):
+    """Allowed (i, j, k) block triples with their CG tensors."""
+    paths = []
+    for i, (m1, l1, p1) in enumerate(ir1.blocks):
+        for j, (m2, l2, p2) in enumerate(ir2.blocks):
+            for k, (m3, l3, p3) in enumerate(ir_out.blocks):
+                if p1 * p2 != p3:
+                    continue
+                C = clebsch_gordan(l1, l2, l3)
+                if C is None:
+                    continue
+                paths.append((i, j, k, jnp.asarray(C, jnp.float32)))
+    return paths
+
+
+def init_tp_weights(key, ir1: Irreps, ir2: Irreps, ir_out: Irreps,
+                    n_radial: int, dtype=jnp.float32):
+    """Per-path weights modulated by a radial embedding of size n_radial.
+
+    Weight shape per path: [n_radial, m1, m3] — 'uvu'-style (channel mixing
+    from input-1 multiplicity to output multiplicity, input-2 broadcast).
+    """
+    paths = tp_paths(ir1, ir2, ir_out)
+    ws = []
+    for n, (i, j, k, _) in enumerate(paths):
+        m1 = ir1.blocks[i][0]
+        m3 = ir_out.blocks[k][0]
+        kk = jax.random.fold_in(key, n)
+        ws.append(PLeaf(jax.random.normal(kk, (n_radial, m1, m3), dtype)
+                        * (m1 * n_radial) ** -0.5, ("radial", "mul_in", "mul_out")))
+    return {"path_w": ws}
+
+
+def weighted_tensor_product(params, x1: jnp.ndarray, x2: jnp.ndarray,
+                            radial: jnp.ndarray,
+                            ir1: Irreps, ir2: Irreps, ir_out: Irreps):
+    """x1: [E, ir1.dim]; x2: [E, ir2.dim] (mul-1 blocks, e.g. SH); radial: [E, n_radial].
+
+    Returns [E, ir_out.dim]. Per edge: out_k += C_{abc} (W(r) x1)_{u a} x2_b.
+    """
+    paths = tp_paths(ir1, ir2, ir_out)
+    b1 = split_irreps(x1, ir1)
+    b2 = split_irreps(x2, ir2)
+    out_blocks = [None] * len(ir_out.blocks)
+    for (i, j, k, C), w in zip(paths, params["path_w"]):
+        # x1 block: [E, m1, d1]; x2 block: [E, m2, d2] with m2 == 1 (SH)
+        x2b = b2[j][..., 0, :]                       # [E, d2]
+        t = jnp.einsum("eua,eb,abc->euc", b1[i], x2b, C)   # [E, m1, d3]
+        # memory-aware contraction order: the naive per-edge weight tensor
+        # einsum('er,rum->eum') materializes [E, m1, m3] (32 GiB at MACE's
+        # m=128 on 531k edges/device); contracting radial into t first keeps
+        # the intermediate at [E, m1, d3, n_radial] — d3*n_radial << m3
+        s = jnp.einsum("euc,er->eucr", t, radial.astype(t.dtype))
+        r = jnp.einsum("eucr,rum->emc", s, w.astype(t.dtype))  # [E, m3, d3]
+        out_blocks[k] = r if out_blocks[k] is None else out_blocks[k] + r
+    full = []
+    for k, (m3, l3, p3) in enumerate(ir_out.blocks):
+        if out_blocks[k] is None:
+            full.append(jnp.zeros(x1.shape[:-1] + (m3, 2 * l3 + 1), x1.dtype))
+        else:
+            full.append(out_blocks[k])
+    return merge_irreps(full)
+
+
+def init_linear_irreps(key, ir_in: Irreps, ir_out: Irreps, dtype=jnp.float32):
+    ws = []
+    for n, (i, k) in enumerate(_linear_pairs(ir_in, ir_out)):
+        m_in = ir_in.blocks[i][0]
+        m_out = ir_out.blocks[k][0]
+        kk = jax.random.fold_in(key, n)
+        ws.append(PLeaf(jax.random.normal(kk, (m_in, m_out), dtype) * m_in ** -0.5,
+                        ("mul_in", "mul_out")))
+    return {"lin_w": ws}
+
+
+def _linear_pairs(ir_in: Irreps, ir_out: Irreps):
+    pairs = []
+    for i, (m1, l1, p1) in enumerate(ir_in.blocks):
+        for k, (m3, l3, p3) in enumerate(ir_out.blocks):
+            if l1 == l3 and p1 == p3:
+                pairs.append((i, k))
+    return pairs
+
+
+def linear_irreps(params, x: jnp.ndarray, ir_in: Irreps, ir_out: Irreps):
+    """Equivariant linear layer: mixes multiplicities within each (l, p)."""
+    bin_ = split_irreps(x, ir_in)
+    out_blocks = [None] * len(ir_out.blocks)
+    for (i, k), w in zip(_linear_pairs(ir_in, ir_out), params["lin_w"]):
+        r = jnp.einsum("...ua,um->...ma", bin_[i], w)
+        out_blocks[k] = r if out_blocks[k] is None else out_blocks[k] + r
+    full = []
+    for k, (m3, l3, p3) in enumerate(ir_out.blocks):
+        if out_blocks[k] is None:
+            full.append(jnp.zeros(x.shape[:-1] + (m3, 2 * l3 + 1), x.dtype))
+        else:
+            full.append(out_blocks[k])
+    return merge_irreps(full)
+
+
+def gate_irreps(x: jnp.ndarray, ir: Irreps):
+    """Equivariant gated nonlinearity: silu on scalars, l>0 scaled by
+    sigmoid(first scalar channels). Requires a scalar block with mul >=
+    number of non-scalar blocks... we gate each l>0 block by a learned-free
+    sigmoid of the mean scalar activation (simple, equivariant)."""
+    blocks = split_irreps(x, ir)
+    out = []
+    scalar = None
+    for b, (sl, m, l, p) in zip(blocks, ir.slices()):
+        if l == 0 and scalar is None:
+            scalar = b
+    for b, (m, l, p) in zip(blocks, ir.blocks):
+        if l == 0:
+            out.append(jax.nn.silu(b))
+        else:
+            g = jax.nn.sigmoid(scalar.mean(axis=(-2, -1), keepdims=True)) if scalar is not None else 1.0
+            out.append(b * g)
+    return merge_irreps(out)
+
+
+def init_channel_tp_weights(key, ir1: Irreps, ir2: Irreps, ir_out: Irreps,
+                            dtype=jnp.float32):
+    """Channel-aligned (MACE 'uuu') tensor product weights: one scalar per
+    (path, channel). Requires matching multiplicities on all three blocks."""
+    paths = tp_paths(ir1, ir2, ir_out)
+    ws = []
+    for n, (i, j, k, _) in enumerate(paths):
+        m = ir1.blocks[i][0]
+        assert ir2.blocks[j][0] == m and ir_out.blocks[k][0] == m, \
+            "channel TP needs equal multiplicities"
+        kk = jax.random.fold_in(key, n)
+        ws.append(PLeaf(jax.random.normal(kk, (m,), dtype), ("mul",)))
+    return {"ctp_w": ws}
+
+
+def channel_tensor_product(params, x1: jnp.ndarray, x2: jnp.ndarray,
+                           ir1: Irreps, ir2: Irreps, ir_out: Irreps):
+    """Per-channel CG product (MACE higher-order B-basis): out_uc += w_u
+    C_{abc} x1_{ua} x2_{ub}. All blocks share multiplicity."""
+    paths = tp_paths(ir1, ir2, ir_out)
+    b1 = split_irreps(x1, ir1)
+    b2 = split_irreps(x2, ir2)
+    out_blocks = [None] * len(ir_out.blocks)
+    for (i, j, k, C), w in zip(paths, params["ctp_w"]):
+        t = jnp.einsum("...ua,...ub,abc,u->...uc", b1[i], b2[j], C, w)
+        out_blocks[k] = t if out_blocks[k] is None else out_blocks[k] + t
+    full = []
+    for k, (m3, l3, p3) in enumerate(ir_out.blocks):
+        if out_blocks[k] is None:
+            full.append(jnp.zeros(x1.shape[:-1] + (m3, 2 * l3 + 1), x1.dtype))
+        else:
+            full.append(out_blocks[k])
+    return merge_irreps(full)
+
+
+# ---------------------------------------------------------------------------
+# radial basis
+# ---------------------------------------------------------------------------
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """NequIP's Bessel radial basis with smooth polynomial cutoff envelope."""
+    r = jnp.clip(r, 1e-6, None)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    basis = jnp.sin(n[None, :] * jnp.pi * r[:, None] / cutoff) / r[:, None]
+    u = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1 - 10 * u ** 3 + 15 * u ** 4 - 6 * u ** 5   # C2-smooth cutoff
+    return basis * env[:, None]

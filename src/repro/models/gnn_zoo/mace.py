@@ -1,0 +1,131 @@
+"""MACE [arXiv:2206.07697]: higher-order equivariant message passing (ACE).
+
+Per layer:
+  * atomic basis  A_i = sum_j TP(lin(x_j) (x) SH(r_ij); radial)   (+ halo sync
+    and 1/d_ij scaling — the consistent-MP aggregation);
+  * product basis B via iterated channel-wise CG products:
+        B1 = A,  B2 = ctp(A, A),  B3 = ctp(B2, A)   (correlation order 3);
+  * message m_i = lin(B1) + lin(B2) + lin(B3); residual update + gate.
+Readout: site energies (sum of per-layer scalar readouts, as in MACE).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.halo import HaloSpec, halo_sync
+from repro.graph import segment
+from repro.models.gnn_zoo import irreps as ir
+from repro.sharding import split_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    n_layers: int = 2
+    hidden_mul: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 8
+    name: str = "mace"
+    # perf knobs (EXPERIMENTS §Perf recipe transfer from graphcast)
+    remat: bool = False
+    act_dtype: object = jnp.float32
+    edge_parallel_axes: tuple = ()
+
+    @property
+    def hidden_irreps(self) -> ir.Irreps:
+        return ir.Irreps.make(
+            [(self.hidden_mul, l, (-1) ** l) for l in range(self.l_max + 1)])
+
+    @property
+    def sh_irreps(self) -> ir.Irreps:
+        return ir.Irreps.make([(1, l, (-1) ** l) for l in range(self.l_max + 1)])
+
+
+def init_mace(key, cfg: MACEConfig):
+    hid = cfg.hidden_irreps
+    sh = cfg.sh_irreps
+    scalars = ir.Irreps.scalars(cfg.hidden_mul)
+    keys = jax.random.split(key, 2 + 8 * cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        in_ir = scalars if i == 0 else hid
+        kk = keys[2 + 8 * i: 2 + 8 * (i + 1)]
+        layer = {
+            "lin_pre": ir.init_linear_irreps(kk[0], in_ir, in_ir),
+            "tp": ir.init_tp_weights(kk[1], in_ir, sh, hid, cfg.n_rbf),
+            "lin_b1": ir.init_linear_irreps(kk[2], hid, hid),
+            "lin_self": ir.init_linear_irreps(kk[3], in_ir, hid),
+            "readout": ir.init_linear_irreps(kk[4], hid, ir.Irreps.scalars(1)),
+        }
+        if cfg.correlation >= 2:
+            layer["ctp2"] = ir.init_channel_tp_weights(kk[5], hid, hid, hid)
+            layer["lin_b2"] = ir.init_linear_irreps(kk[6], hid, hid)
+        if cfg.correlation >= 3:
+            layer["ctp3"] = ir.init_channel_tp_weights(kk[7], hid, hid, hid)
+            layer["lin_b3"] = ir.init_linear_irreps(
+                jax.random.fold_in(kk[7], 1), hid, hid)
+        layers.append(layer)
+    tree = {
+        "embed": ir.PLeaf(jax.random.normal(keys[0], (cfg.n_species, cfg.hidden_mul))
+                          * cfg.hidden_mul ** -0.5, ("species", "mul")),
+        "layers": layers,
+    }
+    params, _ = split_tree(tree, {})
+    return params
+
+
+def mace_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
+                 meta: Dict, halo: HaloSpec, cfg: MACEConfig) -> jnp.ndarray:
+    """species [N_pad], pos [N_pad, 3] -> site energies [N_pad]."""
+    src, dst = meta["edge_src"], meta["edge_dst"]
+    hid, sh_ir = cfg.hidden_irreps, cfg.sh_irreps
+    scalars = ir.Irreps.scalars(cfg.hidden_mul)
+
+    vec = pos[dst] - pos[src]
+    r = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * meta["edge_mask"][:, None]
+    sh = jnp.concatenate([ir.sh_l(vec, l) for l in range(cfg.l_max + 1)], axis=-1)
+
+    x = params["embed"][species] * meta["node_mask"][:, None]
+    x = x.astype(cfg.act_dtype)
+    n_pad = x.shape[0]
+    in_ir = scalars
+    e_site = jnp.zeros((n_pad,), jnp.float32)
+    for p_l in params["layers"]:
+        lin = in_ir
+
+        def layer(p_l, x):
+            xs = ir.linear_irreps(p_l["lin_pre"], x, lin, lin)
+            msg = ir.weighted_tensor_product(p_l["tp"], xs[src], sh.astype(x.dtype),
+                                             rbf.astype(x.dtype), lin, sh_ir, hid)
+            msg = msg * (meta["edge_inv_mult"] * meta["edge_mask"])[:, None].astype(x.dtype)
+            a = segment.segment_sum(msg, dst, n_pad)
+            if cfg.edge_parallel_axes:
+                a = jax.lax.psum(a, cfg.edge_parallel_axes)
+            a = halo_sync(a, meta, halo, combine="sum")        # consistent-MP
+            m = ir.linear_irreps(p_l["lin_b1"], a, hid, hid)
+            if "ctp2" in p_l:
+                b2 = ir.channel_tensor_product(p_l["ctp2"], a, a, hid, hid, hid)
+                m = m + ir.linear_irreps(p_l["lin_b2"], b2, hid, hid)
+                if "ctp3" in p_l:
+                    b3 = ir.channel_tensor_product(p_l["ctp3"], b2, a, hid, hid, hid)
+                    m = m + ir.linear_irreps(p_l["lin_b3"], b3, hid, hid)
+            xn = ir.linear_irreps(p_l["lin_self"], x, lin, hid) + m
+            xn = ir.gate_irreps(xn, hid) * meta["node_mask"][:, None]
+            e_l = ir.linear_irreps(p_l["readout"], xn, hid,
+                                   ir.Irreps.scalars(1))[..., 0]
+            return xn.astype(cfg.act_dtype), e_l.astype(jnp.float32)
+
+        if cfg.remat:
+            x, e_l = jax.checkpoint(layer)(p_l, x)
+        else:
+            x, e_l = layer(p_l, x)
+        e_site = e_site + e_l
+        in_ir = hid
+    return e_site * meta["node_mask"]

@@ -1,0 +1,299 @@
+"""Attention: blocked (flash-style) prefill/train + distributed decode.
+
+Memory-safe by construction: scores are only ever materialized per
+(q_block x kv_block) tile inside a nested ``lax.scan`` with online softmax —
+required for the 32k-prefill cells where full scores would be ~TBs. The
+Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-optimized twin
+of this function (same math, VMEM tiling + causal block pruning).
+
+Parallel layouts (chosen per arch config):
+  * ``heads``  — Q-heads sharded over 'model' via activation constraints
+                 (requires n_q %% mesh model == 0: DeepSeek/DBRX/Granite).
+  * ``seq``    — context parallelism via shard_map: Q sharded over 'model'
+                 on the sequence dim, K/V all-gathered per layer (Llama-3.2
+                 24 heads / Gemma-2 8 heads don't divide 16).
+Decode uses sequence-sharded KV caches with a two-pass partial-softmax
+psum combine ("distributed flash-decode") — O(S) per step, any head count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.transformer.layers import softcap as apply_softcap
+
+NEG = -1e30
+
+
+def _window_ok(qpos, kpos, window):
+    """Sliding-window predicate; ``window`` may be a python int or a traced
+    scalar (0 = global attention). Shape: [len(qpos), len(kpos)] bool."""
+    if isinstance(window, int) and window == 0:
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    w = jnp.asarray(window, jnp.int32)
+    w_eff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+    return (qpos[:, None] - kpos[None, :]) < w_eff
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (shared by train & prefill)
+# ---------------------------------------------------------------------------
+
+def blocked_attention(
+    q: jnp.ndarray,                  # [B, Sq, Hq, D]
+    k: jnp.ndarray,                  # [B, Skv, Hkv, D]
+    v: jnp.ndarray,                  # [B, Skv, Hkv, Dv]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,                 # >0: only kv with 0 <= qpos-kpos < window
+    softcap: Optional[float] = None,
+    q_offset=0,                      # global position of q[0] (int or traced)
+    kv_offset=0,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    nq, nk = -(-Sq // qb), -(-Skv // kb)
+    # pad seq dims to block multiples
+    q = jnp.pad(q, ((0, 0), (0, nq * qb - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * kb - Skv), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * kb - Skv), (0, 0), (0, 0)))
+
+    # [B, Hkv, G, S, D] layout
+    qh = q.reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)   # [nq,B,Hkv,G,qb,D]
+    kh = k.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)         # [nk,B,Hkv,kb,D]
+    vh = v.reshape(B, nk, kb, Hkv, Dv).transpose(1, 0, 3, 2, 4)
+
+    qpos_base = jnp.arange(qb)
+    kpos_base = jnp.arange(kb)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+        qpos = q_offset + i * qb + qpos_base                          # [qb]
+
+        def kv_step(carry, kj_and_j):
+            m, l, acc = carry
+            (kj, vj), j = kj_and_j
+            kpos = kv_offset + j * kb + kpos_base                     # [kb]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = apply_softcap(s, softcap)
+            mask = _window_ok(qpos, kpos, window)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            mask &= (kpos < kv_offset + Skv)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, Dv), jnp.float32)
+        # checkpoint the tile body: backward recomputes the score tile instead
+        # of storing every [qb, kb] block (flash-attention memory behavior)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), ((kh, vh), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]                  # [B,Hkv,G,qb,Dv]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qh, jnp.arange(nq)))        # [nq,B,Hkv,G,qb,Dv]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, Hq, Dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def attention_seq_parallel(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    mesh: Mesh, batch_axes: Tuple[str, ...], *, scale: float,
+    causal: bool = True, window: int = 0, softcap: Optional[float] = None,
+    q_block: int = 512, kv_block: int = 512,
+) -> jnp.ndarray:
+    """Context-parallel blocked attention: Q seq-sharded over 'model',
+    K/V all-gathered inside the shard (one tiled all-gather per layer)."""
+    n_model = mesh.shape["model"]
+
+    def local(qs, ks, vs):
+        ks = jax.lax.all_gather(ks, "model", axis=1, tiled=True)
+        vs = jax.lax.all_gather(vs, "model", axis=1, tiled=True)
+        idx = jax.lax.axis_index("model")
+        off = idx * qs.shape[1]
+        return blocked_attention(qs, ks, vs, scale=scale, causal=causal,
+                                 window=window, softcap=softcap,
+                                 q_offset=off, kv_offset=0,
+                                 q_block=q_block, kv_block=kv_block)
+
+    spec_q = P(batch_axes, "model", None, None)
+    spec_kv = P(batch_axes, "model", None, None)
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(spec_q, spec_kv, spec_kv),
+                         out_specs=spec_q, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# distributed decode (sequence-sharded KV cache)
+# ---------------------------------------------------------------------------
+
+def _combine_partials(o, m, l, axes):
+    """Merge per-shard (out, max, sumexp) partial softmaxes via psum."""
+    m_max = jax.lax.pmax(m, axes)
+    corr = jnp.exp(m - m_max)
+    l_tot = jax.lax.psum(l * corr, axes)
+    o_tot = jax.lax.psum(o * corr[..., None], axes)
+    return o_tot / jnp.maximum(l_tot, 1e-20)[..., None]
+
+
+def _local_decode_scores(q, kc, vc, kpos, cache_len, *, scale, window, softcap):
+    """q: [B,Hq,D]; kc/vc: [B,Sloc,Hkv,D]; kpos: [Sloc] global positions."""
+    B, Sloc, Hkv, D = kc.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = apply_softcap(s, softcap)
+    valid = kpos < cache_len
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window, jnp.int32)
+        w_eff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+        valid &= kpos >= (cache_len - w_eff)
+    s = jnp.where(valid[None, None, None, :], s, NEG)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def decode_attention_sharded(
+    q: jnp.ndarray,                  # [B, Hq, D] one new token per sequence
+    k_cache: jnp.ndarray,            # [B, S, Hkv, D]  (seq dim sharded)
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,              # [B, Hkv, D]
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,          # scalar int32: tokens already in cache
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...],
+    seq_axes: Tuple[str, ...] = ("model",),
+    *, scale: float, window: int = 0, softcap: Optional[float] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Distributed flash-decode: partial softmax per seq shard + psum combine.
+
+    Also writes (k_new, v_new) at position ``cache_len`` (which lives on
+    exactly one shard). Returns (attn_out [B,Hq,Dv], k_cache', v_cache').
+    """
+    S = k_cache.shape[1]
+    n_shards = 1
+    for ax in seq_axes:
+        n_shards *= mesh.shape[ax]
+    s_loc = S // n_shards
+
+    def local(qs, kc, vc, kn, vn, clen):
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for ax in reversed(seq_axes):
+            idx = idx + jax.lax.axis_index(ax) * mult
+            mult *= mesh.shape[ax]
+        start = idx * s_loc
+        # --- cache insert (one shard owns position clen) ---
+        li = jnp.clip(clen - start, 0, s_loc - 1)
+        mine = (clen >= start) & (clen < start + s_loc)
+        old_k = jax.lax.dynamic_slice_in_dim(kc, li, 1, axis=1)
+        old_v = jax.lax.dynamic_slice_in_dim(vc, li, 1, axis=1)
+        upd_k = jnp.where(mine, kn[:, None], old_k)
+        upd_v = jnp.where(mine, vn[:, None], old_v)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, upd_k, li, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, upd_v, li, axis=1)
+        # --- partial attention over local slice (cache now holds clen+1) ---
+        kpos = start + jnp.arange(s_loc)
+        o, m, l = _local_decode_scores(qs, kc, vc, kpos, clen + 1,
+                                       scale=scale, window=window, softcap=softcap)
+        out = _combine_partials(o, m, l, seq_axes)
+        B, Hkv, G, Dv = out.shape[0], out.shape[1], out.shape[2], out.shape[3]
+        return out.reshape(B, Hkv * G, Dv).astype(v_cache.dtype), kc, vc
+
+    bspec = P(batch_axes, *([None] * 2))
+    cspec = P(batch_axes, seq_axes, None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_axes, None, None), cspec, cspec,
+                  P(batch_axes, None, None), P(batch_axes, None, None), P()),
+        out_specs=(P(batch_axes, None, None), cspec, cspec),
+        check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# MLA decode (absorbed form, compressed cache) — DeepSeek-V2
+# ---------------------------------------------------------------------------
+
+def mla_decode_attention_sharded(
+    q_lat: jnp.ndarray,              # [B, H, kv_lora] q_nope absorbed through Wk_b
+    q_rope: jnp.ndarray,             # [B, H, rope_dim]
+    ckv_cache: jnp.ndarray,          # [B, S, kv_lora]   (seq sharded)
+    krope_cache: jnp.ndarray,        # [B, S, rope_dim]
+    ckv_new: jnp.ndarray,            # [B, kv_lora]
+    krope_new: jnp.ndarray,          # [B, rope_dim]
+    cache_len: jnp.ndarray,
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...],
+    seq_axes: Tuple[str, ...] = ("model",),
+    *, scale: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (attn latent out [B,H,kv_lora], ckv', krope')."""
+    S = ckv_cache.shape[1]
+    n_shards = 1
+    for ax in seq_axes:
+        n_shards *= mesh.shape[ax]
+    s_loc = S // n_shards
+
+    def local(ql, qr, ckv, kr, cn, rn, clen):
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for ax in reversed(seq_axes):
+            idx = idx + jax.lax.axis_index(ax) * mult
+            mult *= mesh.shape[ax]
+        start = idx * s_loc
+        li = jnp.clip(clen - start, 0, s_loc - 1)
+        mine = (clen >= start) & (clen < start + s_loc)
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            ckv, jnp.where(mine, cn[:, None], jax.lax.dynamic_slice_in_dim(ckv, li, 1, 1)), li, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            kr, jnp.where(mine, rn[:, None], jax.lax.dynamic_slice_in_dim(kr, li, 1, 1)), li, 1)
+        kpos = start + jnp.arange(s_loc)
+        s = (jnp.einsum("bhc,bsc->bhs", ql, ckv, preferred_element_type=jnp.float32)
+             + jnp.einsum("bhr,bsr->bhs", qr, kr, preferred_element_type=jnp.float32)) * scale
+        s = jnp.where((kpos < clen + 1)[None, None, :], s, NEG)
+        m = s.max(axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(axis=-1)
+        o = jnp.einsum("bhs,bsc->bhc", p.astype(ckv.dtype), ckv,
+                       preferred_element_type=jnp.float32)
+        out = _combine_partials(o, m, l, seq_axes)
+        return out.astype(ckv_cache.dtype), ckv, kr
+
+    cspec2 = P(batch_axes, seq_axes, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(batch_axes, None, None),
+                  cspec2, cspec2, P(batch_axes, None), P(batch_axes, None), P()),
+        out_specs=(P(batch_axes, None, None), cspec2, cspec2),
+        check_vma=False,
+    )(q_lat, q_rope, ckv_cache, krope_cache, ckv_new, krope_new, cache_len)

@@ -1,0 +1,119 @@
+"""Transformer configuration covering the five assigned LM architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.sharding import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention dims."""
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope + self.qk_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    n_shared: int = 0               # shared (always-on) experts
+    first_dense_layers: int = 0     # leading dense-FFN layers (DeepSeek: 1)
+    first_dense_ff: int = 0         # their hidden size
+    capacity_factor: float = 1.25
+    renormalize: bool = True
+    aux_coef: float = 0.0           # load-balance aux loss coefficient
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_q: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    mlp_variant: str = "swiglu"             # swiglu | geglu | gelu_mlp
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 10000.0
+    window: Optional[int] = None            # sliding-window size (local layers)
+    window_pattern: str = "none"            # none | alternate (gemma2: even layers local)
+    attn_softcap: Optional[float] = None    # gemma2: 50.0
+    final_softcap: Optional[float] = None   # gemma2: 30.0
+    post_norms: bool = False                # gemma2 pre+post block norms
+    gemma_norm: bool = False                # (1+g) RMSNorm + sqrt(d) embed scale
+    qk_norm: bool = False
+    tied_embeddings: bool = True
+    norm_eps: float = 1e-6
+    param_dtype: jnp.dtype = jnp.bfloat16
+    cache_dtype: jnp.dtype = jnp.bfloat16
+    # --- parallel/perf knobs ---
+    train_microbatches: int = 1
+    attn_parallel: str = "heads"            # heads | seq (context parallel)
+    remat: str = "dots"                     # dots | full | none
+    q_block: int = 512
+    kv_block: int = 512
+    seq_shard_decode: Tuple[str, ...] = ("model",)
+    rules: Rules = dataclasses.field(default_factory=dict)
+
+    def with_(self, **kw) -> "TransformerConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer attention window (0 = global). Gemma2 alternates
+        local (even idx) / global (odd idx)."""
+        if self.window is None or self.window_pattern == "none":
+            return tuple(0 for _ in range(self.n_layers))
+        return tuple(self.window if (i % 2 == 0) else 0 for i in range(self.n_layers))
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        emb = V * d * (1 if self.tied_embeddings else 2)
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.q_lora + m.q_lora * self.n_q * m.qk_dim
+                    + d * (m.kv_lora + m.qk_rope)
+                    + m.kv_lora * self.n_q * (m.qk_nope + m.v_dim)
+                    + self.n_q * m.v_dim * d)
+        else:
+            attn = d * self.n_q * self.head_dim * 2 + d * self.n_kv * self.head_dim * 2
+        mats = 3 if self.mlp_variant in ("swiglu", "geglu") else 2
+        total = emb
+        for i in range(L):
+            total += attn
+            if self.moe is not None and i >= self.moe.first_dense_layers:
+                total += self.moe.n_experts * mats * d * self.moe.d_ff
+                total += self.moe.n_shared * mats * d * self.moe.d_ff
+                total += d * self.moe.n_experts
+            elif self.moe is not None:
+                total += mats * d * self.moe.first_dense_ff
+            else:
+                total += mats * d * self.d_ff
+        return total
+
+    def n_active_params(self) -> int:
+        """Active (per-token) params — MoE counts only routed top-k."""
+        if self.moe is None:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        mats = 3 if self.mlp_variant in ("swiglu", "geglu") else 2
+        full = self.n_params()
+        moe_layers = L - self.moe.first_dense_layers
+        inactive = moe_layers * (self.moe.n_experts - self.moe.top_k) * mats * d * self.moe.d_ff
+        return full - inactive

@@ -1,0 +1,81 @@
+"""Transformer building blocks: RMSNorm, RoPE, gated MLPs — with logical dims."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import L
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"g": L(jnp.zeros((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6, gemma: bool = False):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    xhat = x32 * jax.lax.rsqrt(var + eps)
+    return (xhat * (1.0 + p["g"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D] (D even); positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (dense FFN variants)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d: int, ff: int, variant: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    if variant in ("swiglu", "geglu"):
+        return {
+            "wi": L(jax.random.normal(ks[0], (d, ff), dtype) * scale_in, ("embed", "mlp")),
+            "wg": L(jax.random.normal(ks[1], (d, ff), dtype) * scale_in, ("embed", "mlp")),
+            "wo": L(jax.random.normal(ks[2], (ff, d), dtype) * scale_out, ("mlp", "embed")),
+        }
+    return {
+        "wi": L(jax.random.normal(ks[0], (d, ff), dtype) * scale_in, ("embed", "mlp")),
+        "wo": L(jax.random.normal(ks[2], (ff, d), dtype) * scale_out, ("mlp", "embed")),
+    }
+
+
+def ffn(p, x, variant: str):
+    if variant == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif variant == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    return h @ p["wo"]
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN with explicit expert parallelism (shard_map).
+
+Scheme ("replicated-activations EP", GShard-style with deterministic
+collectives): expert weights are sharded over the 'model' axis (E_loc =
+E / n_model per device); activations stay batch-sharded and model-replicated.
+Each device routes its local tokens, builds capacity buffers for *its* expert
+slice via scatter (no one-hot einsum — the [T, E, C] dispatch tensor would be
+TBs at DeepSeek scale), runs its experts, and the outputs are combined with a
+single psum over 'model' per MoE layer (same collective volume as a TP
+all-reduce of the layer output).
+
+Over-capacity tokens are dropped (standard GShard semantics; capacity_factor
+in the config controls head-room — tests use generous factors so reference
+comparisons are drop-free). A switch-style load-balance aux loss is returned.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.transformer.config import MoEConfig
+from repro.sharding import L
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, variant: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff
+    si, so = d_model ** -0.5, F ** -0.5
+    p = {
+        "router": L(jax.random.normal(ks[0], (d_model, E), jnp.float32) * si,
+                    ("embed", "experts")),
+        "wi": L(jax.random.normal(ks[1], (E, d_model, F), dtype) * si,
+                ("experts", "embed", "expert_mlp")),
+        "wo": L(jax.random.normal(ks[2], (E, F, d_model), dtype) * so,
+                ("experts", "expert_mlp", "embed")),
+    }
+    if variant in ("swiglu", "geglu"):
+        p["wg"] = L(jax.random.normal(ks[3], (E, d_model, F), dtype) * si,
+                    ("experts", "embed", "expert_mlp"))
+    return p
+
+
+def _expert_ffn(wi, wg, wo, xe, variant: str):
+    """xe: [E_loc, C, D] capacity buffers; batched expert matmuls."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    if variant == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, wg)
+        h = jax.nn.silu(g) * h
+    elif variant == "geglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, wg)
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_ffn(
+    params,
+    x: jnp.ndarray,                  # [B, S, D] (batch sharded over batch_axes)
+    cfg: MoEConfig,
+    variant: str,
+    mesh: Mesh,
+    batch_axes: Tuple[str, ...],
+    model_axis: str = "model",
+    fsdp_axis: str | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,S,D], aux_loss scalar).
+
+    With ``fsdp_axis`` set, expert weights stay 2-D sharded
+    (experts x embed-dim) at rest and are all-gathered *inside* the shard —
+    per layer, transient — instead of letting XLA hoist a whole-stack gather
+    out of the layer scan (ZeRO-3 semantics; backward is reduce-scatter).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n_model = mesh.shape[model_axis]
+    assert E % n_model == 0, (E, n_model)
+    e_loc = E // n_model
+
+    def local(xb, router, wi, wg, wo):
+        if fsdp_axis is not None:
+            wi = jax.lax.all_gather(wi, fsdp_axis, axis=1, tiled=True)
+            wg = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, fsdp_axis, axis=2, tiled=True)
+        Bl = xb.shape[0]
+        T = Bl * S
+        xt = xb.reshape(T, D)
+        logits = (xt.astype(jnp.float32) @ router)            # [T, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        w_topk, idx = jax.lax.top_k(probs, K)                 # [T, K]
+        if cfg.renormalize:
+            w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+
+        e0 = jax.lax.axis_index(model_axis) * e_loc
+        cap = max(int(T * K / E * cfg.capacity_factor), 4)
+
+        sel = idx.reshape(-1)                                 # [T*K] expert ids
+        w_flat = w_topk.reshape(-1)
+        local_sel = (sel >= e0) & (sel < e0 + e_loc)
+        loc_e = jnp.where(local_sel, sel - e0, e_loc)         # e_loc = trash bucket
+        onehot = jax.nn.one_hot(loc_e, e_loc, dtype=jnp.int32)     # [T*K, E_loc]
+        pos = jnp.cumsum(onehot, axis=0) - onehot                   # pos before this sel
+        pos = (pos * onehot).sum(-1)                                # [T*K]
+        keep = local_sel & (pos < cap)
+        slot = jnp.where(keep, loc_e * cap + pos, e_loc * cap)      # overflow row
+
+        tok_idx = jnp.repeat(jnp.arange(T), K)
+        buf = jnp.zeros((e_loc * cap + 1, D), x.dtype)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+        xe = buf[:-1].reshape(e_loc, cap, D)
+
+        ye = _expert_ffn(wi, wg, wo, xe, variant)             # [E_loc, C, D]
+        ye_flat = jnp.concatenate([ye.reshape(e_loc * cap, D),
+                                   jnp.zeros((1, D), ye.dtype)], axis=0)
+        contrib = ye_flat[slot] * (w_flat * keep).astype(ye.dtype)[:, None]
+        yt = jax.ops.segment_sum(contrib, tok_idx, num_segments=T)
+        y = jax.lax.psum(yt, model_axis).reshape(Bl, S, D).astype(xb.dtype)
+
+        # switch aux loss (identical across model shards; router replicated)
+        frac = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+        mean_prob = probs.mean(0)
+        aux = E * jnp.sum(frac * mean_prob)
+        return y, aux
+
+    wg = params.get("wg", params["wi"])  # dummy when non-gated
+    in_spec = P(model_axis, fsdp_axis, None)
+    out_spec = P(model_axis, None, fsdp_axis)
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(None, None), in_spec, in_spec, out_spec),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["wi"], wg, params["wo"])
+    return y, aux
+
+
+def moe_ffn_reference(params, x, cfg: MoEConfig, variant: str):
+    """Drop-free dense oracle: every token processed by its top-k experts."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.renormalize:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(xt)
+    for e in range(cfg.n_experts):
+        wi = params["wi"].value if isinstance(params["wi"], L) else params["wi"]
+        h = xt @ wi[e]
+        if variant in ("swiglu", "geglu"):
+            g = xt @ params["wg"][e]
+            h = (jax.nn.silu(g) if variant == "swiglu" else jax.nn.gelu(g, approximate=True)) * h
+        else:
+            h = jax.nn.gelu(h, approximate=True)
+        ye = h @ params["wo"][e]
+        we = ((idx == e) * w).sum(-1).astype(ye.dtype)
+        y = y + ye * we[:, None]
+    return y.reshape(B, S, D)

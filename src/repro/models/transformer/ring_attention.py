@@ -1,0 +1,89 @@
+"""Ring attention: sequence-parallel exact attention with ppermute KV rotation.
+
+Beyond-paper perf feature (EXPERIMENTS §Perf notes): the all-gather variant
+(`attention_seq_parallel`) needs the full KV per device transiently; ring
+attention keeps only one KV chunk resident, rotating chunks around the
+'model' axis with `collective-permute` while accumulating the online softmax
+— the same neighbor-DMA primitive as the paper's halo exchange, and XLA's
+latency-hiding scheduler overlaps each hop with the current chunk's matmuls
+(compute/comm overlap). Wire volume equals the all-gather; peak memory drops
+by n_model x on the KV transient — which is what matters for 32k prefill.
+
+Causal masking is positional (chunk indices move with the rotation), so the
+result is exactly blocked_attention's.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.transformer.attention import blocked_attention
+
+
+def ring_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    mesh: Mesh, batch_axes: Tuple[str, ...], *, scale: float,
+    causal: bool = True, window: int = 0, softcap: Optional[float] = None,
+    q_block: int = 512, kv_block: int = 512, axis: str = "model",
+) -> jnp.ndarray:
+    """q,k,v: [B, S, H, D] global; S sharded over ``axis``. Exact attention."""
+    n = mesh.shape[axis]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def local(qs, ks, vs):
+        idx = jax.lax.axis_index(axis)
+        s_loc = qs.shape[1]
+        q_off = idx * s_loc
+        B, _, Hq, D = qs.shape
+        Hkv, Dv = ks.shape[2], vs.shape[-1]
+        G = Hq // Hkv
+
+        NEG = -1e30
+        m0 = jnp.full((B, Hq, s_loc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hq, s_loc), jnp.float32)
+        a0 = jnp.zeros((B, Hq, s_loc, Dv), jnp.float32)
+
+        def hop(carry, t):
+            m, l, acc, kc, vc = carry
+            src_idx = (idx - t) % n          # whose chunk we now hold
+            kv_off = src_idx * s_loc
+            # one chunk-vs-chunk blocked pass with true global offsets
+            qpos = q_off + jnp.arange(s_loc)
+            kpos = kv_off + jnp.arange(s_loc)
+            kk = jnp.repeat(kc, G, axis=2)
+            vv = jnp.repeat(vc, G, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qs, kk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((s_loc, s_loc), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if not (isinstance(window, int) and window == 0):
+                w = jnp.asarray(window, jnp.int32)
+                w_eff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+                mask &= (qpos[:, None] - kpos[None, :]) < w_eff
+            s = jnp.where(mask[None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vv.dtype), vv,
+                preferred_element_type=jnp.float32)
+            # rotate the KV chunk to the next stage (overlappable DMA)
+            kc = jax.lax.ppermute(kc, axis, perm=perm)
+            vc = jax.lax.ppermute(vc, axis, perm=perm)
+            return (m_new, l_new, acc_new, kc, vc), None
+
+        (m, l, acc, _, _), _ = jax.lax.scan(hop, (m0, l0, a0, ks, vs),
+                                            jnp.arange(n))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]          # [B,Hq,S_loc,Dv]
+        return out.transpose(0, 2, 1, 3).astype(vs.dtype)
+
+    spec = P(batch_axes, axis, None, None)
+    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)

@@ -1,0 +1,152 @@
+"""Jit-ready LM steps: train (AdamW + grad accumulation), prefill, decode —
+with the input/state ShapeDtypeStructs and PartitionSpecs the launcher and
+multi-pod dry-run consume.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.model import (
+    ParallelCtx, cache_specs, decode_step, forward, init_cache,
+    init_transformer, lm_loss, prefill_step,
+)
+from repro.sharding import split_tree
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+# ---------------------------------------------------------------------------
+# state construction (shape-only or concrete)
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: TransformerConfig, ctx: ParallelCtx):
+    """(param ShapeDtypeStructs, PartitionSpec tree) without allocating."""
+    tree_sds = jax.eval_shape(functools.partial(init_transformer, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    return split_tree(tree_sds, ctx.rules, ctx.mesh)
+
+
+def lm_train_state_specs(cfg: TransformerConfig, ctx: ParallelCtx, opt: AdamWConfig):
+    params_sds, pspecs = lm_param_specs(cfg, ctx)
+    master = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_sds)
+    opt_sds = jax.eval_shape(functools.partial(init_adamw, cfg=opt), master)
+    state_sds = {"params": master, "opt": opt_sds}
+    state_specs = {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+    return state_sds, state_specs
+
+
+def lm_init_train_state(key, cfg: TransformerConfig, opt: AdamWConfig):
+    tree = init_transformer(key, cfg)
+    params, _ = split_tree(tree, {})
+    master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    return {"params": master, "opt": init_adamw(master, opt)}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: TransformerConfig, ctx: ParallelCtx, opt: AdamWConfig,
+                    n_micro: int = 1, cast_per_micro: bool = False,
+                    accum_dtype=jnp.float32):
+    """(state, tokens [B,S], targets [B,S]) -> (state', metrics).
+
+    With n_micro > 1 the batch is split into micro-batches scanned with
+    gradient accumulation — the memory lever that fits 4k-seq training of the
+    large configs into v5e HBM (see EXPERIMENTS.md §Dry-run).
+
+    ``cast_per_micro=False`` (default after the §Perf iteration) casts the
+    fp32 master weights to bf16 ONCE per step, outside the micro-batch scan;
+    casting inside the loop (=True, the naive formulation) re-reads the full
+    fp32 master and re-materializes the bf16 copy n_micro times per step.
+    Gradients w.r.t. the bf16 compute params equal the master gradients
+    (astype's JVP is the identity cast).
+    """
+
+    def cast(master):
+        return jax.tree.map(
+            lambda x: x.astype(cfg.param_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, master)
+
+    def loss_from_master(master, tokens, targets):
+        return lm_loss(cast(master), tokens, targets, cfg, ctx)[0]
+
+    def loss_from_compute(params_c, tokens, targets):
+        return lm_loss(params_c, tokens, targets, cfg, ctx)[0]
+
+    def step(state, tokens, targets):
+        master = state["params"]
+        if n_micro > 1:
+            B = tokens.shape[0]
+            tk = tokens.reshape(n_micro, B // n_micro, -1)
+            tg = targets.reshape(n_micro, B // n_micro, -1)
+            params_c = None if cast_per_micro else cast(master)
+
+            def body(carry, xs):
+                acc_l, acc_g = carry
+                if cast_per_micro:
+                    l, g = jax.value_and_grad(loss_from_master)(master, xs[0], xs[1])
+                else:
+                    l, g = jax.value_and_grad(loss_from_compute)(params_c, xs[0], xs[1])
+                g = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), acc_g, g)
+                return (acc_l + l, g), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), master))
+            (loss, grads), _ = jax.lax.scan(body, zero, (tk, tg))
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_from_master)(master, tokens, targets)
+        new_params, new_opt, info = adamw_update(grads, state["opt"], master, opt)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **info}
+
+    return step
+
+
+def make_prefill_step(cfg: TransformerConfig, ctx: ParallelCtx, capacity: int):
+    def step(params, tokens):
+        return prefill_step(params, tokens, cfg, ctx, capacity=capacity)
+    return step
+
+
+def make_decode_step(cfg: TransformerConfig, ctx: ParallelCtx):
+    def step(params, cache, tokens, cache_len):
+        return decode_step(params, cache, tokens, cache_len, cfg, ctx)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# input specs for the dry-run / launcher
+# ---------------------------------------------------------------------------
+
+def lm_input_specs(cfg: TransformerConfig, ctx: ParallelCtx, shape: dict):
+    """ShapeDtypeStructs + PartitionSpecs for one LM shape cell."""
+    B, S = shape["global_batch"], shape["seq_len"]
+    batch_axes = ctx.batch_axes if B > 1 else ()
+    tok_spec = P(batch_axes or None, None)
+    kind = shape["kind"]
+    if kind == "train":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {"tokens": (tokens, tok_spec), "targets": (tokens, tok_spec)}
+    if kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {"tokens": (tokens, tok_spec)}
+    if kind == "decode":
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        cache_sds = jax.eval_shape(
+            lambda: init_cache(cfg, B, S, dtype=cfg.cache_dtype))
+        cspecs = cache_specs(cfg, ParallelCtx(ctx.mesh, batch_axes or ctx.batch_axes,
+                                              ctx.rules), B)
+        return {"tokens": (tokens, tok_spec),
+                "cache": (cache_sds, cspecs),
+                "cache_len": (jax.ShapeDtypeStruct((), jnp.int32), P())}
+    raise ValueError(kind)

@@ -1,0 +1,75 @@
+"""Roofline report: three terms per (arch x shape) from the dry-run artifacts.
+
+Reads runs/dryrun/records.jsonl + saved HLO, runs the trip-count-correcting
+analyzer, and emits a markdown table + JSON (consumed by EXPERIMENTS.md).
+Single-pod (16x16) only, per the assignment; multi-pod records prove the
+'pod' axis shards and are summarized separately.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.roofline.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS, analyze
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def build_report(records_path: Path, mesh: str = "16x16", tag: str = ""):
+    rows = []
+    for line in records_path.read_text().splitlines():
+        r = json.loads(line)
+        if r.get("status") != "ok" or r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        hlo_path = r.get("hlo_path")
+        if not hlo_path or not Path(hlo_path).exists():
+            continue
+        txt = Path(hlo_path).read_text()
+        s = analyze(txt, total_devices=r["n_devices"])
+        terms = s.terms()
+        dom = max(terms, key=terms.get)
+        model_flops = r["meta"].get("model_flops", 0)
+        per_dev_model = model_flops / r["n_devices"] if model_flops else 0
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+            collective_s=terms["collective_s"], dominant=dom.replace("_s", ""),
+            dot_flops=s.dot_flops, hbm_bytes=s.hbm_bytes,
+            wire_bytes=s.collective_wire_bytes,
+            by_collective=s.by_collective,
+            model_flops_per_dev=per_dev_model,
+            useful_ratio=(per_dev_model / s.dot_flops) if s.dot_flops else 0.0,
+            peak_gib=r["per_device_bytes"]["peak_estimate"] / 2 ** 30,
+            xla_flops=r["cost"]["flops"],
+        ))
+    return rows
+
+
+def fmt_markdown(rows) -> str:
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | 6ND/HLO | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {r['peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default=str(ROOT / "runs/dryrun/records.jsonl"))
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(ROOT / "runs/roofline.json"))
+    args = ap.parse_args()
+    rows = build_report(Path(args.records), args.mesh, args.tag)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(fmt_markdown(rows))
+    print(f"\n{len(rows)} cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

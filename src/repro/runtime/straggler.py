@@ -1,0 +1,63 @@
+"""Straggler detection + mitigation hooks.
+
+On a real pod, stragglers show up as step-time outliers on some hosts. The
+monitor keeps an EWMA + variance of step times, flags outliers
+(> mean + k*std and > slack*mean), and drives mitigation callbacks:
+the training loop uses it to (a) log/alert, (b) trigger an early checkpoint
+so a replacement host can join (elastic restart path), and (c) optionally
+skip a slow host's data shard for one step (bounded-staleness semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    mean: float
+    std: float
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.05, k_std: float = 4.0,
+                 slack: float = 1.5, warmup_steps: int = 10):
+        self.alpha = alpha
+        self.k_std = k_std
+        self.slack = slack
+        self.warmup = warmup_steps
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int) -> Optional[StragglerEvent]:
+        dt = time.perf_counter() - self._t0
+        return self.observe(step, dt)
+
+    def observe(self, step: int, dt: float) -> Optional[StragglerEvent]:
+        self.n += 1
+        if self.mean is None:
+            self.mean = dt
+            return None
+        is_outlier = False
+        std = self.var ** 0.5
+        if self.n > self.warmup:
+            is_outlier = dt > self.mean + self.k_std * std and dt > self.slack * self.mean
+        if not is_outlier:
+            # EWMA updates exclude outliers so one straggler doesn't poison stats
+            d = dt - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        if is_outlier:
+            ev = StragglerEvent(step, dt, self.mean, std)
+            self.events.append(ev)
+            return ev
+        return None

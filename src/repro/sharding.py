@@ -1,0 +1,79 @@
+"""Logical-axis sharding (MaxText-style): params and activations carry logical
+dimension names; per-config rules map them to production-mesh axes.
+
+Init functions build trees whose leaves are ``L(array, dims)``;
+``split_tree`` separates them into (params, PartitionSpec tree). Activation
+constraints go through ``shard_act``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, AxisRule]
+
+
+@dataclasses.dataclass
+class L:
+    """A parameter leaf: the array plus its logical dimension names."""
+    value: jnp.ndarray
+    dims: Tuple[str, ...]
+
+
+# Registered as a pytree (dims are aux data) so vmap'd initializers can map
+# over stacked-layer parameter trees containing L leaves.
+jax.tree_util.register_pytree_node(
+    L, lambda l: ((l.value,), l.dims), lambda dims, vals: L(vals[0], dims))
+
+
+def stack_dims(prefix: str, tree):
+    """After a vmap'd init added a leading axis, prepend its logical dim."""
+    return jax.tree.map(lambda l: L(l.value, (prefix,) + tuple(l.dims)), tree,
+                        is_leaf=_is_leaf)
+
+
+def _is_leaf(x):
+    return isinstance(x, L)
+
+
+def spec_for(dims: Sequence[str], rules: Rules, mesh: Optional[Mesh] = None,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec from logical dims; drops rules that don't divide evenly."""
+    entries = []
+    for i, d in enumerate(dims):
+        r = rules.get(d)
+        if r is not None and mesh is not None and shape is not None:
+            size = 1
+            for ax in ((r,) if isinstance(r, str) else r):
+                size *= mesh.shape[ax]
+            if shape[i] % size != 0:
+                r = None  # fall back to replication rather than failing
+        entries.append(r)
+    return P(*entries)
+
+
+def split_tree(tree, rules: Rules, mesh: Optional[Mesh] = None):
+    """(params, specs) from a tree of L leaves."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=_is_leaf)
+    specs = jax.tree.map(
+        lambda l: spec_for(l.dims, rules, mesh, l.value.shape), tree, is_leaf=_is_leaf)
+    return params, specs
+
+
+def shard_act(x: jnp.ndarray, dims: Sequence[Optional[str]], rules: Rules,
+              mesh: Optional[Mesh] = None) -> jnp.ndarray:
+    """Constrain activation sharding; no-op when mesh is None (tests on CPU)."""
+    if mesh is None:
+        return x
+    spec = spec_for([d or "_none" for d in dims], rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

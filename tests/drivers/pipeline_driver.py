@@ -1,0 +1,49 @@
+"""Pipeline-parallel driver (subprocess, 8 host devices): GPipe forward over
+4 stages must equal the sequential composition, and gradients must flow."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh
+from repro.train.pipeline import pipeline_forward
+
+
+def main():
+    S, M, B, D = 4, 6, 2, 16
+    mesh = make_mesh((S, 2), ("stage", "data"))
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32) * 0.3)
+    micros = jnp.asarray(rng.normal(size=(M, B, D)).astype(np.float32))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    out = pipeline_forward(stage_fn, ws, micros, mesh)
+
+    ref = micros
+    for s in range(S):
+        ref = jnp.tanh(ref @ ws[s])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-6)
+    print("pipeline forward matches sequential")
+
+    def loss(ws):
+        return (pipeline_forward(stage_fn, ws, micros, mesh) ** 2).sum()
+
+    def loss_ref(ws):
+        r = micros
+        for s in range(S):
+            r = jnp.tanh(r @ ws[s])
+        return (r ** 2).sum()
+
+    g = jax.grad(loss)(ws)
+    g_ref = jax.grad(loss_ref)(ws)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-3, atol=1e-5)
+    print("pipeline gradients match sequential")
+    print("PIPELINE DRIVER PASS")
+
+
+if __name__ == "__main__":
+    main()

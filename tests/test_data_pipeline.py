@@ -1,0 +1,45 @@
+"""Data pipeline: deterministic replay + prefetch ordering + host sharding."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.pipeline import PrefetchingLoader, host_shard, token_batch_fn
+
+
+def test_token_batches_deterministic_replay():
+    fn = token_batch_fn(vocab=100, batch=4, seq=8, seed=3)
+    a = fn(7)
+    b = fn(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = fn(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # targets are next-token shifted
+    full_a = fn(7)
+    assert full_a["tokens"].shape == (4, 8)
+
+
+def test_prefetching_loader_order_and_restart():
+    fn = token_batch_fn(vocab=50, batch=2, seq=4, seed=0)
+    loader = PrefetchingLoader(fn, prefetch=3, start_step=5)
+    try:
+        steps, batches = [], []
+        for _ in range(4):
+            s, b = next(loader)
+            steps.append(s)
+            batches.append(np.asarray(b["tokens"]))
+        assert steps == [5, 6, 7, 8]
+    finally:
+        loader.close()
+    # a "restarted" loader from step 6 replays the same stream
+    loader2 = PrefetchingLoader(fn, prefetch=2, start_step=6)
+    try:
+        s, b = next(loader2)
+        assert s == 6
+        np.testing.assert_array_equal(np.asarray(b["tokens"]), batches[1])
+    finally:
+        loader2.close()
+
+
+def test_host_shard():
+    batch = {"x": np.arange(12).reshape(6, 2)}
+    sh = host_shard(batch, host_id=1, n_hosts=3)
+    np.testing.assert_array_equal(np.asarray(sh["x"]), batch["x"][2:4])

@@ -1,0 +1,33 @@
+"""Dry-run compile-path guard: one cheap cell per family on both production
+meshes, in a subprocess (needs 512 host devices set before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [
+    ("gat-cora", "full_graph_sm"),      # gnn family (fast compile)
+    ("dlrm-rm2", "serve_p99"),          # recsys
+    ("llama3.2-3b", "decode_32k"),      # lm
+]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_dryrun_cell_compiles_on_both_meshes(arch, shape, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = tmp_path / "rec.jsonl"
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "both", "--no-hlo", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+    assert len(recs) == 2 and all(r["status"] == "ok" for r in recs)
+    assert {r["mesh"] for r in recs} == {"16x16", "2x16x16"}
+    for r in recs:
+        assert r["per_device_bytes"]["peak_estimate"] < 16 * 2 ** 30

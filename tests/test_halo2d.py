@@ -1,0 +1,15 @@
+"""Two-level (2-axis) halo exchange: subprocess exactness test."""
+import os
+import subprocess
+import sys
+
+
+def test_two_level_halo_consistency_subprocess():
+    driver = os.path.join(os.path.dirname(__file__), "drivers", "halo2d_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, driver], env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "HALO2D DRIVER PASS" in res.stdout

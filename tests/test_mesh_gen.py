@@ -1,0 +1,86 @@
+"""Unit tests: SEM mesh generation (GLL points, coincidence structure, graphs)."""
+import numpy as np
+import pytest
+
+from repro.core.mesh_gen import (
+    box_mesh, element_lattice_edges, gll_points, mesh_graph_edges,
+    taylor_green_velocity, undirected_to_directed,
+)
+
+
+def test_gll_points_basic():
+    np.testing.assert_allclose(gll_points(1), [-1.0, 1.0])
+    np.testing.assert_allclose(gll_points(2), [-1.0, 0.0, 1.0], atol=1e-12)
+    # p=3 GLL interior nodes at +-1/sqrt(5)
+    np.testing.assert_allclose(gll_points(3), [-1, -1 / np.sqrt(5), 1 / np.sqrt(5), 1], atol=1e-12)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 7])
+def test_gll_points_properties(p):
+    x = gll_points(p)
+    assert x.shape == (p + 1,)
+    assert x[0] == -1.0 and x[-1] == 1.0
+    np.testing.assert_allclose(x, -x[::-1], atol=1e-12)  # symmetric
+    assert np.all(np.diff(x) > 0)
+
+
+@pytest.mark.parametrize("nelem,p", [((2, 2), 1), ((3, 2), 3), ((2, 2, 2), 2), ((4, 2, 1), 5)])
+def test_box_mesh_counts(nelem, p):
+    m = box_mesh(nelem, p)
+    # unique nodes = global lattice
+    expect = np.prod([n * p + 1 for n in nelem])
+    assert m.n_nodes == expect
+    assert m.n_elem == np.prod(nelem)
+    assert m.elem_nodes.shape == (m.n_elem, (p + 1) ** len(nelem))
+    # every element's ids are valid and coords in box
+    assert m.elem_nodes.min() >= 0 and m.elem_nodes.max() < m.n_nodes
+    assert m.coords.min() >= 0.0 and m.coords.max() <= 1.0
+
+
+def test_coincident_nodes_shared_between_elements():
+    m = box_mesh((2, 1), p=2)
+    # elements 0 and 1 share a full edge of 3 lattice points
+    shared = np.intersect1d(m.elem_nodes[0], m.elem_nodes[1])
+    assert shared.size == 3
+    # shared nodes sit on the x = 0.5 plane
+    np.testing.assert_allclose(m.coords[shared][:, 0], 0.5, atol=1e-12)
+
+
+@pytest.mark.parametrize("p,dim", [(1, 2), (3, 2), (1, 3), (3, 3)])
+def test_element_lattice_edges_count(p, dim):
+    e = element_lattice_edges(p, dim)
+    # per axis: p*(p+1)^(dim-1) edges
+    assert e.shape == (dim * p * (p + 1) ** (dim - 1), 2)
+    assert np.all(e[:, 0] != e[:, 1])
+
+
+def test_mesh_graph_edges_dedup():
+    m = box_mesh((2, 2), p=1)
+    e = mesh_graph_edges(m)
+    # 3x3 lattice grid graph: 2*3*2 = 12 undirected edges
+    assert e.shape == (12, 2)
+    assert np.all(e[:, 0] < e[:, 1])
+    d = undirected_to_directed(e)
+    assert d.shape == (24, 2)
+
+
+def test_graph_edges_match_lattice_grid():
+    """For p>=1 the dedup'd mesh graph equals the global lattice grid graph."""
+    for nelem, p in (((2, 2), 2), ((3, 1, 2), 1)):
+        m = box_mesh(nelem, p)
+        e = mesh_graph_edges(m)
+        npts = [n * p + 1 for n in nelem]
+        expect = 0
+        for ax in range(len(nelem)):
+            expect += (npts[ax] - 1) * int(np.prod(npts)) // npts[ax]
+        assert e.shape[0] == expect
+
+
+def test_taylor_green_divergence_free_sample():
+    m = box_mesh((4, 4, 4), p=2)
+    v = taylor_green_velocity(m.coords, t=0.0)
+    assert v.shape == (m.n_nodes, 3)
+    assert np.isfinite(v).all()
+    # decay over time
+    v2 = taylor_green_velocity(m.coords, t=1.0)
+    assert np.linalg.norm(v2) < np.linalg.norm(v)

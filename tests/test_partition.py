@@ -1,0 +1,149 @@
+"""Unit + property-style tests for the partitioner and halo plans."""
+import numpy as np
+import pytest
+
+from repro.core.mesh_gen import box_mesh, mesh_graph_edges, undirected_to_directed
+from repro.core.partition import (
+    from_edge_partition, from_element_partition, greedy_edge_coloring,
+    partition_elements, partition_graph, partition_mesh, pack,
+    gather_node_features, scatter_node_outputs,
+)
+
+
+def _brute_force_multiplicities(graphs, n_nodes):
+    node_mult = np.zeros(n_nodes, dtype=int)
+    for g in graphs:
+        node_mult[g.global_ids] += 1
+    return node_mult
+
+
+@pytest.mark.parametrize("rank_grid", [(2, 1, 1), (2, 2, 1), (2, 2, 2)])
+def test_element_partition_multiplicities(rank_grid):
+    m = box_mesh((4, 4, 2), p=2)
+    R = int(np.prod(rank_grid))
+    e2r = partition_elements(m, rank_grid)
+    assert e2r.shape == (m.n_elem,)
+    assert set(np.unique(e2r)) == set(range(R))
+    graphs = from_element_partition(m, e2r, R)
+    # node multiplicity via brute force matches 1/inv_mult
+    mult = _brute_force_multiplicities(graphs, m.n_nodes)
+    for g in graphs:
+        np.testing.assert_allclose(1.0 / g.node_inv_mult, mult[g.global_ids])
+    # sum over copies of 1/d_i equals global node count (Eq. 6c)
+    total = sum(g.node_inv_mult.sum() for g in graphs)
+    np.testing.assert_allclose(total, m.n_nodes, rtol=1e-6)
+    # edges weighted by 1/d_ij sum to global directed edge count
+    total_e = sum(g.edge_inv_mult.sum() for g in graphs)
+    assert abs(total_e - 2 * mesh_graph_edges(m).shape[0]) < 1e-5
+
+
+def test_partition_covers_all_edges_exactly_once_weighted():
+    m = box_mesh((4, 2, 2), p=3)
+    pg = partition_mesh(m, (2, 2, 1))
+    # reconstruct global weighted edge multiset
+    und = mesh_graph_edges(m)
+    seen = {}
+    for r in range(pg.R):
+        mask = pg.edge_mask[r] > 0
+        src_g = pg.global_ids[r][pg.edge_src[r][mask]]
+        dst_g = pg.global_ids[r][pg.edge_dst[r][mask]]
+        for a, b, w in zip(src_g, dst_g, pg.edge_inv_mult[r][mask]):
+            seen[(int(a), int(b))] = seen.get((int(a), int(b)), 0.0) + w
+    d = undirected_to_directed(und)
+    assert len(seen) == d.shape[0]
+    for v in seen.values():
+        assert abs(v - 1.0) < 1e-6
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_generic_edge_partition_properties(seed):
+    """Property: random graph, random R — edge conservation + multiplicities."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 80))
+    m_edges = int(rng.integers(n, 4 * n))
+    edges = rng.integers(0, n, size=(m_edges, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    R = int(rng.choice([2, 3, 4, 8]))
+    graphs = from_edge_partition(n, edges, R)
+    # every directed edge appears exactly once globally
+    total = sum(g.n_edges for g in graphs)
+    assert total == edges.shape[0]
+    # every node has a copy somewhere; multiplicity matches inv_mult
+    mult = _brute_force_multiplicities(graphs, n)
+    assert (mult >= 1).all()
+    for g in graphs:
+        np.testing.assert_allclose(1.0 / g.node_inv_mult, mult[g.global_ids])
+        assert np.all(g.edge_inv_mult == 1.0)  # d_ij == 1 for edge partitioning
+        if g.n_edges:
+            assert g.edges.min() >= 0 and g.edges.max() < g.n_nodes
+
+
+def test_greedy_edge_coloring_valid():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        R = int(rng.integers(3, 12))
+        pairs = set()
+        for _ in range(int(rng.integers(2, 3 * R))):
+            a, b = rng.integers(0, R, 2)
+            if a != b:
+                pairs.add((min(a, b), max(a, b)))
+        rounds = greedy_edge_coloring(sorted(pairs))
+        got = set()
+        deg = {}
+        for a, b in pairs:
+            deg[a] = deg.get(a, 0) + 1
+            deg[b] = deg.get(b, 0) + 1
+        for rnd in rounds:
+            ranks = [x for p in rnd for x in p]
+            assert len(ranks) == len(set(ranks)), "round not disjoint"
+            got |= set(rnd)
+        assert got == pairs
+        if pairs:
+            assert len(rounds) <= max(deg.values()) + 1  # Vizing-ish bound
+
+
+def test_halo_plan_symmetry():
+    m = box_mesh((4, 4), p=2)
+    pg = partition_mesh(m, (2, 2))
+    h = pg.halo
+    R = pg.R
+    for r in range(R):
+        for s in range(R):
+            # send mask r->s == recv mask s<-r, same buffer occupancy
+            np.testing.assert_array_equal(h.a2a_send_mask[r, s], h.a2a_recv_mask[s, r])
+    # shared ids actually coincide: exchanged global ids match both sides
+    for r in range(R):
+        for s in range(R):
+            m_rs = h.a2a_send_mask[r, s] > 0
+            if not m_rs.any():
+                continue
+            gids_sent = pg.global_ids[r][h.a2a_send_idx[r, s][m_rs]]
+            gids_recv = pg.global_ids[s][h.a2a_recv_idx[s, r][m_rs]]
+            np.testing.assert_array_equal(gids_sent, gids_recv)
+
+
+def test_neighbor_rounds_cover_all_pairs():
+    m = box_mesh((4, 4, 2), p=1)
+    pg = partition_mesh(m, (2, 2, 2))
+    h = pg.halo
+    covered = set()
+    for k, perm in enumerate(h.perms):
+        for (a, b) in perm:
+            covered.add((min(a, b), max(a, b)))
+    expect = set()
+    for r in range(pg.R):
+        for s in range(r + 1, pg.R):
+            if (h.a2a_send_mask[r, s] > 0).any():
+                expect.add((r, s))
+    assert covered == expect
+
+
+def test_gather_scatter_roundtrip():
+    m = box_mesh((3, 3), p=2)
+    pg = partition_mesh(m, (3, 1))
+    rng = np.random.default_rng(1)
+    gx = rng.normal(size=(m.n_nodes, 5)).astype(np.float32)
+    per_rank = gather_node_features(pg, gx)
+    assert per_rank.shape == (pg.R, pg.n_pad, 5)
+    back = scatter_node_outputs(pg, per_rank)
+    np.testing.assert_allclose(back, gx)

@@ -1,0 +1,22 @@
+"""Pipeline parallelism: bubble math + subprocess equivalence test."""
+import os
+import subprocess
+import sys
+
+from repro.train.pipeline import pipeline_bubble_fraction
+
+
+def test_bubble_fraction():
+    assert pipeline_bubble_fraction(4, 6) == 3 / 9
+    assert pipeline_bubble_fraction(1, 8) == 0.0
+
+
+def test_pipeline_matches_sequential_subprocess():
+    driver = os.path.join(os.path.dirname(__file__), "drivers", "pipeline_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, driver], env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "PIPELINE DRIVER PASS" in res.stdout

@@ -1,0 +1,102 @@
+"""Property-style randomized sweeps over substrate invariants (hypothesis is
+unavailable offline; seeded multi-draw sweeps cover the same ground)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.models.transformer.layers import apply_rope, rmsnorm, softcap
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_segment_softmax_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    n_seg = int(rng.integers(3, 10))
+    E = int(rng.integers(10, 60))
+    ids = jnp.asarray(rng.integers(0, n_seg, E))
+    logits = jnp.asarray(rng.normal(size=(E,)).astype(np.float32))
+    out = segment.segment_softmax(logits, ids, n_seg)
+    for s in range(n_seg):
+        m = np.asarray(ids) == s
+        if m.any():
+            dense = np.exp(np.asarray(logits)[m] - np.asarray(logits)[m].max())
+            dense = dense / dense.sum()
+            np.testing.assert_allclose(np.asarray(out)[m], dense, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_segment_ops_linearity_and_bounds(seed):
+    rng = np.random.default_rng(100 + seed)
+    E, n = 40, 7
+    ids = jnp.asarray(rng.integers(0, n, E))
+    a = jnp.asarray(rng.normal(size=(E, 3)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(E, 3)).astype(np.float32))
+    # sum is linear
+    s = segment.segment_sum(a + 2 * b, ids, n)
+    s2 = segment.segment_sum(a, ids, n) + 2 * segment.segment_sum(b, ids, n)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-5, atol=1e-6)
+    # mean lies within [min, max] of members
+    mean = np.asarray(segment.segment_mean(a, ids, n))
+    for sgi in range(n):
+        m = np.asarray(ids) == sgi
+        if m.any():
+            assert (mean[sgi] <= np.asarray(a)[m].max(0) + 1e-5).all()
+            assert (mean[sgi] >= np.asarray(a)[m].min(0) - 1e-5).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_rope_preserves_norm_and_relative_angles(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 12, 2, 16)).astype(np.float32))
+    pos = jnp.arange(12)[None]
+    y = apply_rope(x, pos, theta=10000.0)
+    # rotations preserve per-head norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(k)x> depends only on p-k
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    def dot_at(p_q, p_k):
+        qq = apply_rope(q, jnp.asarray([[p_q]]), 10000.0)
+        kk = apply_rope(k, jnp.asarray([[p_k]]), 10000.0)
+        return float(jnp.sum(qq * kk))
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(9, 7), rtol=1e-4)
+
+
+def test_softcap_bounds_and_identity():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 30.0)
+    assert float(jnp.abs(y).max()) <= 30.0
+    np.testing.assert_allclose(np.asarray(softcap(x, None)), np.asarray(x))
+    # near zero it is ~identity
+    small = jnp.asarray([-0.5, 0.1, 0.4])
+    np.testing.assert_allclose(np.asarray(softcap(small, 50.0)),
+                               np.asarray(small), rtol=1e-3)
+
+
+def test_rmsnorm_scale_invariance_direction():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    p = {"g": jnp.zeros(16)}
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, 3.7 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.sqrt((np.asarray(y1) ** 2).mean(-1)), 1.0, rtol=1e-3)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_adamw_step_bounded_by_lr(seed):
+    """|update| <= ~lr per coordinate (Adam property), any gradient scale."""
+    rng = np.random.default_rng(seed)
+    cfg = AdamWConfig(schedule=lambda s: jnp.asarray(0.01), clip_norm=None,
+                      weight_decay=0.0)
+    params = {"w": jnp.asarray(rng.normal(size=8).astype(np.float32))}
+    state = init_adamw(params, cfg)
+    g = {"w": jnp.asarray((rng.normal(size=8)
+                           * 10.0 ** float(rng.integers(-3, 4))).astype(np.float32))}
+    new_p, _, _ = adamw_update(g, state, params, cfg)
+    step = np.abs(np.asarray(new_p["w"] - params["w"]))
+    assert (step <= 0.011 + 1e-6).all()

@@ -1,0 +1,15 @@
+"""Ring attention: subprocess exactness test."""
+import os
+import subprocess
+import sys
+
+
+def test_ring_attention_matches_blocked_subprocess():
+    driver = os.path.join(os.path.dirname(__file__), "drivers", "ring_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, driver], env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "RING DRIVER PASS" in res.stdout

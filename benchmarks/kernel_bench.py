@@ -1,6 +1,7 @@
 """Kernel microbenchmarks: us/call of the jnp reference paths on this CPU
 host (the Pallas kernels target TPU; interpret-mode timing is not meaningful)
-plus derived arithmetic intensities from the kernel's tile math.
+plus derived arithmetic intensities from the kernel's tile math, plus the
+xla-vs-fused NMP hot-loop comparison consumed by ``BENCH_segment_agg.json``.
 """
 from __future__ import annotations
 
@@ -16,8 +17,9 @@ from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    # one warmup call: compiles once, and its result tells us how to block
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -25,7 +27,59 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(verbose: bool = True):
+def segment_agg_compare(block_n: int = 32, block_e: int = 64,
+                        hidden: int = 16) -> dict:
+    """xla-vs-fused NMP edge-update+aggregate on a real SEM mesh graph.
+
+    The fused path runs the production Pallas kernels — compiled on TPU,
+    through the interpreter elsewhere (flagged; interpreter timings are not
+    comparable to compiled ones, but the consistency check is exact either
+    way).  Asserts fp32-level agreement of both outputs against the XLA
+    lowering and reports the dst-aligned layout's padding-waste fraction.
+    """
+    from repro.core import box_mesh, partition_mesh
+    from repro.core.consistent_mp import edge_update_aggregate, init_nmp_layer
+    from repro.core.reference import rank_static_inputs
+
+    interpret = jax.default_backend() != "tpu"
+    mesh = box_mesh((4, 4, 2), p=2)
+    pg = partition_mesh(mesh, (1, 1, 1))
+    meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e))
+    meta_r = {k: v[0] for k, v in meta.items()}
+    waste = pg.segment_layout(block_n, block_e)["waste"]
+
+    rng = np.random.default_rng(0)
+    params = init_nmp_layer(jax.random.PRNGKey(0), hidden, 2)
+    x = jnp.asarray(rng.normal(size=(pg.n_pad, hidden)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(pg.e_pad, hidden)), jnp.float32)
+
+    xla_fn = jax.jit(lambda p, x, e: edge_update_aggregate(
+        p, x, e, meta_r, backend="xla"))
+    fused_fn = jax.jit(lambda p, x, e: edge_update_aggregate(
+        p, x, e, meta_r, backend="fused", interpret=interpret,
+        block_n=block_n))
+
+    e_x, a_x = xla_fn(params, x, e)
+    e_f, a_f = fused_fn(params, x, e)
+    err_e = float(jnp.abs(e_x - e_f).max())
+    err_a = float(jnp.abs(a_x - a_f).max())
+    assert err_e < 1e-4 and err_a < 1e-4, (err_e, err_a)
+
+    iters = 3 if interpret else 20
+    xla_us = _time(xla_fn, params, x, e, iters=iters)
+    fused_us = _time(fused_fn, params, x, e, iters=iters)
+    return dict(
+        n_nodes=pg.n_pad, n_edges=pg.e_pad, hidden=hidden,
+        block_n=block_n, block_e=block_e,
+        xla_us=xla_us, fused_us=fused_us,
+        fused_interpret=interpret, backend=jax.default_backend(),
+        layout_waste=waste, max_abs_err_e=err_e, max_abs_err_agg=err_a,
+    )
+
+
+def run(verbose: bool = True, seg_cmp: dict | None = None):
+    """``seg_cmp``: pass a precomputed ``segment_agg_compare()`` payload to
+    avoid re-running the (interpret-mode-slow) comparison twice."""
     rows = []
     rng = np.random.default_rng(0)
 
@@ -56,6 +110,13 @@ def run(verbose: bool = True):
     us = _time(eb, table, idx)
     rows.append(("embedding_bag_ref_4k_bags", us,
                  f"gbytes={(Bb*bag*D2*4)/1e9:.4f}"))
+
+    cmp = seg_cmp if seg_cmp is not None else segment_agg_compare()
+    tag = "interp" if cmp["fused_interpret"] else cmp["backend"]
+    rows.append(("nmp_edge_agg_xla", cmp["xla_us"],
+                 f"waste={cmp['layout_waste']:.3f}"))
+    rows.append((f"nmp_edge_agg_fused_{tag}", cmp["fused_us"],
+                 f"err={max(cmp['max_abs_err_e'], cmp['max_abs_err_agg']):.1e}"))
 
     if verbose:
         for r in rows:

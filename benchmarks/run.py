@@ -1,16 +1,31 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. Run:
+Prints ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + layout
+padding-waste) so future PRs have a perf trajectory to regress against
+(see ``scripts/bench_gate.py``). Run:
     PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
 import sys
+
+
+def write_segment_agg_json(path: str = "BENCH_segment_agg.json") -> dict:
+    """Collect the xla-vs-fused segment-agg comparison and persist it."""
+    from benchmarks.kernel_bench import segment_agg_compare
+    payload = segment_agg_compare()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
 
 
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench)
+    payload = write_segment_agg_json()   # computed once, reused by kernel_bench
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
@@ -18,7 +33,12 @@ def main() -> None:
                        (weak_scaling, "Fig7/8"),
                        (kernel_bench, "kernels")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
-        all_rows += mod.run(verbose=True)
+        kw = dict(seg_cmp=payload) if mod is kernel_bench else {}
+        all_rows += mod.run(verbose=True, **kw)
+    print(f"\nwrote BENCH_segment_agg.json "
+          f"(xla {payload['xla_us']:.0f} us, fused {payload['fused_us']:.0f} us"
+          f"{' [interpret]' if payload['fused_interpret'] else ''}, "
+          f"waste {payload['layout_waste']:.3f})")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,57 @@
+"""Perf gate for the NMP segment-agg hot loop.
+
+Emits ``BENCH_segment_agg.json`` (xla/fused timings + layout padding-waste)
+and, when a baseline file is provided, fails if the fused path regressed by
+more than ``--max-regression``.  Interpreter-mode runs (no TPU attached) are
+recorded but never gated — their timings are not comparable to compiled ones.
+
+Usage:
+    PYTHONPATH=src python scripts/bench_gate.py
+    PYTHONPATH=src python scripts/bench_gate.py --baseline BENCH_segment_agg.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_segment_agg.json")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_segment_agg.json to gate against")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional fused-path slowdown vs baseline")
+    args = ap.parse_args()
+
+    from benchmarks.run import write_segment_agg_json
+    payload = write_segment_agg_json(args.out)
+    print(json.dumps(payload, indent=2, sort_keys=True))
+
+    if not args.baseline or not os.path.exists(args.baseline):
+        return 0
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if payload["fused_interpret"] or base.get("fused_interpret", True):
+        print("gate skipped: interpreter-mode timings are not comparable")
+        return 0
+    limit = base["fused_us"] * (1.0 + args.max_regression)
+    if payload["fused_us"] > limit:
+        print(f"REGRESSION: fused {payload['fused_us']:.0f} us > "
+              f"{limit:.0f} us (baseline {base['fused_us']:.0f} us "
+              f"+{args.max_regression:.0%})")
+        return 1
+    print(f"gate ok: fused {payload['fused_us']:.0f} us "
+          f"(baseline {base['fused_us']:.0f} us)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

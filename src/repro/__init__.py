@@ -2,3 +2,8 @@
 + TPU-pod framework). See README.md / DESIGN.md / EXPERIMENTS.md."""
 
 __version__ = "1.0.0"
+
+from repro import compat as _compat
+
+_compat.install()
+del _compat

@@ -1,0 +1,76 @@
+"""Version-tolerance shims for the JAX API surface this repo targets.
+
+The codebase is written against the post-0.5 public names (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``).  Older
+runtimes (e.g. 0.4.x) ship the same functionality under experimental paths or
+without the newer keyword arguments; :func:`install` patches the gaps in
+place so the rest of the package can use one spelling everywhere.
+
+Installed automatically on ``import repro``; idempotent.  Note this patches
+the global ``jax`` module (deliberate: the test-suite and benchmark code use
+the public spellings directly).  On old JAX the ``axis_types`` argument is
+accepted and ignored — every axis behaves as Auto there, which is the only
+axis type this repo uses.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (added after 0.4.x)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shim_axis_type() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+
+def _shim_make_mesh() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # C-level or exotic callable: leave it be
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # older Mesh has no axis-type concept; all axes "auto"
+        return orig(axis_shapes, axis_names, **kw)
+
+    make_mesh.__doc__ = orig.__doc__
+    jax.make_mesh = make_mesh
+
+
+def _shim_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    sig = inspect.signature(_shard_map).parameters
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kw):
+        # post-0.5 renamed check_rep -> check_vma; translate when targeting
+        # the experimental implementation
+        if "check_vma" in kw and "check_vma" not in sig:
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    shard_map.__doc__ = _shard_map.__doc__
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    """Install every applicable shim (no-op on new-enough JAX)."""
+    _shim_axis_type()
+    _shim_make_mesh()
+    _shim_shard_map()

@@ -46,6 +46,9 @@ def make_gnn_step_fns(
     training loop (AdamW etc.) lives in repro.train and reuses grad_step.
     """
     all_axes = tuple(data_axes) + (graph_axis,)
+    # NMP hot-loop backend from the model config (see repro.core.consistent_mp)
+    backend_kw = dict(backend=cfg.mp_backend, interpret=cfg.mp_interpret,
+                      block_n=cfg.seg_block_n)
 
     def shard_meta(meta):
         """Strip the leading rank axis inside the shard."""
@@ -54,13 +57,15 @@ def make_gnn_step_fns(
     def forward_local(params, x, meta):
         # x arrives as [B_local, 1, N_pad, F] (graph axis sharded to size 1)
         m = shard_meta(meta)
-        y = gnn_forward(params, x[:, 0], m["static_edge_feats"], m, halo)
+        y = gnn_forward(params, x[:, 0], m["static_edge_feats"], m, halo,
+                        **backend_kw)
         return y[:, None]
 
     def loss_local(params, x, y_hat, meta):
         m = shard_meta(meta)
         x, y_hat = x[:, 0], y_hat[:, 0]
-        y = gnn_forward(params, x, m["static_edge_feats"], m, halo)
+        y = gnn_forward(params, x, m["static_edge_feats"], m, halo,
+                        **backend_kw)
         # consistent over the graph axis (Eq. 6), mean over data axes
         loss = consistent_mse(y, y_hat, m["node_inv_mult"], axis_names=(graph_axis,))
         if data_axes:

@@ -30,6 +30,11 @@ class GNNConfig:
     edge_in: int = 7             # F_e
     node_out: int = 3            # F_y
     name: str = "small"
+    # --- NMP hot-loop backend (see repro.core.consistent_mp) ---
+    mp_backend: str = "xla"      # "xla" | "fused" (Pallas kernel)
+    seg_block_n: int = 128       # node rows per fused-kernel block
+    seg_block_e: int = 128       # edge rows per fused-kernel block
+    mp_interpret: bool = False   # run Pallas via interpreter (CPU CI)
 
     @staticmethod
     def small() -> "GNNConfig":
@@ -69,12 +74,21 @@ def gnn_forward(
     static_edge_feats: jnp.ndarray,    # [E_pad, F_e - F_x] (dist vec + mag)
     meta: Dict[str, jnp.ndarray],
     halo: HaloSpec,
+    *,
+    backend: str = "xla",
+    interpret: bool = False,
+    block_n: int = 128,
 ) -> jnp.ndarray:
-    """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y]."""
+    """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y].
+
+    ``backend``/``interpret``/``block_n`` select the NMP 4a+4b implementation
+    (see ``repro.core.consistent_mp``); usually taken from ``GNNConfig``.
+    """
     e_in = build_edge_inputs(x, static_edge_feats, meta)
     h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
     e = nn.mlp(params["edge_enc"], e_in) * meta["edge_mask"][..., None]
     for lp in params["mp"]:
-        h, e = nmp_layer(lp, h, e, meta, halo)
+        h, e = nmp_layer(lp, h, e, meta, halo, backend=backend,
+                         interpret=interpret, block_n=block_n)
     y = nn.mlp(params["node_dec"], h) * meta["node_mask"][..., None]
     return y

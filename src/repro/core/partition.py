@@ -93,6 +93,11 @@ class PartitionedGraphs:
     edge_mask: np.ndarray        # float32 [R, E_pad]
     edge_inv_mult: np.ndarray    # float32 [R, E_pad] (0 on padding)
     halo: HaloPlan
+    # dst-aligned segment layouts for the fused NMP kernel, memoized per
+    # (block_n, block_e) — the host-side sort+pad runs once per partition,
+    # not once per training step
+    _seg_layouts: Dict[Tuple[int, int], dict] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_pad(self) -> int:
@@ -102,10 +107,53 @@ class PartitionedGraphs:
     def e_pad(self) -> int:
         return int(self.edge_src.shape[1])
 
-    def device_arrays(self) -> Dict[str, np.ndarray]:
-        """The dict of arrays a train/serve step consumes (shard over axis 0)."""
+    def segment_layout(self, block_n: int, block_e: int) -> dict:
+        """Cached dst-aligned edge layout for the fused segment-agg kernel.
+
+        Runs ``dst_aligned_layout`` once per rank (padding edges are routed
+        to an out-of-range sentinel so they are dropped from the tiles), pads
+        the per-rank edge-block counts to a common maximum so the stacked
+        arrays shard over the rank axis, and records the padding-waste
+        fraction (fraction of tile slots that hold no real edge).
+
+        Returns {perm [R, NB, NE, BE] int32 (-1 = empty slot),
+                 dstl [R, NB, NE, BE] int32, n_node_blocks, n_edge_blocks,
+                 block_n, block_e, waste}.
+        """
+        key = (int(block_n), int(block_e))
+        cached = self._seg_layouts.get(key)
+        if cached is not None:
+            return cached
+        from repro.kernels.segment_agg.ops import dst_aligned_layout
+        per_rank = []
+        for r in range(self.R):
+            # padded edges get dst = n_pad -> dropped by the layout pass
+            dst = np.where(self.edge_mask[r] > 0, self.edge_dst[r], self.n_pad)
+            per_rank.append(dst_aligned_layout(dst, self.n_pad, block_n, block_e))
+        nb = per_rank[0]["n_node_blocks"]
+        ne = max(l["n_edge_blocks"] for l in per_rank)
+        perm = np.full((self.R, nb, ne, block_e), -1, dtype=np.int32)
+        dstl = np.zeros((self.R, nb, ne, block_e), dtype=np.int32)
+        for r, l in enumerate(per_rank):
+            perm[r, :, :l["n_edge_blocks"]] = l["perm"]
+            dstl[r, :, :l["n_edge_blocks"]] = l["dstl"]
+        n_real = int((perm >= 0).sum())
+        waste = 1.0 - n_real / perm.size if perm.size else 0.0
+        layout = dict(perm=perm, dstl=dstl, n_node_blocks=nb,
+                      n_edge_blocks=ne, block_n=int(block_n),
+                      block_e=int(block_e), waste=waste)
+        self._seg_layouts[key] = layout
+        return layout
+
+    def device_arrays(self, seg_layout: Tuple[int, int] | None = None) -> Dict[str, np.ndarray]:
+        """The dict of arrays a train/serve step consumes (shard over axis 0).
+
+        ``seg_layout=(block_n, block_e)`` additionally includes the cached
+        dst-aligned layout index maps (``seg_perm``/``seg_dstl``) the fused
+        NMP backend consumes.
+        """
         h = self.halo
-        return dict(
+        out = dict(
             node_mask=self.node_mask, node_inv_mult=self.node_inv_mult,
             edge_src=self.edge_src, edge_dst=self.edge_dst,
             edge_mask=self.edge_mask, edge_inv_mult=self.edge_inv_mult,
@@ -114,6 +162,11 @@ class PartitionedGraphs:
             nbr_send_idx=h.nbr_send_idx, nbr_send_mask=h.nbr_send_mask,
             nbr_recv_idx=h.nbr_recv_idx, nbr_recv_mask=h.nbr_recv_mask,
         )
+        if seg_layout is not None:
+            layout = self.segment_layout(*seg_layout)
+            out["seg_perm"] = layout["perm"]
+            out["seg_dstl"] = layout["dstl"]
+        return out
 
 
 # ---------------------------------------------------------------------------

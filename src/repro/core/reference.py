@@ -18,12 +18,19 @@ from repro.core.gnn import GNNConfig, build_edge_inputs
 from repro.core.halo import HaloSpec, halo_sync_reference
 from repro.core.mesh_gen import SEMMesh, edge_features as static_edge_features
 from repro.core.partition import PartitionedGraphs, gather_node_features
-from repro.graph import segment
 
 
-def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray) -> Dict[str, jnp.ndarray]:
-    """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats."""
-    meta = {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}
+def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray,
+                       seg_layout: tuple | None = None) -> Dict[str, jnp.ndarray]:
+    """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats.
+
+    ``seg_layout=(block_n, block_e)`` additionally attaches the cached
+    dst-aligned layout maps (``seg_perm``/``seg_dstl``) for the fused NMP
+    backend — the host-side sort+pad runs once per partition (memoized on
+    ``pg``), not per step.
+    """
+    meta = {k: jnp.asarray(v)
+            for k, v in pg.device_arrays(seg_layout=seg_layout).items()}
     coords_r = gather_node_features(pg, coords)
     ef = []
     for r in range(pg.R):
@@ -38,9 +45,20 @@ def gnn_forward_stacked(
     x: jnp.ndarray,                  # [R, N_pad, F_x]
     meta: Dict[str, jnp.ndarray],    # stacked arrays incl. static_edge_feats
     halo: HaloSpec,
+    *,
+    backend: str = "xla",
+    interpret: bool = False,
+    block_n: int = 128,
 ) -> jnp.ndarray:
-    """Paper GNN forward over all R ranks on one device (reference halo)."""
-    R, n_pad = x.shape[0], x.shape[1]
+    """Paper GNN forward over all R ranks on one device (reference halo).
+
+    The Eq. 4a+4b hot loop goes through the same ``edge_update_aggregate``
+    the production shard_map path uses, so ``backend="fused"`` exercises the
+    Pallas kernel under this single-device oracle too.
+    """
+    from repro.core.consistent_mp import edge_update_aggregate, node_update
+
+    R = x.shape[0]
     hs, es = [], []
     for r in range(R):
         meta_r = {k: v[r] for k, v in meta.items()}
@@ -52,18 +70,17 @@ def gnn_forward_stacked(
     for lp in params["mp"]:
         new_e, aggs = [], []
         for r in range(R):
-            xi, xj = h[r][meta["edge_src"][r]], h[r][meta["edge_dst"][r]]
-            er = e[r] + rnn.mlp(lp["edge"], jnp.concatenate([xi, xj, e[r]], axis=-1))
-            er = er * meta["edge_mask"][r][..., None]
-            w = er * meta["edge_inv_mult"][r][..., None]
-            aggs.append(segment.segment_sum(w, meta["edge_dst"][r], n_pad))
+            meta_r = {k: v[r] for k, v in meta.items()}
+            er, agg_r = edge_update_aggregate(
+                lp, h[r], e[r], meta_r, backend=backend, interpret=interpret,
+                block_n=block_n)
+            aggs.append(agg_r)
             new_e.append(er)
         agg = jnp.stack(aggs)
         if halo.mode != "none":
             agg = halo_sync_reference(agg, meta, halo, combine="sum")
         h = jnp.stack([
-            (h[r] + rnn.mlp(lp["node"], jnp.concatenate([agg[r], h[r]], axis=-1)))
-            * meta["node_mask"][r][..., None]
+            node_update(lp, h[r], agg[r], {k: v[r] for k, v in meta.items()})
             for r in range(R)
         ])
         e = jnp.stack(new_e)
@@ -88,9 +105,13 @@ def loss_and_grad_stacked(
     meta: Dict[str, jnp.ndarray],
     halo: HaloSpec,
     fy: int,
+    backend: str = "xla",
+    interpret: bool = False,
+    block_n: int = 128,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, rnn.Params]:
     def f(p):
-        y = gnn_forward_stacked(p, x, meta, halo)
+        y = gnn_forward_stacked(p, x, meta, halo, backend=backend,
+                                interpret=interpret, block_n=block_n)
         return consistent_loss_stacked(y, y_hat, meta, fy), y
     (loss, y), grads = jax.value_and_grad(f, has_aux=True)(params)
     return loss, y, grads

@@ -81,6 +81,20 @@ def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
     return fn
 
 
+def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
+                     seg_block_n: int = 128, seg_block_e: int = 128):
+    """Host-side static metadata prep for the GNN step functions.
+
+    Wraps ``rank_static_inputs`` and, for the fused NMP backend, attaches the
+    dst-aligned segment layout from the per-partition cache
+    (``PartitionedGraphs.segment_layout``): the O(E log E) sort+pad runs once
+    per partition here — never inside the per-step data path.
+    """
+    from repro.core.reference import rank_static_inputs
+    seg = (seg_block_n, seg_block_e) if backend == "fused" else None
+    return rank_static_inputs(pg, coords, seg_layout=seg)
+
+
 def host_shard(batch, host_id: int, n_hosts: int):
     """Slice a global batch to this host's addressable rows (multi-host IO)."""
     def sl(x):

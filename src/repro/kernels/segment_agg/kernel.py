@@ -16,6 +16,25 @@ and the scatter itself is serialized. TPU-native design here:
 
 Mesh graphs have bounded degree, so dst-aligned padding is tight (measured
 in tests); power-law graphs pay more — reported by the layout pass.
+
+Two generations of kernels live here:
+
+* ``edge_mlp_agg`` — the original forward-only op over pre-gathered
+  ``[E, 3H]`` features (microbenchmark / oracle target);
+* ``nmp_edge_mlp_agg_fwd`` / ``nmp_edge_mlp_agg_bwd`` — the production pair
+  behind ``consistent_mp.nmp_layer(backend="fused")``: node-feature gathers
+  are fused into the kernel (src rows via a one-hot matmul against the full
+  node array in VMEM, dst rows from the streamed ``[BN, H]`` tile — the
+  ``[E, 3H]`` concat never exists in HBM), the full residual edge MLP
+  (first layer computed as three H-slices of w0, hidden ``[H, H]`` stack,
+  LayerNorm) runs on the tile, and the backward kernel re-derives the tile
+  VJP in VMEM (grad-wrt-features = transposed one-hot matmuls, grad-wrt-
+  weights accumulated in VMEM scratch across the grid).
+
+VMEM note: both fused kernels hold the full ``[N_round, H]`` node array (and
+the backward its gradient) in VMEM — fine for per-rank sub-graph sizes this
+repo targets (N_round * H * 4B << 16 MB); shard the graph harder before it
+stops fitting.
 """
 from __future__ import annotations
 
@@ -53,6 +72,282 @@ def _kernel(feats_ref, dstl_ref, wgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
     @pl.when(ej == ne - 1)
     def _flush():
         agg_ref[0] = acc_scr[...].astype(agg_ref.dtype)
+
+
+def _mlp_tail(h, wrest_ref, brest_ref, lng_ref, lnb_ref, *, n_hidden: int,
+              has_ln: bool, eps: float = 1e-5):
+    """Hidden [H,H] stack + optional LayerNorm, mirroring ``nn.mlp`` exactly:
+    ELU after every dense layer except the last, then LN."""
+    for l in range(n_hidden):
+        h = jax.nn.elu(h)
+        h = jax.lax.dot(h, wrest_ref[l].astype(jnp.float32)) + \
+            brest_ref[l].astype(jnp.float32)
+    if has_ln:
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.var(h, axis=-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + eps)
+        h = h * lng_ref[0].astype(jnp.float32) + lnb_ref[0].astype(jnp.float32)
+    return h
+
+
+def _nmp_fwd_kernel(xfull_ref, xdst_ref, e_ref, srcg_ref, dstl_ref, emask_ref,
+                    einv_ref, w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref,
+                    lnb_ref, enew_ref, agg_ref, acc_scr, *, block_n: int,
+                    block_e: int, hidden: int, n_hidden: int, has_ln: bool):
+    """Fused Eq. 4a+4b tile: gather src/dst node rows (one-hot MXU matmuls),
+    run the full residual edge MLP (incl. LayerNorm), mask, and accumulate the
+    1/d_ij-weighted dst-aligned aggregate in VMEM scratch."""
+    ej = pl.program_id(1)
+    ne = pl.num_programs(1)
+
+    @pl.when(ej == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = xfull_ref[...].astype(jnp.float32)               # [N_round, H]
+    xd = xdst_ref[...].astype(jnp.float32)               # [BN, H]
+    et = e_ref[0, 0].astype(jnp.float32)                 # [BE, H]
+    srcg = srcg_ref[0, 0]                                # [BE] in [0, N_round)
+    dstl = dstl_ref[0, 0]                                # [BE] in [0, BN)
+    mask = emask_ref[0, 0]                               # [BE] 1/0
+    wgt = einv_ref[0, 0]                                 # [BE] 1/d_ij (0 pad)
+
+    # src gather: one-hot [BE, N_round] x x — MXU matmul, no HBM gather
+    oh_src = (jax.lax.broadcasted_iota(jnp.int32, (block_e, x.shape[0]), 1)
+              == srcg[:, None]).astype(jnp.float32)
+    xi = jax.lax.dot(oh_src, x)                          # [BE, H]
+    # dst gather stays inside the streamed [BN, H] node tile
+    oh_dst = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
+              == dstl[:, None]).astype(jnp.float32)
+    xj = jax.lax.dot(oh_dst, xd)                         # [BE, H]
+
+    # first dense layer on the *virtual* concat [xi ++ xj ++ e]: three
+    # H-slices of w0 — the [BE, 3H] tensor is never materialized
+    w0 = w0_ref[...].astype(jnp.float32)                 # [3H, H]
+    h = (jax.lax.dot(xi, w0[:hidden]) + jax.lax.dot(xj, w0[hidden:2 * hidden])
+         + jax.lax.dot(et, w0[2 * hidden:]) + b0_ref[0].astype(jnp.float32))
+    h = _mlp_tail(h, wrest_ref, brest_ref, lng_ref, lnb_ref,
+                  n_hidden=n_hidden, has_ln=has_ln)
+
+    e_new = (et + h) * mask[:, None]                     # residual + edge mask
+    enew_ref[0, 0] = e_new.astype(enew_ref.dtype)
+
+    acc_scr[...] += jax.lax.dot_general(
+        oh_dst * wgt[:, None], e_new, (((0,), (0,)), ((), ())))   # [BN, H]
+
+    @pl.when(ej == ne - 1)
+    def _flush():
+        agg_ref[0] = acc_scr[...].astype(agg_ref.dtype)
+
+
+def nmp_edge_mlp_agg_fwd(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest,
+                         brest, lng, lnb, *, block_n: int, block_e: int,
+                         n_hidden: int, has_ln: bool, interpret: bool = False):
+    """Fused NMP forward. ``x``: [N_round, H] node features (N_round = NB*BN);
+    ``e_tiles``: [NB, NE, BE, H] dst-aligned edge tiles; ``srcg``/``dstl``:
+    global-src / block-local-dst ids per slot; ``emask``/``einv``: edge mask
+    and 1/d_ij (both 0 on padding slots).
+
+    Returns (e_new [NB, NE, BE, H], agg [NB, BN, H] fp32).
+    """
+    NB, NE, BE, H = e_tiles.shape
+    Lp = wrest.shape[0]
+    kern = functools.partial(
+        _nmp_fwd_kernel, block_n=block_n, block_e=block_e, hidden=H,
+        n_hidden=n_hidden, has_ln=has_ln)
+    return pl.pallas_call(
+        kern,
+        grid=(NB, NE),
+        in_specs=[
+            pl.BlockSpec((x.shape[0], H), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, H), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_n, H), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, NE, BE, H), e_tiles.dtype),
+            jax.ShapeDtypeStruct((NB, block_n, H), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n, H), jnp.float32)],
+        interpret=interpret,
+    )(x, x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb)
+
+
+def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
+                    w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref, lnb_ref,
+                    genew_ref, gagg_ref,
+                    gx_ref, ge_ref, gw0_ref, gb0_ref, gwrest_ref, gbrest_ref,
+                    glng_ref, glnb_ref,
+                    gx_scr, gw0_scr, gb0_scr, gwrest_scr, gbrest_scr, glng_scr,
+                    glnb_scr, *, block_n: int, block_e: int, hidden: int,
+                    n_hidden: int, has_ln: bool):
+    """Backward of the fused NMP tile: per-tile VJP of the recomputed forward.
+
+    grad-wrt-node-features flows through the transposed one-hot matmuls and is
+    accumulated over the whole grid in a VMEM scratch; grad-wrt-weights
+    accumulates per-tile ``feats^T @ g`` (inside the VJP) in VMEM scratch.
+    Both are flushed to HBM on the final grid step.
+    """
+    ei = pl.program_id(0)
+    ej = pl.program_id(1)
+    last = jnp.logical_and(ei == pl.num_programs(0) - 1,
+                           ej == pl.num_programs(1) - 1)
+
+    @pl.when(jnp.logical_and(ei == 0, ej == 0))
+    def _init():
+        gx_scr[...] = jnp.zeros_like(gx_scr)
+        gw0_scr[...] = jnp.zeros_like(gw0_scr)
+        gb0_scr[...] = jnp.zeros_like(gb0_scr)
+        gwrest_scr[...] = jnp.zeros_like(gwrest_scr)
+        gbrest_scr[...] = jnp.zeros_like(gbrest_scr)
+        glng_scr[...] = jnp.zeros_like(glng_scr)
+        glnb_scr[...] = jnp.zeros_like(glnb_scr)
+
+    n_round = gx_scr.shape[0]
+    srcg = srcg_ref[0, 0]
+    dstl = dstl_ref[0, 0]
+    dstg = dstl + ei * block_n                            # global dst ids
+    mask = emask_ref[0, 0]
+    wgt = einv_ref[0, 0]
+    oh_src = (jax.lax.broadcasted_iota(jnp.int32, (block_e, n_round), 1)
+              == srcg[:, None]).astype(jnp.float32)
+    oh_dstg = (jax.lax.broadcasted_iota(jnp.int32, (block_e, n_round), 1)
+               == dstg[:, None]).astype(jnp.float32)
+    oh_dstl = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
+               == dstl[:, None]).astype(jnp.float32)
+
+    def tile_fwd(x, et, w0, b0, wrest, brest, lng, lnb):
+        # identical arithmetic to _nmp_fwd_kernel (dst gather routed through
+        # the full x so its cotangent lands on the right global rows)
+        xi = jax.lax.dot(oh_src, x)
+        xj = jax.lax.dot(oh_dstg, x)
+        h = (jax.lax.dot(xi, w0[:hidden]) + jax.lax.dot(xj, w0[hidden:2 * hidden])
+             + jax.lax.dot(et, w0[2 * hidden:]) + b0[0])
+        for l in range(n_hidden):
+            h = jax.nn.elu(h)
+            h = jax.lax.dot(h, wrest[l]) + brest[l]
+        if has_ln:
+            mu = jnp.mean(h, axis=-1, keepdims=True)
+            var = jnp.var(h, axis=-1, keepdims=True)
+            h = (h - mu) * jax.lax.rsqrt(var + 1e-5) * lng[0] + lnb[0]
+        e_new = (et + h) * mask[:, None]
+        agg_c = jax.lax.dot_general(oh_dstl * wgt[:, None], e_new,
+                                    (((0,), (0,)), ((), ())))
+        return e_new, agg_c
+
+    args = (xfull_ref[...].astype(jnp.float32),
+            e_ref[0, 0].astype(jnp.float32),
+            w0_ref[...].astype(jnp.float32),
+            b0_ref[...].astype(jnp.float32),
+            wrest_ref[...].astype(jnp.float32),
+            brest_ref[...].astype(jnp.float32),
+            lng_ref[...].astype(jnp.float32),
+            lnb_ref[...].astype(jnp.float32))
+    _, vjp = jax.vjp(tile_fwd, *args)
+    gx, ge, gw0, gb0, gwrest, gbrest, glng, glnb = vjp(
+        (genew_ref[0, 0].astype(jnp.float32),
+         gagg_ref[0].astype(jnp.float32)))
+
+    ge_ref[0, 0] = ge.astype(ge_ref.dtype)
+    gx_scr[...] += gx
+    gw0_scr[...] += gw0
+    gb0_scr[...] += gb0
+    gwrest_scr[...] += gwrest
+    gbrest_scr[...] += gbrest
+    glng_scr[...] += glng
+    glnb_scr[...] += glnb
+
+    @pl.when(last)
+    def _flush():
+        gx_ref[...] = gx_scr[...].astype(gx_ref.dtype)
+        gw0_ref[...] = gw0_scr[...].astype(gw0_ref.dtype)
+        gb0_ref[...] = gb0_scr[...].astype(gb0_ref.dtype)
+        gwrest_ref[...] = gwrest_scr[...].astype(gwrest_ref.dtype)
+        gbrest_ref[...] = gbrest_scr[...].astype(gbrest_ref.dtype)
+        glng_ref[...] = glng_scr[...].astype(glng_ref.dtype)
+        glnb_ref[...] = glnb_scr[...].astype(glnb_ref.dtype)
+
+
+def nmp_edge_mlp_agg_bwd(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest,
+                         brest, lng, lnb, g_enew, g_agg, *, block_n: int,
+                         block_e: int, n_hidden: int, has_ln: bool,
+                         interpret: bool = False):
+    """Backward Pallas kernel for the fused NMP op.
+
+    Returns (g_x [N_round, H], g_e [NB, NE, BE, H], g_w0, g_b0, g_wrest,
+    g_brest, g_lng, g_lnb), all fp32.
+    """
+    NB, NE, BE, H = e_tiles.shape
+    Lp = wrest.shape[0]
+    N = x.shape[0]
+    kern = functools.partial(
+        _nmp_bwd_kernel, block_n=block_n, block_e=block_e, hidden=H,
+        n_hidden=n_hidden, has_ln=has_ln)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kern,
+        grid=(NB, NE),
+        in_specs=[
+            pl.BlockSpec((N, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_n, H), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((N, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, H), f32),
+            jax.ShapeDtypeStruct((NB, NE, BE, H), f32),
+            jax.ShapeDtypeStruct((3 * H, H), f32),
+            jax.ShapeDtypeStruct((1, H), f32),
+            jax.ShapeDtypeStruct((Lp, H, H), f32),
+            jax.ShapeDtypeStruct((Lp, H), f32),
+            jax.ShapeDtypeStruct((1, H), f32),
+            jax.ShapeDtypeStruct((1, H), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((N, H), f32),
+            pltpu.VMEM((3 * H, H), f32),
+            pltpu.VMEM((1, H), f32),
+            pltpu.VMEM((Lp, H, H), f32),
+            pltpu.VMEM((Lp, H), f32),
+            pltpu.VMEM((1, H), f32),
+            pltpu.VMEM((1, H), f32),
+        ],
+        interpret=interpret,
+    )(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
+      g_enew, g_agg)
 
 
 def edge_mlp_agg(feats, dst_local, weights, w1, b1, w2, b2, *,

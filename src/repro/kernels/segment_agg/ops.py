@@ -1,6 +1,22 @@
-"""Host layout pass + jit'd wrapper for the fused segment-aggregation kernel."""
+"""Host layout pass + jit'd wrappers for the fused segment-aggregation kernels.
+
+Two device entry points:
+
+* ``fused_edge_mlp_agg`` — the original forward-only op over pre-gathered
+  ``[E, 3H]`` features (kept as a microbenchmark / oracle target);
+* ``fused_nmp_edge_agg`` — the production op used by
+  ``repro.core.consistent_mp``: node-feature gathers are fused into the
+  kernel (no HBM ``[E, 3H]`` concat), the full residual edge MLP (incl.
+  LayerNorm) runs in VMEM, and a ``jax.custom_vjp`` routes the backward pass
+  through a second Pallas kernel.
+
+The host-side ``dst_aligned_layout`` pass is O(E log E) (one argsort + one
+``searchsorted``) and is cached per partition by
+``repro.core.partition.PartitionedGraphs.segment_layout``.
+"""
 from __future__ import annotations
 
+import functools
 import math
 from typing import Tuple
 
@@ -8,27 +24,45 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_agg.kernel import edge_mlp_agg
+from repro.kernels.segment_agg.kernel import (
+    edge_mlp_agg, nmp_edge_mlp_agg_bwd, nmp_edge_mlp_agg_fwd)
 
 
 def dst_aligned_layout(dst: np.ndarray, n_nodes: int, block_n: int,
                        block_e: int) -> dict:
     """Sort edges by destination and pad per node-block to edge-block
-    multiples. Returns index maps + the padding overhead (waste fraction)."""
-    order = np.argsort(dst, kind="stable")
+    multiples, vectorized (argsort + searchsorted — no per-block scans).
+
+    Edges with ``dst >= n_nodes`` (e.g. padding edges redirected to a
+    sentinel) are dropped from the layout: their slots stay ``-1``.
+
+    Returns index maps (``perm`` -> original edge id, ``dstl`` block-local
+    dst per slot) + the padding overhead (waste fraction).
+    """
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = np.nonzero((dst >= 0) & (dst < n_nodes))[0]
+    order = keep[np.argsort(dst[keep], kind="stable")]
     dst_sorted = dst[order]
-    nb = math.ceil(n_nodes / block_n)
-    per_block_edges = []
-    for i in range(nb):
-        sel = np.nonzero((dst_sorted >= i * block_n) & (dst_sorted < (i + 1) * block_n))[0]
-        per_block_edges.append(sel)
-    ne = max(1, max((math.ceil(len(s) / block_e) for s in per_block_edges), default=1))
-    perm = np.full((nb, ne * block_e), -1, dtype=np.int64)   # -> original edge id
-    for i, sel in enumerate(per_block_edges):
-        perm[i, :len(sel)] = order[sel]
-    waste = 1.0 - (dst.shape[0] / perm.size) if perm.size else 0.0
-    return dict(perm=perm.reshape(nb, ne, block_e), n_node_blocks=nb,
-                n_edge_blocks=ne, waste=waste)
+    nb = math.ceil(max(n_nodes, 1) / block_n)
+    bounds = np.arange(nb + 1, dtype=np.int64) * block_n
+    starts = np.searchsorted(dst_sorted, bounds[:-1], side="left")
+    ends = np.searchsorted(dst_sorted, bounds[1:], side="left")
+    counts = ends - starts
+    max_count = int(counts.max()) if counts.size else 0
+    ne = max(1, math.ceil(max_count / block_e))
+    perm = np.full((nb, ne * block_e), -1, dtype=np.int64)
+    if dst_sorted.size:
+        blk = dst_sorted // block_n
+        col = np.arange(dst_sorted.size, dtype=np.int64) - starts[blk]
+        perm[blk, col] = order
+    waste = 1.0 - (dst_sorted.size / perm.size) if perm.size else 0.0
+    perm = perm.reshape(nb, ne, block_e)
+    dstl = np.where(
+        perm >= 0,
+        dst[np.clip(perm, 0, None)] - np.arange(nb)[:, None, None] * block_n,
+        0).astype(np.int32)
+    return dict(perm=perm, dstl=dstl, n_node_blocks=nb, n_edge_blocks=ne,
+                block_n=int(block_n), block_e=int(block_e), waste=waste)
 
 
 def fused_edge_mlp_agg(feats, dst, weights, w1, b1, w2, b2, layout, *,
@@ -42,8 +76,7 @@ def fused_edge_mlp_agg(feats, dst, weights, w1, b1, w2, b2, layout, *,
     safe = jnp.clip(perm, 0, feats.shape[0] - 1)
     valid = (perm >= 0).astype(feats.dtype)
     tile_feats = feats[safe] * valid[..., None]
-    tile_dstl = (dst[safe] - (jnp.arange(layout["n_node_blocks"])[:, None, None]
-                              * block_n)).astype(jnp.int32)
+    tile_dstl = jnp.asarray(layout["dstl"])
     tile_w = weights[safe] * valid
 
     e_tiles, agg = edge_mlp_agg(tile_feats, tile_dstl, tile_w, w1, b1, w2, b2,
@@ -55,3 +88,132 @@ def fused_edge_mlp_agg(feats, dst, weights, w1, b1, w2, b2, layout, *,
     e_new = e_new.at[safe.reshape(-1)].add(
         e_tiles.reshape(-1, e_tiles.shape[-1]) * valid.reshape(-1, 1))
     return e_new, agg.reshape(-1, agg.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# production fused NMP op (differentiable)
+# ---------------------------------------------------------------------------
+
+def _stack_edge_mlp(params):
+    """``nn.mlp``-style params dict -> stacked kernel operands.
+
+    Returns (w0 [3H,H], b0 [1,H], wrest [Lp,H,H], brest [Lp,H], lng [1,H],
+    lnb [1,H], n_hidden, has_ln).  When the MLP has a single dense layer the
+    hidden stack is a zero dummy (skipped statically inside the kernel).
+    """
+    layers = params["layers"]
+    w0 = layers[0]["w"]
+    b0 = layers[0]["b"][None]
+    hid = w0.shape[1]
+    if len(layers) > 1:
+        wrest = jnp.stack([l["w"] for l in layers[1:]])
+        brest = jnp.stack([l["b"] for l in layers[1:]])
+    else:
+        wrest = jnp.zeros((1, hid, hid), w0.dtype)
+        brest = jnp.zeros((1, hid), w0.dtype)
+    ln = params.get("ln")
+    has_ln = ln is not None
+    if has_ln:
+        lng, lnb = ln["g"][None], ln["b"][None]
+    else:
+        lng = jnp.ones((1, hid), w0.dtype)
+        lnb = jnp.zeros((1, hid), w0.dtype)
+    return w0, b0, wrest, brest, lng, lnb, len(layers) - 1, has_ln
+
+
+_INT_ZERO = functools.partial(np.zeros, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _nmp_core(static, x, e_t, srcg, dstl, emask, einv,
+              w0, b0, wrest, brest, lng, lnb):
+    block_n, block_e, n_hidden, has_ln, interpret = static
+    return nmp_edge_mlp_agg_fwd(
+        x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
+        block_n=block_n, block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
+        interpret=interpret)
+
+
+def _nmp_core_fwd(static, x, e_t, srcg, dstl, emask, einv,
+                  w0, b0, wrest, brest, lng, lnb):
+    out = _nmp_core(static, x, e_t, srcg, dstl, emask, einv,
+                    w0, b0, wrest, brest, lng, lnb)
+    return out, (x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest,
+                 lng, lnb)
+
+
+def _nmp_core_bwd(static, res, g):
+    block_n, block_e, n_hidden, has_ln, interpret = static
+    x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb = res
+    g_enew, g_agg = g
+    gx, ge, gw0, gb0, gwrest, gbrest, glng, glnb = nmp_edge_mlp_agg_bwd(
+        x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
+        g_enew.astype(e_t.dtype), g_agg.astype(jnp.float32),
+        block_n=block_n, block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
+        interpret=interpret)
+    return (gx.astype(x.dtype), ge.astype(e_t.dtype),
+            _INT_ZERO(srcg.shape), _INT_ZERO(dstl.shape),
+            jnp.zeros_like(emask), jnp.zeros_like(einv),
+            gw0.astype(w0.dtype), gb0.astype(b0.dtype),
+            gwrest.astype(wrest.dtype), gbrest.astype(brest.dtype),
+            glng.astype(lng.dtype), glnb.astype(lnb.dtype))
+
+
+_nmp_core.defvjp(_nmp_core_fwd, _nmp_core_bwd)
+
+
+def fused_nmp_edge_agg(x, e, edge_params, perm, dstl, edge_src, edge_mask,
+                       edge_inv_mult, *, block_n: int,
+                       interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused, differentiable Eq. 4a+4b (edge MLP -> weighted aggregate).
+
+    Args:
+      x: [N_pad, H] node features.
+      e: [E_pad, H] edge features (original edge order).
+      edge_params: ``nn.mlp`` params of the edge MLP (consumes 3H).
+      perm: [NB, NE, BE] dst-aligned layout (original edge id per slot, -1 pad).
+      dstl: [NB, NE, BE] block-local dst per slot (0 on padding).
+      edge_src / edge_mask / edge_inv_mult: [E_pad] metadata arrays.
+      block_n: node rows per block — must match the value the layout was
+        built with (checked: the layout's block count must equal
+        ``ceil(N_pad / block_n)``).
+
+    Gradient contract: ``edge_src``/``edge_mask``/``edge_inv_mult`` (and the
+    layout maps) are static graph metadata — the custom VJP returns zero
+    cotangents for them.  (The xla backend would propagate mask/inv-mult
+    gradients if asked; nothing in this repo differentiates graph metadata.)
+
+    Returns (e_new [E_pad, H] == (e + MLP([x_i,x_j,e])) * mask,
+             agg [N_pad, H] == segment_sum(e_new * 1/d_ij, dst)).
+    """
+    n_pad, hid = x.shape
+    nb = perm.shape[0]
+    n_round = nb * block_n
+    if nb != -(-n_pad // block_n):
+        raise ValueError(
+            f"layout has {nb} node blocks but ceil({n_pad}/{block_n}) = "
+            f"{-(-n_pad // block_n)}; was the layout built with a different "
+            "block_n?")
+    w0, b0, wrest, brest, lng, lnb, n_hidden, has_ln = _stack_edge_mlp(edge_params)
+    if w0.shape[0] != 3 * hid:
+        raise ValueError(f"edge MLP consumes {w0.shape[0]} features, expected "
+                         f"3*H = {3 * hid}")
+
+    safe = jnp.clip(perm, 0, e.shape[0] - 1)
+    valid = (perm >= 0)
+    validf = valid.astype(e.dtype)
+    e_t = e[safe] * validf[..., None]
+    srcg = jnp.where(valid, edge_src[safe], 0).astype(jnp.int32)
+    emask_t = (edge_mask[safe] * validf).astype(jnp.float32)
+    einv_t = (edge_inv_mult[safe] * validf).astype(jnp.float32)
+    x_k = jnp.pad(x, ((0, n_round - n_pad), (0, 0)))
+
+    static = (int(block_n), int(perm.shape[-1]), int(n_hidden), bool(has_ln),
+              bool(interpret))
+    e_tiles, agg = _nmp_core(static, x_k, e_t, srcg, dstl, emask_t, einv_t,
+                             w0, b0, wrest, brest, lng, lnb)
+
+    e_new = jnp.zeros_like(e, shape=(e.shape[0], hid))
+    e_new = e_new.at[safe.reshape(-1)].add(
+        (e_tiles * validf[..., None]).reshape(-1, hid))
+    return e_new, agg.reshape(n_round, hid)[:n_pad].astype(e.dtype)

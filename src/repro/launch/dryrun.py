@@ -151,6 +151,8 @@ def run_cell(arch_id: str, shape_id: str, multi_pod: bool, save_hlo: bool = True
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older JAX: one dict per device
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     colls = Counter(COLLECTIVE_RE.findall(txt))
 

@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--halo", default="neighbor", choices=["neighbor", "a2a", "none"])
     ap.add_argument("--model", default="small", choices=["small", "large"])
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--mp-backend", default="xla", choices=["xla", "fused"],
+                    help="NMP hot-loop backend (fused = Pallas kernel)")
+    ap.add_argument("--mp-interpret", action="store_true",
+                    help="run the fused kernels via the Pallas interpreter")
     args = ap.parse_args()
 
     sem = box_mesh(tuple(args.elements), p=args.order)
@@ -45,7 +49,9 @@ def main():
           f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}")
 
     tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
-                       halo_mode=args.halo, ckpt_dir=args.ckpt)
+                       halo_mode=args.halo, ckpt_dir=args.ckpt,
+                       mp_backend=args.mp_backend,
+                       mp_interpret=args.mp_interpret)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg)
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")

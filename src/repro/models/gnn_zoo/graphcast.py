@@ -39,6 +39,9 @@ class GraphCastConfig:
     act_dtype: object = jnp.float32  # bf16 halves activation carries
     edge_parallel_axes: tuple = ()   # 2nd-level edge sharding (psum combine)
     remat_segment: int = 1           # sqrt(L) checkpointing: layers per segment
+    mp_backend: str = "xla"         # NMP 4a+4b backend ("xla" | "fused")
+    seg_block_n: int = 128          # fused-kernel node block
+    mp_interpret: bool = False      # Pallas interpreter (CPU CI)
 
 
 def init_graphcast(key, cfg: GraphCastConfig):
@@ -67,7 +70,9 @@ def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
     def body(carry, p_l):
         hc, ec = carry
         hn, en = nmp_layer(p_l, hc, ec, meta, halo,
-                           edge_parallel_axes=cfg.edge_parallel_axes)
+                           edge_parallel_axes=cfg.edge_parallel_axes,
+                           backend=cfg.mp_backend, interpret=cfg.mp_interpret,
+                           block_n=cfg.seg_block_n)
         return (hn.astype(cfg.act_dtype), en.astype(cfg.act_dtype)), None
 
     seg = cfg.remat_segment

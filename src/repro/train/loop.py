@@ -21,7 +21,7 @@ from repro.core.gnn import GNNConfig, init_gnn
 from repro.core.halo import halo_spec_from_plan
 from repro.core.mesh_gen import SEMMesh, taylor_green_velocity
 from repro.core.partition import PartitionedGraphs, gather_node_features
-from repro.core.reference import rank_static_inputs
+from repro.data.pipeline import prepare_gnn_meta
 from repro.ckpt import checkpoint as ckpt
 from repro.runtime.straggler import StragglerMonitor
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
@@ -37,6 +37,10 @@ class TrainConfig:
     ckpt_every: int = 100
     log_every: int = 20
     seed: int = 0
+    # NMP hot-loop backend override (None = keep the GNNConfig's choice);
+    # see repro.core.consistent_mp for backend semantics
+    mp_backend: Optional[str] = None
+    mp_interpret: bool = False
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -60,8 +64,15 @@ def train_consistent_gnn(
     tcfg: TrainConfig,
 ) -> dict:
     """Full training run; returns history with losses (paper Fig. 6 right)."""
+    if tcfg.mp_backend is not None:
+        cfg = dataclasses.replace(cfg, mp_backend=tcfg.mp_backend,
+                                  mp_interpret=tcfg.mp_interpret)
     spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
-    meta = rank_static_inputs(pg, sem_mesh.coords)
+    # layout pass is cached on pg — one host-side sort+pad per partition,
+    # amortized over every training step
+    meta = prepare_gnn_meta(pg, sem_mesh.coords, backend=cfg.mp_backend,
+                            seg_block_n=cfg.seg_block_n,
+                            seg_block_e=cfg.seg_block_e)
     _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)

@@ -138,6 +138,31 @@ def test_neighbor_rounds_cover_all_pairs():
     assert covered == expect
 
 
+def test_segment_layout_cache_roundtrip():
+    """Layout memoization on PartitionedGraphs: same dict object on re-query,
+    real edges covered exactly once, padding edges dropped, waste recorded."""
+    m = box_mesh((4, 4, 2), p=2)
+    pg = partition_mesh(m, (2, 2, 1))
+    lay = pg.segment_layout(16, 32)
+    assert pg.segment_layout(16, 32) is lay          # cache hit, no recompute
+    assert pg.segment_layout(16, 16) is not lay      # different key
+    perm, dstl = lay["perm"], lay["dstl"]
+    assert perm.shape == (pg.R, lay["n_node_blocks"], lay["n_edge_blocks"], 32)
+    assert 0.0 <= lay["waste"] < 1.0
+    for r in range(pg.R):
+        real = np.sort(perm[r][perm[r] >= 0])
+        np.testing.assert_array_equal(real, np.nonzero(pg.edge_mask[r] > 0)[0])
+        # dstl points inside the owning node block
+        for b in range(lay["n_node_blocks"]):
+            sel = perm[r, b][perm[r, b] >= 0]
+            np.testing.assert_array_equal(
+                dstl[r, b][perm[r, b] >= 0], pg.edge_dst[r][sel] - b * 16)
+    # device_arrays carries the maps through to step metadata
+    meta = pg.device_arrays(seg_layout=(16, 32))
+    np.testing.assert_array_equal(meta["seg_perm"], perm)
+    np.testing.assert_array_equal(meta["seg_dstl"], dstl)
+
+
 def test_gather_scatter_roundtrip():
     m = box_mesh((3, 3), p=2)
     pg = partition_mesh(m, (3, 1))

@@ -1,0 +1,95 @@
+"""Blocking-vs-overlap NMP schedule comparison per rank count.
+
+Times the stacked consistent-GNN forward (xla backend, jit-compiled — real
+compiled timings on any host) under both halo/compute schedules for a sweep
+of partition grids, asserts fp32-level agreement of the losses, and reports
+each partition's interior-edge fraction — the share of Eq. 4a+4b work the
+overlap schedule can hide behind the exchange.  The payload becomes
+``BENCH_halo_overlap.json`` (see ``benchmarks/run.py`` and
+``scripts/bench_gate.py``).
+
+Absolute timings are host-dependent; the gate therefore compares the
+overlap/blocking *ratio* against the committed baseline, which normalizes
+the hardware away.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+GRIDS = ((1, 1, 1), (2, 1, 1), (2, 2, 1), (2, 2, 2))
+
+
+def _time(fn, *args, iters=20):
+    """Min-of-iters wall time (us) — min is far more noise-robust than the
+    mean for micro-timings, which matters for the ratio gate on shared CI
+    hosts."""
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
+    """One case per partition grid: blocking vs overlap stacked forward."""
+    from repro.core import (
+        A2A, NONE, GNNConfig, HaloSpec, box_mesh, gather_node_features,
+        init_gnn, partition_mesh, taylor_green_velocity,
+    )
+    from repro.core.reference import gnn_forward_stacked, rank_static_inputs
+
+    mesh = box_mesh(elements, p=order)
+    cfg = GNNConfig.small()
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x_global = taylor_green_velocity(mesh.coords)
+
+    cases = []
+    for grid in grids:
+        pg = partition_mesh(mesh, grid)
+        meta = rank_static_inputs(pg, mesh.coords, split=True)
+        x = jnp.asarray(gather_node_features(pg, x_global))
+        spec = HaloSpec(mode=NONE if pg.R == 1 else A2A)
+
+        def fwd(schedule):
+            return jax.jit(lambda p, xx: gnn_forward_stacked(
+                p, xx, meta, spec, schedule=schedule))
+
+        f_b, f_o = fwd("blocking"), fwd("overlap")
+        y_b = f_b(params, x)
+        y_o = f_o(params, x)
+        err = float(jnp.abs(y_b - y_o).max())
+        assert err < 1e-4, f"overlap deviates from blocking: {err}"
+        cases.append(dict(
+            ranks=pg.R, grid=list(grid),
+            blocking_us=_time(f_b, params, x),
+            overlap_us=_time(f_o, params, x),
+            interior_frac=pg.interior_split()["interior_frac"],
+            max_abs_err=err,
+        ))
+    return dict(backend=jax.default_backend(), n_nodes=mesh.n_nodes,
+                elements=list(elements), order=order, cases=cases)
+
+
+def run(verbose: bool = True, overlap_payload: dict | None = None):
+    payload = overlap_payload if overlap_payload is not None else overlap_compare()
+    rows = []
+    for c in payload["cases"]:
+        rows.append((f"nmp_blocking_R{c['ranks']}", c["blocking_us"],
+                     f"int_frac={c['interior_frac']:.3f}"))
+        rows.append((f"nmp_overlap_R{c['ranks']}", c["overlap_us"],
+                     f"err={c['max_abs_err']:.1e}"))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]}: {r[1]:.0f} us  ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -2,43 +2,64 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + layout
-padding-waste) so future PRs have a perf trajectory to regress against
-(see ``scripts/bench_gate.py``). Run:
+padding-waste) and ``BENCH_halo_overlap.json`` (blocking-vs-overlap NMP
+schedule timings per rank count) so future PRs have a perf trajectory to
+regress against (see ``scripts/bench_gate.py``). Run:
     PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
 import json
-import sys
 
 
-def write_segment_agg_json(path: str = "BENCH_segment_agg.json") -> dict:
-    """Collect the xla-vs-fused segment-agg comparison and persist it."""
-    from benchmarks.kernel_bench import segment_agg_compare
-    payload = segment_agg_compare()
+def _write_json(path: str, payload: dict) -> dict:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     return payload
 
 
+def write_segment_agg_json(path: str = "BENCH_segment_agg.json") -> dict:
+    """Collect the xla-vs-fused segment-agg comparison and persist it."""
+    from benchmarks.kernel_bench import segment_agg_compare
+    return _write_json(path, segment_agg_compare())
+
+
+def write_halo_overlap_json(path: str = "BENCH_halo_overlap.json") -> dict:
+    """Collect the blocking-vs-overlap schedule comparison and persist it."""
+    from benchmarks.halo_overlap import overlap_compare
+    return _write_json(path, overlap_compare())
+
+
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
-                            partition_stats, weak_scaling, kernel_bench)
+                            partition_stats, weak_scaling, kernel_bench,
+                            halo_overlap)
     payload = write_segment_agg_json()   # computed once, reused by kernel_bench
+    overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
                        (partition_stats, "TableII"),
                        (weak_scaling, "Fig7/8"),
-                       (kernel_bench, "kernels")):
+                       (kernel_bench, "kernels"),
+                       (halo_overlap, "halo-overlap")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
-        kw = dict(seg_cmp=payload) if mod is kernel_bench else {}
+        kw = {}
+        if mod is kernel_bench:
+            kw = dict(seg_cmp=payload)
+        elif mod is halo_overlap:
+            kw = dict(overlap_payload=overlap_payload)
         all_rows += mod.run(verbose=True, **kw)
     print(f"\nwrote BENCH_segment_agg.json "
           f"(xla {payload['xla_us']:.0f} us, fused {payload['fused_us']:.0f} us"
           f"{' [interpret]' if payload['fused_interpret'] else ''}, "
           f"waste {payload['layout_waste']:.3f})")
+    worst = max((c["overlap_us"] / c["blocking_us"]
+                 for c in overlap_payload["cases"]), default=1.0)
+    print(f"wrote BENCH_halo_overlap.json ({len(overlap_payload['cases'])} "
+          f"rank counts, worst overlap/blocking ratio {worst:.2f} on "
+          f"{overlap_payload['backend']})")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -10,7 +10,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import nn
 from repro.core.halo import NONE, HaloSpec
 from repro.core.partition import partition_graph
 from repro.models.gnn_zoo.graphcast import (

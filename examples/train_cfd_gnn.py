@@ -12,7 +12,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 
-import jax
 
 from repro.core import GNNConfig, box_mesh, partition_mesh
 from repro.launch.mesh import make_mesh

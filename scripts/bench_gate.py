@@ -1,13 +1,24 @@
-"""Perf gate for the NMP segment-agg hot loop.
+"""Perf gate for the NMP hot loop and the halo/compute schedule.
 
 Emits ``BENCH_segment_agg.json`` (xla/fused timings + layout padding-waste)
-and, when a baseline file is provided, fails if the fused path regressed by
-more than ``--max-regression``.  Interpreter-mode runs (no TPU attached) are
-recorded but never gated — their timings are not comparable to compiled ones.
+and — when ``--halo-out``/``--halo-baseline`` ask for it —
+``BENCH_halo_overlap.json`` (blocking-vs-overlap schedule timings per rank
+count); with baseline files provided, fails on regressions beyond
+``--max-regression``:
+
+* segment-agg: fused-path wall time vs the baseline's.  Interpreter-mode
+  runs (no TPU attached) are recorded but never gated — interpreted-Pallas
+  timings are not comparable to compiled ones (and comparing them against
+  the compiled XLA path is meaningless, so no xla-vs-fused check either).
+* halo overlap: the overlap/blocking *ratio* per rank count vs the
+  baseline's ratio.  Both schedules compile on any host, and the ratio
+  normalizes hardware differences away, so this gate also runs on CPU CI.
 
 Usage:
     PYTHONPATH=src python scripts/bench_gate.py
-    PYTHONPATH=src python scripts/bench_gate.py --baseline BENCH_segment_agg.json
+    PYTHONPATH=src python scripts/bench_gate.py \
+        --baseline BENCH_segment_agg.json \
+        --halo-baseline BENCH_halo_overlap.json --max-regression 0.3
 """
 from __future__ import annotations
 
@@ -22,35 +33,105 @@ for p in (_REPO, os.path.join(_REPO, "src")):
         sys.path.insert(0, p)
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_segment_agg.json")
-    ap.add_argument("--baseline", default=None,
-                    help="previous BENCH_segment_agg.json to gate against")
-    ap.add_argument("--max-regression", type=float, default=0.25,
-                    help="allowed fractional fused-path slowdown vs baseline")
-    args = ap.parse_args()
-
-    from benchmarks.run import write_segment_agg_json
-    payload = write_segment_agg_json(args.out)
-    print(json.dumps(payload, indent=2, sort_keys=True))
-
-    if not args.baseline or not os.path.exists(args.baseline):
-        return 0
-    with open(args.baseline) as f:
-        base = json.load(f)
+def gate_segment_agg(payload: dict, base: dict, max_regression: float) -> bool:
+    """True iff the fused segment-agg path did not regress. Skips (passes)
+    when either run used the Pallas interpreter."""
     if payload["fused_interpret"] or base.get("fused_interpret", True):
-        print("gate skipped: interpreter-mode timings are not comparable")
-        return 0
-    limit = base["fused_us"] * (1.0 + args.max_regression)
+        print("segment-agg gate skipped: interpreter-mode timings are not "
+              "comparable")
+        return True
+    limit = base["fused_us"] * (1.0 + max_regression)
     if payload["fused_us"] > limit:
         print(f"REGRESSION: fused {payload['fused_us']:.0f} us > "
               f"{limit:.0f} us (baseline {base['fused_us']:.0f} us "
-              f"+{args.max_regression:.0%})")
-        return 1
-    print(f"gate ok: fused {payload['fused_us']:.0f} us "
+              f"+{max_regression:.0%})")
+        return False
+    print(f"segment-agg gate ok: fused {payload['fused_us']:.0f} us "
           f"(baseline {base['fused_us']:.0f} us)")
-    return 0
+    return True
+
+
+def _geomean_ratio(cases, floor: float = 0.0) -> float:
+    ratios = [max(c["overlap_us"] / c["blocking_us"], floor)
+              for c in cases if c["blocking_us"] > 0]
+    if not ratios:
+        return 1.0
+    prod = 1.0
+    for r in ratios:
+        prod *= r
+    return prod ** (1.0 / len(ratios))
+
+
+def gate_halo_overlap(payload: dict, base: dict, max_regression: float) -> bool:
+    """True iff the geometric-mean overlap/blocking ratio across rank counts
+    did not regress vs the baseline's (hardware-normalized, so it gates on
+    CPU CI too).
+
+    Two noise defenses for micro-timings on shared runners: a structural
+    regression (e.g. the overlap schedule accidentally serializing or
+    doubling work) raises the ratio at *every* rank count, so gating the
+    geometric mean averages per-grid noise away; and baseline ratios are
+    floored at 1.0 — sub-1.0 committed ratios are measurement luck, and the
+    allowance should never be tighter than ``1 + max_regression``."""
+    gm_base = _geomean_ratio(base.get("cases", []), floor=1.0)
+    gm_now = _geomean_ratio(payload["cases"])
+    per_grid = ", ".join(
+        f"R={c['ranks']} {c['overlap_us'] / c['blocking_us']:.2f}"
+        for c in payload["cases"] if c["blocking_us"] > 0)
+    limit = gm_base * (1.0 + max_regression)
+    if gm_now > limit:
+        print(f"REGRESSION: overlap/blocking geomean ratio {gm_now:.2f} > "
+              f"{limit:.2f} (baseline {gm_base:.2f} +{max_regression:.0%}; "
+              f"per grid: {per_grid})")
+        return False
+    print(f"halo-overlap gate ok: geomean ratio {gm_now:.2f} "
+          f"(limit {limit:.2f}; per grid: {per_grid})")
+    return True
+
+
+def _load(path: str | None) -> dict | None:
+    if not path or not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_segment_agg.json")
+    ap.add_argument("--halo-out", default=None,
+                    help="where to write BENCH_halo_overlap.json; the halo "
+                         "sweep only runs when this or --halo-baseline is "
+                         "given (keeps the segment-agg-only quick check "
+                         "quick)")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_segment_agg.json to gate against")
+    ap.add_argument("--halo-baseline", default=None,
+                    help="previous BENCH_halo_overlap.json to gate against")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional slowdown vs baseline")
+    args = ap.parse_args()
+
+    # load baselines BEFORE running: --out/--halo-out default to the baseline
+    # paths, so the documented `--baseline BENCH_segment_agg.json` invocation
+    # would otherwise gate the fresh run against itself
+    base = _load(args.baseline)
+    halo_base = _load(args.halo_baseline)
+
+    from benchmarks.run import write_halo_overlap_json, write_segment_agg_json
+    payload = write_segment_agg_json(args.out)
+    print(json.dumps(payload, indent=2, sort_keys=True))
+
+    ok = True
+    if base is not None:
+        ok &= gate_segment_agg(payload, base, args.max_regression)
+    if args.halo_out or args.halo_baseline:
+        halo_payload = write_halo_overlap_json(
+            args.halo_out or "BENCH_halo_overlap.json")
+        print(json.dumps(halo_payload, indent=2, sort_keys=True))
+        if halo_base is not None:
+            ok &= gate_halo_overlap(halo_payload, halo_base, args.max_regression)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.recsys_common import RECSYS_SHAPES
 from repro.launch.mesh import batch_axes_of
@@ -128,7 +128,6 @@ def _make_sparse_push_step(cfg: DLRMConfig, mesh, batch_axes, opt,
     from repro.models.dlrm import dlrm_interact, embedding_bag_local
 
     F, H, D = cfg.n_sparse, cfg.multi_hot, cfg.embed_dim
-    n_model = mesh.shape["model"]
 
     def step_local(state, dense_, sparse_, labels_):
         tables = state["params"]["tables"]          # local rows [rows_loc, D]
@@ -176,7 +175,6 @@ def _make_sparse_push_step(cfg: DLRMConfig, mesh, batch_axes, opt,
         return {"params": new_params, "opt": new_opt}, loss
 
     tspec = P("model", None)
-    mlp_spec = jax.tree.map(lambda _: P(), {"bot": 0, "top": 0})
 
     def step(state, dense_, sparse_, labels_):
         pspecs_local = {"tables": tspec,

@@ -18,12 +18,11 @@ from __future__ import annotations
 import functools
 from typing import Dict, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec
+from repro.core.halo import NEIGHBOR, NONE, HaloSpec
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
 
 GNN_SHAPES: Dict[str, dict] = {
@@ -188,19 +187,16 @@ def build_gnn_dryrun_cell(shape_id: str, mesh: Mesh, *,
         meta, n_pad, e_pad = synthetic_partitioned_meta(
             R, shape["n_nodes"], shape["n_edges"] * 2)
         halo = HaloSpec(mode=halo_mode, axis=graph_axis, perms=xor_rounds(R, 8))
-        batch_axes = ()
     elif kind == "minibatch":
         n_pad, e_pad = _minibatch_pads(shape)
         meta = _block_meta_sds(R, n_pad, e_pad)
         halo = HaloSpec(mode=NONE, axis=graph_axis)
-        batch_axes = ()
     else:  # molecule: per-device block-diagonal batch
         per_dev = max(shape["batch"] // R, 1)
         n_pad = per_dev * shape["n_nodes"]
         e_pad = per_dev * shape["n_edges"]
         meta = _block_meta_sds(R, n_pad, e_pad)
         halo = HaloSpec(mode=NONE, axis=graph_axis)
-        batch_axes = ()
 
     inputs, input_specs = inputs_factory(shape, R, n_pad, e_pad, graph_axis,
                                           edge_parallel=edge_parallel)

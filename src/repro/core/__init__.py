@@ -2,7 +2,7 @@
 from repro.core.gnn import GNNConfig, gnn_forward, init_gnn
 from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync
 from repro.core.consistent_loss import consistent_mse, consistent_node_count, consistent_node_sum
-from repro.core.consistent_mp import init_nmp_layer, nmp_layer
+from repro.core.consistent_mp import BLOCKING, OVERLAP, init_nmp_layer, nmp_layer
 from repro.core.mesh_gen import SEMMesh, box_mesh, gll_points, mesh_graph_edges, taylor_green_velocity
 from repro.core.partition import (
     PartitionedGraphs,

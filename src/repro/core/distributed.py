@@ -15,15 +15,14 @@ sharded over 'graph' (identical for all data replicas).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import nn as rnn
 from repro.core.consistent_loss import consistent_mse
-from repro.core.gnn import GNNConfig, gnn_forward, init_gnn
+from repro.core.gnn import GNNConfig, gnn_forward
 from repro.core.halo import HaloSpec
 
 
@@ -46,9 +45,10 @@ def make_gnn_step_fns(
     training loop (AdamW etc.) lives in repro.train and reuses grad_step.
     """
     all_axes = tuple(data_axes) + (graph_axis,)
-    # NMP hot-loop backend from the model config (see repro.core.consistent_mp)
+    # NMP hot-loop backend + halo/compute schedule from the model config
+    # (see repro.core.consistent_mp)
     backend_kw = dict(backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                      block_n=cfg.seg_block_n)
+                      block_n=cfg.seg_block_n, schedule=cfg.mp_schedule)
 
     def shard_meta(meta):
         """Strip the leading rank axis inside the shard."""
@@ -80,8 +80,6 @@ def make_gnn_step_fns(
         # pmean over every axis therefore yields exactly dL/d theta.
         grads = jax.tree.map(lambda g: jax.lax.pmean(g, all_axes), grads)
         return loss, grads
-
-    meta_in_specs = None  # bound at call time (dict structure varies)
 
     def _wrap(fn, out_specs, n_feature_args):
         def call(params, *args):

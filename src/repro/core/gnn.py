@@ -35,6 +35,7 @@ class GNNConfig:
     seg_block_n: int = 128       # node rows per fused-kernel block
     seg_block_e: int = 128       # edge rows per fused-kernel block
     mp_interpret: bool = False   # run Pallas via interpreter (CPU CI)
+    mp_schedule: str = "blocking"  # "blocking" | "overlap" (halo/compute)
 
     @staticmethod
     def small() -> "GNNConfig":
@@ -78,17 +79,20 @@ def gnn_forward(
     backend: str = "xla",
     interpret: bool = False,
     block_n: int = 128,
+    schedule: str = "blocking",
 ) -> jnp.ndarray:
     """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y].
 
-    ``backend``/``interpret``/``block_n`` select the NMP 4a+4b implementation
-    (see ``repro.core.consistent_mp``); usually taken from ``GNNConfig``.
+    ``backend``/``interpret``/``block_n``/``schedule`` select the NMP 4a+4b
+    implementation and the halo/compute schedule (see
+    ``repro.core.consistent_mp``); usually taken from ``GNNConfig``.
     """
     e_in = build_edge_inputs(x, static_edge_feats, meta)
     h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
     e = nn.mlp(params["edge_enc"], e_in) * meta["edge_mask"][..., None]
     for lp in params["mp"]:
         h, e = nmp_layer(lp, h, e, meta, halo, backend=backend,
-                         interpret=interpret, block_n=block_n)
+                         interpret=interpret, block_n=block_n,
+                         schedule=schedule)
     y = nn.mlp(params["node_dec"], h) * meta["node_mask"][..., None]
     return y

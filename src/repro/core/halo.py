@@ -26,7 +26,7 @@ a beyond-paper optimization measured in EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -31,7 +31,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.mesh_gen import SEMMesh, mesh_graph_edges, undirected_to_directed
+from repro.core.mesh_gen import SEMMesh, undirected_to_directed
 
 
 # ---------------------------------------------------------------------------
@@ -94,10 +94,14 @@ class PartitionedGraphs:
     edge_inv_mult: np.ndarray    # float32 [R, E_pad] (0 on padding)
     halo: HaloPlan
     # dst-aligned segment layouts for the fused NMP kernel, memoized per
-    # (block_n, block_e) — the host-side sort+pad runs once per partition,
-    # not once per training step
-    _seg_layouts: Dict[Tuple[int, int], dict] = dataclasses.field(
+    # (block_n, block_e, part) — the host-side sort+pad runs once per
+    # partition, not once per training step
+    _seg_layouts: Dict[Tuple[int, int, str], dict] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # interior/boundary edge classification for the overlap schedule,
+    # memoized (host-side, one pass per partition)
+    _int_split: dict | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_pad(self) -> int:
@@ -107,7 +111,63 @@ class PartitionedGraphs:
     def e_pad(self) -> int:
         return int(self.edge_src.shape[1])
 
-    def segment_layout(self, block_n: int, block_e: int) -> dict:
+    def interior_split(self) -> dict:
+        """Cached interior/boundary classification (overlap-schedule support).
+
+        A node is *boundary* when a coincident copy lives on another rank
+        (it appears in some halo send buffer); an edge is *boundary* when its
+        destination is a boundary node — its aggregate contribution feeds the
+        halo exchange. Interior edges land only on rows the exchange never
+        reads or writes, which is what makes the overlap schedule
+        arithmetically identical to the blocking one
+        (``halo_sync(agg_bnd) + agg_int == halo_sync(agg_bnd + agg_int)``).
+
+        Returns stacked [R, ...] arrays:
+          node_bnd_mask  [R, N_pad]  1.0 on boundary nodes;
+          edge_bnd_mask / edge_int_mask [R, E_pad] disjoint split of
+            edge_mask;
+          edge_bnd_idx / edge_int_idx [R, EB] / [R, EI] compacted edge-id
+            lists (0 on padding) with edge_bnd_valid / edge_int_valid masks —
+            the xla backend gathers each sub-problem through these;
+          interior_frac  fraction of real edges that are interior (the share
+            of Eq. 4a+4b work overlappable with the exchange).
+        """
+        if self._int_split is not None:
+            return self._int_split
+        h = self.halo
+        node_bnd = np.zeros((self.R, self.n_pad), dtype=np.float32)
+        for r in range(self.R):
+            sent = h.a2a_send_idx[r][h.a2a_send_mask[r] > 0]
+            node_bnd[r, sent] = 1.0
+        node_bnd *= self.node_mask
+        edge_bnd = np.take_along_axis(node_bnd, self.edge_dst, axis=1) \
+            * self.edge_mask
+        edge_int = self.edge_mask - edge_bnd
+
+        def compact(mask):
+            ids = [np.nonzero(mask[r] > 0)[0] for r in range(self.R)]
+            width = _round_up(max((i.size for i in ids), default=1), 8)
+            idx = np.zeros((self.R, width), dtype=np.int32)
+            valid = np.zeros((self.R, width), dtype=np.float32)
+            for r, i in enumerate(ids):
+                idx[r, :i.size] = i
+                valid[r, :i.size] = 1.0
+            return idx, valid
+
+        bnd_idx, bnd_valid = compact(edge_bnd)
+        int_idx, int_valid = compact(edge_int)
+        n_real = float(self.edge_mask.sum())
+        self._int_split = dict(
+            node_bnd_mask=node_bnd,
+            edge_bnd_mask=edge_bnd, edge_int_mask=edge_int,
+            edge_bnd_idx=bnd_idx, edge_bnd_valid=bnd_valid,
+            edge_int_idx=int_idx, edge_int_valid=int_valid,
+            interior_frac=float(edge_int.sum()) / n_real if n_real else 0.0,
+        )
+        return self._int_split
+
+    def segment_layout(self, block_n: int, block_e: int,
+                       part: str = "all") -> dict:
         """Cached dst-aligned edge layout for the fused segment-agg kernel.
 
         Runs ``dst_aligned_layout`` once per rank (padding edges are routed
@@ -116,19 +176,30 @@ class PartitionedGraphs:
         arrays shard over the rank axis, and records the padding-waste
         fraction (fraction of tile slots that hold no real edge).
 
+        ``part`` restricts the layout to one side of the interior/boundary
+        split (``"int"`` | ``"bnd"``, see :meth:`interior_split`) — the
+        overlap schedule runs the fused kernel once per side, so each side's
+        layout must drop the other side's edges.
+
         Returns {perm [R, NB, NE, BE] int32 (-1 = empty slot),
                  dstl [R, NB, NE, BE] int32, n_node_blocks, n_edge_blocks,
                  block_n, block_e, waste}.
         """
-        key = (int(block_n), int(block_e))
+        key = (int(block_n), int(block_e), part)
         cached = self._seg_layouts.get(key)
         if cached is not None:
             return cached
         from repro.kernels.segment_agg.ops import dst_aligned_layout
+        if part == "all":
+            keep = self.edge_mask
+        elif part in ("int", "bnd"):
+            keep = self.interior_split()[f"edge_{part}_mask"]
+        else:
+            raise ValueError(f"unknown layout part {part!r}")
         per_rank = []
         for r in range(self.R):
-            # padded edges get dst = n_pad -> dropped by the layout pass
-            dst = np.where(self.edge_mask[r] > 0, self.edge_dst[r], self.n_pad)
+            # excluded edges get dst = n_pad -> dropped by the layout pass
+            dst = np.where(keep[r] > 0, self.edge_dst[r], self.n_pad)
             per_rank.append(dst_aligned_layout(dst, self.n_pad, block_n, block_e))
         nb = per_rank[0]["n_node_blocks"]
         ne = max(l["n_edge_blocks"] for l in per_rank)
@@ -145,12 +216,19 @@ class PartitionedGraphs:
         self._seg_layouts[key] = layout
         return layout
 
-    def device_arrays(self, seg_layout: Tuple[int, int] | None = None) -> Dict[str, np.ndarray]:
+    def device_arrays(self, seg_layout: Tuple[int, int] | None = None,
+                      split: bool = False) -> Dict[str, np.ndarray]:
         """The dict of arrays a train/serve step consumes (shard over axis 0).
 
         ``seg_layout=(block_n, block_e)`` additionally includes the cached
         dst-aligned layout index maps (``seg_perm``/``seg_dstl``) the fused
         NMP backend consumes.
+
+        ``split=True`` attaches the interior/boundary edge split
+        (:meth:`interior_split`) consumed by ``nmp_layer(schedule="overlap")``
+        — the compacted ``edge_{bnd,int}_idx``/``_valid`` index lists for the
+        xla backend and, when ``seg_layout`` is also given, the per-side
+        fused layouts ``seg_perm_{bnd,int}``/``seg_dstl_{bnd,int}``.
         """
         h = self.halo
         out = dict(
@@ -166,6 +244,16 @@ class PartitionedGraphs:
             layout = self.segment_layout(*seg_layout)
             out["seg_perm"] = layout["perm"]
             out["seg_dstl"] = layout["dstl"]
+        if split:
+            sp = self.interior_split()
+            for k in ("edge_bnd_idx", "edge_bnd_valid",
+                      "edge_int_idx", "edge_int_valid"):
+                out[k] = sp[k]
+            if seg_layout is not None:
+                for part in ("bnd", "int"):
+                    lay = self.segment_layout(*seg_layout, part=part)
+                    out[f"seg_perm_{part}"] = lay["perm"]
+                    out[f"seg_dstl_{part}"] = lay["dstl"]
         return out
 
 
@@ -198,7 +286,6 @@ def partition_elements(mesh: SEMMesh, rank_grid: Sequence[int]) -> np.ndarray:
 
 def from_element_partition(mesh: SEMMesh, elem2rank: np.ndarray, R: int) -> List[RankGraph]:
     """Build per-rank reduced local graphs (Fig. 3c) from an element partition."""
-    und = mesh_graph_edges(mesh)                     # [m, 2] global undirected, dedup
     # per-element undirected edge list (same generator, but per rank subset)
     from repro.core.mesh_gen import element_lattice_edges
     le = element_lattice_edges(mesh.p, mesh.dim)

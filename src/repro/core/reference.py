@@ -14,23 +14,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import nn as rnn
-from repro.core.gnn import GNNConfig, build_edge_inputs
+from repro.core.gnn import build_edge_inputs
 from repro.core.halo import HaloSpec, halo_sync_reference
-from repro.core.mesh_gen import SEMMesh, edge_features as static_edge_features
+from repro.core.mesh_gen import edge_features as static_edge_features
 from repro.core.partition import PartitionedGraphs, gather_node_features
 
 
 def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray,
-                       seg_layout: tuple | None = None) -> Dict[str, jnp.ndarray]:
+                       seg_layout: tuple | None = None,
+                       split: bool = False) -> Dict[str, jnp.ndarray]:
     """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats.
 
     ``seg_layout=(block_n, block_e)`` additionally attaches the cached
     dst-aligned layout maps (``seg_perm``/``seg_dstl``) for the fused NMP
     backend — the host-side sort+pad runs once per partition (memoized on
     ``pg``), not per step.
+
+    ``split=True`` attaches the interior/boundary edge split the overlap
+    schedule consumes (see ``PartitionedGraphs.interior_split``).
     """
     meta = {k: jnp.asarray(v)
-            for k, v in pg.device_arrays(seg_layout=seg_layout).items()}
+            for k, v in pg.device_arrays(seg_layout=seg_layout,
+                                         split=split).items()}
     coords_r = gather_node_features(pg, coords)
     ef = []
     for r in range(pg.R):
@@ -49,14 +54,20 @@ def gnn_forward_stacked(
     backend: str = "xla",
     interpret: bool = False,
     block_n: int = 128,
+    schedule: str = "blocking",
 ) -> jnp.ndarray:
     """Paper GNN forward over all R ranks on one device (reference halo).
 
     The Eq. 4a+4b hot loop goes through the same ``edge_update_aggregate``
     the production shard_map path uses, so ``backend="fused"`` exercises the
-    Pallas kernel under this single-device oracle too.
+    Pallas kernel under this single-device oracle too.  ``schedule="overlap"``
+    runs the interior/boundary split with the exchange restricted to the
+    boundary partial aggregate — the same dataflow the production overlap
+    path hides communication behind (``meta`` then needs the split arrays
+    from ``rank_static_inputs(..., split=True)``).
     """
-    from repro.core.consistent_mp import edge_update_aggregate, node_update
+    from repro.core.consistent_mp import (
+        edge_update_aggregate, edge_update_aggregate_part, node_update)
 
     R = x.shape[0]
     hs, es = [], []
@@ -67,18 +78,38 @@ def gnn_forward_stacked(
         es.append(rnn.mlp(params["edge_enc"], e_in) * meta_r["edge_mask"][..., None])
     h, e = jnp.stack(hs), jnp.stack(es)
 
+    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n)
     for lp in params["mp"]:
-        new_e, aggs = [], []
-        for r in range(R):
-            meta_r = {k: v[r] for k, v in meta.items()}
-            er, agg_r = edge_update_aggregate(
-                lp, h[r], e[r], meta_r, backend=backend, interpret=interpret,
-                block_n=block_n)
-            aggs.append(agg_r)
-            new_e.append(er)
-        agg = jnp.stack(aggs)
-        if halo.mode != "none":
-            agg = halo_sync_reference(agg, meta, halo, combine="sum")
+        if schedule == "overlap":
+            e_bnd, agg_bnd, e_int, agg_int = [], [], [], []
+            for r in range(R):
+                meta_r = {k: v[r] for k, v in meta.items()}
+                eb, ab = edge_update_aggregate_part(
+                    lp, h[r], e[r], meta_r, "bnd", **part_kw)
+                ei, ai = edge_update_aggregate_part(
+                    lp, h[r], e[r], meta_r, "int", **part_kw)
+                e_bnd.append(eb)
+                agg_bnd.append(ab)
+                e_int.append(ei)
+                agg_int.append(ai)
+            agg = jnp.stack(agg_bnd)
+            if halo.mode != "none":
+                agg = halo_sync_reference(agg, meta, halo, combine="sum")
+            agg = agg + jnp.stack(agg_int)
+            new_e = [b + i for b, i in zip(e_bnd, e_int)]
+        elif schedule == "blocking":
+            new_e, aggs = [], []
+            for r in range(R):
+                meta_r = {k: v[r] for k, v in meta.items()}
+                er, agg_r = edge_update_aggregate(
+                    lp, h[r], e[r], meta_r, **part_kw)
+                aggs.append(agg_r)
+                new_e.append(er)
+            agg = jnp.stack(aggs)
+            if halo.mode != "none":
+                agg = halo_sync_reference(agg, meta, halo, combine="sum")
+        else:
+            raise ValueError(f"unknown NMP schedule {schedule!r}")
         h = jnp.stack([
             node_update(lp, h[r], agg[r], {k: v[r] for k, v in meta.items()})
             for r in range(R)
@@ -108,10 +139,12 @@ def loss_and_grad_stacked(
     backend: str = "xla",
     interpret: bool = False,
     block_n: int = 128,
+    schedule: str = "blocking",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, rnn.Params]:
     def f(p):
         y = gnn_forward_stacked(p, x, meta, halo, backend=backend,
-                                interpret=interpret, block_n=block_n)
+                                interpret=interpret, block_n=block_n,
+                                schedule=schedule)
         return consistent_loss_stacked(y, y_hat, meta, fy), y
     (loss, y), grads = jax.value_and_grad(f, has_aux=True)(params)
     return loss, y, grads

@@ -82,17 +82,23 @@ def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
 
 
 def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
-                     seg_block_n: int = 128, seg_block_e: int = 128):
+                     seg_block_n: int = 128, seg_block_e: int = 128,
+                     schedule: str = "blocking"):
     """Host-side static metadata prep for the GNN step functions.
 
     Wraps ``rank_static_inputs`` and, for the fused NMP backend, attaches the
     dst-aligned segment layout from the per-partition cache
     (``PartitionedGraphs.segment_layout``): the O(E log E) sort+pad runs once
     per partition here — never inside the per-step data path.
+
+    ``schedule="overlap"`` additionally attaches the cached interior/boundary
+    edge split (and, for the fused backend, the per-side layouts) consumed
+    by ``nmp_layer(schedule="overlap")``.
     """
     from repro.core.reference import rank_static_inputs
     seg = (seg_block_n, seg_block_e) if backend == "fused" else None
-    return rank_static_inputs(pg, coords, seg_layout=seg)
+    return rank_static_inputs(pg, coords, seg_layout=seg,
+                              split=schedule == "overlap")
 
 
 def host_shard(batch, host_id: int, n_hosts: int):

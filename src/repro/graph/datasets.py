@@ -7,8 +7,6 @@ Taylor-Green CFD snapshots used by the paper reproduction.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import numpy as np
 
 

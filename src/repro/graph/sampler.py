@@ -98,7 +98,6 @@ def sample_block(g: CSRGraph, seeds: np.ndarray, fanouts: Sequence[int],
 
 def block_meta(block: SampledBlock) -> dict:
     """meta dict compatible with the message-passing layers (no halo)."""
-    n_pad = block.node_ids.shape[0]
     return dict(
         node_mask=block.node_mask,
         node_inv_mult=block.seed_mask,       # loss over seeds only

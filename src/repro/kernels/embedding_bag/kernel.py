@@ -11,8 +11,6 @@ scratch, flushed on the last bag element.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

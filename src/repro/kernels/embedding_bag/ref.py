@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the embedding-bag kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

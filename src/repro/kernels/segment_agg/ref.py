@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def edge_mlp_agg_ref(feats, w1, b1, w2, b2, dst, weights, n_nodes: int):

@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCHS, assigned_archs, family_of, get_arch
+from repro.configs import assigned_archs, family_of, get_arch
 from repro.launch.mesh import batch_axes_of, make_production_mesh
-from repro.sharding import named_shardings
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "runs" / "dryrun"
 

@@ -29,6 +29,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
+    # the batching queue pads the last group up to --batch with empty
+    # requests; that covers any positive request count, nothing else
+    for name in ("requests", "batch", "prompt_len", "gen"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1, got "
+                     f"{getattr(args, name)}")
 
     mod, family = get_arch(args.arch)
     assert family == "lm", "serving launcher drives LM archs"
@@ -43,7 +49,6 @@ def main():
     rng = np.random.default_rng(0)
     pending = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
-    done = 0
     t0 = time.perf_counter()
     while pending:
         group, pending = pending[:args.batch], pending[args.batch:]
@@ -55,7 +60,6 @@ def main():
         for i in range(args.gen - 1):
             logits, cache = decode(params, cache, tok, jnp.int32(args.prompt_len + i))
             tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
-        done += min(args.batch, args.requests - done)
     dt = time.perf_counter() - t0
     tput = args.requests * args.gen / dt
     print(f"served {args.requests} requests x {args.gen} tokens in {dt:.2f}s "

@@ -38,6 +38,10 @@ def main():
                     help="NMP hot-loop backend (fused = Pallas kernel)")
     ap.add_argument("--mp-interpret", action="store_true",
                     help="run the fused kernels via the Pallas interpreter")
+    ap.add_argument("--mp-schedule", default="blocking",
+                    choices=["blocking", "overlap"],
+                    help="halo/compute schedule (overlap hides the exchange "
+                         "behind interior-edge work)")
     args = ap.parse_args()
 
     sem = box_mesh(tuple(args.elements), p=args.order)
@@ -51,7 +55,8 @@ def main():
     tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
                        halo_mode=args.halo, ckpt_dir=args.ckpt,
                        mp_backend=args.mp_backend,
-                       mp_interpret=args.mp_interpret)
+                       mp_interpret=args.mp_interpret,
+                       mp_schedule=args.mp_schedule)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg)
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")

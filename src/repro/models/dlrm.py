@@ -12,15 +12,14 @@ batched dot + top-k (no loops).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro import nn
-from repro.sharding import L, split_tree
+from repro.sharding import L
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +136,6 @@ def dlrm_forward(params, dense: jnp.ndarray, sparse_idx: jnp.ndarray,
                  model_axis: str = "model"):
     """dense: [B, n_dense]; sparse_idx: [B, n_sparse, multi_hot] global row ids
     (field offsets already applied). Returns logits [B, 1]."""
-    B = dense.shape[0]
     F, H = cfg.n_sparse, cfg.multi_hot
 
     def lookup_local(table, idx):

@@ -14,7 +14,7 @@ Two operating modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 import jax
@@ -42,6 +42,7 @@ class GraphCastConfig:
     mp_backend: str = "xla"         # NMP 4a+4b backend ("xla" | "fused")
     seg_block_n: int = 128          # fused-kernel node block
     mp_interpret: bool = False      # Pallas interpreter (CPU CI)
+    mp_schedule: str = "blocking"   # halo/compute schedule ("blocking" | "overlap")
 
 
 def init_graphcast(key, cfg: GraphCastConfig):
@@ -72,7 +73,7 @@ def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
         hn, en = nmp_layer(p_l, hc, ec, meta, halo,
                            edge_parallel_axes=cfg.edge_parallel_axes,
                            backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                           block_n=cfg.seg_block_n)
+                           block_n=cfg.seg_block_n, schedule=cfg.mp_schedule)
         return (hn.astype(cfg.act_dtype), en.astype(cfg.act_dtype)), None
 
     seg = cfg.remat_segment

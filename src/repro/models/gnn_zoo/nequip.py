@@ -22,7 +22,6 @@ from repro.core.halo import HaloSpec, halo_sync
 from repro.graph import segment
 from repro.models.gnn_zoo import irreps as ir
 from repro.sharding import split_tree
-from repro import nn
 
 
 @dataclasses.dataclass(frozen=True)

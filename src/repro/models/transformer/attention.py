@@ -17,7 +17,6 @@ psum combine ("distributed flash-decode") — O(S) per step, any head count.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -126,7 +125,6 @@ def attention_seq_parallel(
 ) -> jnp.ndarray:
     """Context-parallel blocked attention: Q seq-sharded over 'model',
     K/V all-gathered inside the shard (one tiled all-gather per layer)."""
-    n_model = mesh.shape["model"]
 
     def local(qs, ks, vs):
         ks = jax.lax.all_gather(ks, "model", axis=1, tiled=True)
@@ -229,7 +227,6 @@ def decode_attention_sharded(
         B, Hkv, G, Dv = out.shape[0], out.shape[1], out.shape[2], out.shape[3]
         return out.reshape(B, Hkv * G, Dv).astype(v_cache.dtype), kc, vc
 
-    bspec = P(batch_axes, *([None] * 2))
     cspec = P(batch_axes, seq_axes, None, None)
     return jax.shard_map(
         local, mesh=mesh,

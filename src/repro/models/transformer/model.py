@@ -23,7 +23,7 @@ from repro.models.transformer.layers import (
     apply_rope, ffn, init_ffn, init_rmsnorm, rmsnorm, softcap,
 )
 from repro.models.transformer.moe import init_moe, moe_ffn
-from repro.sharding import L, Rules, shard_act, split_tree, stack_dims
+from repro.sharding import L, Rules, shard_act, stack_dims
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +160,6 @@ def attn_block(p, x, cfg: TransformerConfig, ctx: ParallelCtx, window):
     if cfg.mla is not None:
         q, k, v, _, _ = _qkv_mla(p, x, cfg, positions)
         scale = cfg.mla.qk_dim ** -0.5
-        vd = cfg.mla.v_dim
     else:
         q, k, v = _qkv_gqa(p, x, cfg, positions)
         scale = cfg.head_dim ** -0.5

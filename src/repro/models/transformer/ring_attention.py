@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.models.transformer.attention import blocked_attention
 
 
 def ring_attention(

@@ -5,15 +5,13 @@ multi-pod dry-run consume.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.models.transformer.config import TransformerConfig
 from repro.models.transformer.model import (
-    ParallelCtx, cache_specs, decode_step, forward, init_cache,
+    ParallelCtx, cache_specs, decode_step, init_cache,
     init_transformer, lm_loss, prefill_step,
 )
 from repro.sharding import split_tree

@@ -11,7 +11,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.roofline.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS, analyze
+from repro.roofline.hlo_analysis import analyze
 
 ROOT = Path(__file__).resolve().parents[3]
 

@@ -15,8 +15,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional
 
-import jax
-
 from repro.ckpt import checkpoint as ckpt
 from repro.runtime.straggler import StragglerMonitor
 

@@ -8,14 +8,12 @@ consistency benchmark.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import nn as rnn
 from repro.core.distributed import make_gnn_step_fns, shard_inputs
 from repro.core.gnn import GNNConfig, init_gnn
 from repro.core.halo import halo_spec_from_plan
@@ -37,10 +35,11 @@ class TrainConfig:
     ckpt_every: int = 100
     log_every: int = 20
     seed: int = 0
-    # NMP hot-loop backend override (None = keep the GNNConfig's choice);
-    # see repro.core.consistent_mp for backend semantics
+    # NMP hot-loop backend / schedule overrides (None = keep the GNNConfig's
+    # choice); see repro.core.consistent_mp for backend/schedule semantics
     mp_backend: Optional[str] = None
     mp_interpret: bool = False
+    mp_schedule: Optional[str] = None
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -67,12 +66,15 @@ def train_consistent_gnn(
     if tcfg.mp_backend is not None:
         cfg = dataclasses.replace(cfg, mp_backend=tcfg.mp_backend,
                                   mp_interpret=tcfg.mp_interpret)
+    if tcfg.mp_schedule is not None:
+        cfg = dataclasses.replace(cfg, mp_schedule=tcfg.mp_schedule)
     spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
-    # layout pass is cached on pg — one host-side sort+pad per partition,
-    # amortized over every training step
+    # layout + interior/boundary split passes are cached on pg — one
+    # host-side pass per partition, amortized over every training step
     meta = prepare_gnn_meta(pg, sem_mesh.coords, backend=cfg.mp_backend,
                             seg_block_n=cfg.seg_block_n,
-                            seg_block_e=cfg.seg_block_e)
+                            seg_block_e=cfg.seg_block_e,
+                            schedule=cfg.mp_schedule)
     _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)

@@ -57,7 +57,8 @@ class AdamWConfig:
 
 
 def init_adamw(params, cfg: AdamWConfig):
-    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -19,7 +19,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import nn as rnn
 from repro.core import (
     A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn,
     partition_mesh, gather_node_features, taylor_green_velocity,

@@ -4,7 +4,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.launch.mesh import make_mesh

@@ -14,14 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn,
+    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn,
     partition_mesh, partition_graph, gather_node_features, taylor_green_velocity,
 )
-from repro.core.halo import halo_spec_from_plan, halo_sync_reference
-from repro.core.reference import (
-    consistent_loss_stacked, gnn_forward_stacked, loss_and_grad_stacked,
-    rank_static_inputs,
-)
+from repro.core.halo import halo_sync_reference
+from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
 from repro.core.partition import scatter_node_outputs
 
 
@@ -196,6 +193,93 @@ def test_fused_backend_partition_invariance():
     l4, y4 = ev((2, 2, 1), A2A)
     assert abs(l4 - l1) < 2e-6 * max(1.0, abs(l1))
     np.testing.assert_allclose(y4, y1, rtol=3e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("grid,mode", [
+    ((1, 1, 1), NONE),      # 1 rank: overlap degenerates to interior-only
+    ((4, 1, 1), A2A),       # 4-partition 1D slab decomposition
+    ((2, 2, 1), A2A),       # 4-partition 2D pencils
+])
+def test_overlap_schedule_matches_blocking(grid, mode):
+    """schedule="overlap" (interior/boundary split, exchange on the boundary
+    partial aggregate only) is arithmetically identical to the blocking
+    schedule: loss, node outputs AND parameter gradients agree to fp32
+    tolerance on 1-rank and multi-partition halo graphs."""
+    mesh = box_mesh((4, 2, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x_global = taylor_green_velocity(mesh.coords)
+
+    pg = partition_mesh(mesh, grid)
+    meta = rank_static_inputs(pg, mesh.coords, split=True)
+    x = jnp.asarray(gather_node_features(pg, x_global))
+    spec = HaloSpec(mode=mode)
+
+    l_b, y_b, g_b = loss_and_grad_stacked(
+        params, x, x, meta, spec, cfg.node_out, schedule="blocking")
+    l_o, y_o, g_o = loss_and_grad_stacked(
+        params, x, x, meta, spec, cfg.node_out, schedule="overlap")
+
+    assert abs(float(l_o) - float(l_b)) < 1e-6 * max(1.0, abs(float(l_b)))
+    np.testing.assert_allclose(np.asarray(y_o), np.asarray(y_b),
+                               rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_b), jax.tree.leaves(g_o)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-3, atol=2e-4)
+    # overlap on the partitioned graph reproduces Eq. 2 as well: same loss
+    # as the un-partitioned reference
+    if grid != (1, 1, 1):
+        pg1 = partition_mesh(mesh, (1, 1, 1))
+        meta1 = rank_static_inputs(pg1, mesh.coords, split=True)
+        x1 = jnp.asarray(gather_node_features(pg1, x_global))
+        l1, _, _ = loss_and_grad_stacked(
+            params, x1, x1, meta1, HaloSpec(mode=NONE), cfg.node_out,
+            schedule="overlap")
+        assert abs(float(l_o) - float(l1)) < 2e-6 * max(1.0, abs(float(l1)))
+
+
+def test_overlap_schedule_matches_blocking_fused_backend():
+    """The overlap schedule composes with the fused Pallas backend: each side
+    of the interior/boundary split runs through its own dst-aligned layout
+    (seg_perm_bnd / seg_perm_int) and still matches the blocking fused run
+    for values and gradients (interpret mode on CPU)."""
+    mesh = box_mesh((2, 2, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x_global = taylor_green_velocity(mesh.coords)
+    block_n, block_e = 16, 32
+
+    pg = partition_mesh(mesh, (2, 2, 1))
+    meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e),
+                              split=True)
+    x = jnp.asarray(gather_node_features(pg, x_global))
+    spec = HaloSpec(mode=A2A)
+
+    kw = dict(backend="fused", interpret=True, block_n=block_n)
+    l_b, y_b, g_b = loss_and_grad_stacked(
+        params, x, x, meta, spec, cfg.node_out, schedule="blocking", **kw)
+    l_o, y_o, g_o = loss_and_grad_stacked(
+        params, x, x, meta, spec, cfg.node_out, schedule="overlap", **kw)
+
+    assert abs(float(l_o) - float(l_b)) < 1e-6 * max(1.0, abs(float(l_b)))
+    np.testing.assert_allclose(np.asarray(y_o), np.asarray(y_b),
+                               rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_b), jax.tree.leaves(g_o)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_overlap_schedule_requires_split_meta():
+    """Clear error when the split arrays are missing from meta."""
+    mesh = box_mesh((2, 2, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    pg = partition_mesh(mesh, (2, 1, 1))
+    meta = rank_static_inputs(pg, mesh.coords)        # no split=True
+    x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
+    with pytest.raises(ValueError, match="split"):
+        loss_and_grad_stacked(params, x, x, meta, HaloSpec(mode=A2A),
+                              cfg.node_out, schedule="overlap")
 
 
 def test_shard_map_collective_path_subprocess():

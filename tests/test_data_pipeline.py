@@ -1,6 +1,5 @@
 """Data pipeline: deterministic replay + prefetch ordering + host sharding."""
 import numpy as np
-import jax.numpy as jnp
 
 from repro.data.pipeline import PrefetchingLoader, host_shard, token_batch_fn
 

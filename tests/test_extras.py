@@ -1,7 +1,6 @@
 """Extra coverage: halo wire compression, elastic checkpoint restore,
 consistent reductions, sampler block-meta integration."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 from repro.core.halo import A2A, NONE, HaloSpec
 from repro.core.partition import partition_graph, gather_node_features
 from repro.graph.datasets import cora_like, molecules, batch_molecules, criteo_like
-from repro.models.gnn_zoo import irreps as ir
 from repro.models.gnn_zoo.gat import GATConfig, gat_forward, init_gat
 from repro.models.gnn_zoo.graphcast import (
     GraphCastConfig, graphcast_forward, icosahedral_mesh, init_graphcast,
@@ -138,12 +137,16 @@ def test_equivariant_models_invariance(model):
         cfg = NequIPConfig(n_layers=2, hidden_mul=8, l_max=2, n_rbf=4,
                            cutoff=3.0, n_species=4)
         params = init_nequip(jax.random.PRNGKey(0), cfg)
-        fwd = lambda p, s, x: nequip_forward(p, s, x, meta, HaloSpec(mode=NONE), cfg)
+
+        def fwd(p, s, x):
+            return nequip_forward(p, s, x, meta, HaloSpec(mode=NONE), cfg)
     else:
         cfg = MACEConfig(n_layers=2, hidden_mul=8, l_max=2, correlation=3,
                          n_rbf=4, cutoff=3.0, n_species=4)
         params = init_mace(jax.random.PRNGKey(0), cfg)
-        fwd = lambda p, s, x: mace_forward(p, s, x, meta, HaloSpec(mode=NONE), cfg)
+
+        def fwd(p, s, x):
+            return mace_forward(p, s, x, meta, HaloSpec(mode=NONE), cfg)
 
     e1 = fwd(params, jnp.asarray(sp), jnp.asarray(ps))
     assert np.isfinite(np.asarray(e1)).all()

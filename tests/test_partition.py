@@ -5,7 +5,7 @@ import pytest
 from repro.core.mesh_gen import box_mesh, mesh_graph_edges, undirected_to_directed
 from repro.core.partition import (
     from_edge_partition, from_element_partition, greedy_edge_coloring,
-    partition_elements, partition_graph, partition_mesh, pack,
+    partition_elements, partition_mesh,
     gather_node_features, scatter_node_outputs,
 )
 
@@ -161,6 +161,69 @@ def test_segment_layout_cache_roundtrip():
     meta = pg.device_arrays(seg_layout=(16, 32))
     np.testing.assert_array_equal(meta["seg_perm"], perm)
     np.testing.assert_array_equal(meta["seg_dstl"], dstl)
+
+
+def test_interior_split_properties():
+    """Interior/boundary classification invariants the overlap schedule
+    relies on: the masks partition the real edges, boundary nodes are exactly
+    the multi-copy (shared) nodes, boundary edges are exactly the edges
+    landing on them, and the per-side fused layouts tile each side's edges
+    exactly once."""
+    m = box_mesh((4, 4, 2), p=2)
+    pg = partition_mesh(m, (2, 2, 1))
+    sp = pg.interior_split()
+    assert pg.interior_split() is sp                 # memoized on pg
+
+    # masks partition edge_mask, disjointly
+    np.testing.assert_allclose(sp["edge_bnd_mask"] + sp["edge_int_mask"],
+                               pg.edge_mask)
+    assert float((sp["edge_bnd_mask"] * sp["edge_int_mask"]).max()) == 0.0
+
+    # boundary node <=> a coincident copy exists on another rank (d_i > 1)
+    expect_bnd = ((pg.node_inv_mult < 1.0) & (pg.node_mask > 0)).astype(np.float32)
+    np.testing.assert_array_equal(sp["node_bnd_mask"], expect_bnd)
+
+    # edge side <=> side of its destination node
+    for r in range(pg.R):
+        real = pg.edge_mask[r] > 0
+        dst_bnd = sp["node_bnd_mask"][r][pg.edge_dst[r]] > 0
+        np.testing.assert_array_equal(sp["edge_bnd_mask"][r][real] > 0,
+                                      dst_bnd[real])
+
+    # compacted index lists enumerate each side exactly once
+    for part in ("bnd", "int"):
+        for r in range(pg.R):
+            got = np.sort(sp[f"edge_{part}_idx"][r][sp[f"edge_{part}_valid"][r] > 0])
+            np.testing.assert_array_equal(
+                got, np.nonzero(sp[f"edge_{part}_mask"][r] > 0)[0])
+
+    frac = sp["interior_frac"]
+    assert 0.0 < frac < 1.0
+    assert abs(frac - sp["edge_int_mask"].sum() / pg.edge_mask.sum()) < 1e-6
+
+    # per-side fused layouts: disjoint union of the full layout's real edges
+    lay_b = pg.segment_layout(16, 32, part="bnd")
+    lay_i = pg.segment_layout(16, 32, part="int")
+    for r in range(pg.R):
+        eb = lay_b["perm"][r][lay_b["perm"][r] >= 0]
+        ei = lay_i["perm"][r][lay_i["perm"][r] >= 0]
+        assert np.intersect1d(eb, ei).size == 0
+        np.testing.assert_array_equal(
+            np.sort(np.concatenate([eb, ei])),
+            np.nonzero(pg.edge_mask[r] > 0)[0])
+
+    # device_arrays(split=True) carries everything through to step metadata
+    meta = pg.device_arrays(seg_layout=(16, 32), split=True)
+    for k in ("edge_bnd_idx", "edge_bnd_valid", "edge_int_idx",
+              "edge_int_valid", "seg_perm_bnd", "seg_dstl_bnd",
+              "seg_perm_int", "seg_dstl_int"):
+        assert k in meta, k
+
+    # single-rank graph: no boundary at all
+    pg1 = partition_mesh(m, (1, 1, 1))
+    sp1 = pg1.interior_split()
+    assert sp1["interior_frac"] == 1.0
+    assert float(sp1["edge_bnd_mask"].sum()) == 0.0
 
 
 def test_gather_scatter_roundtrip():

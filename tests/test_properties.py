@@ -2,7 +2,6 @@
 unavailable offline; seeded multi-draw sweeps cover the same ground)."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.graph import segment

@@ -1,5 +1,4 @@
 """Optimizer / checkpoint / fault-tolerance / compression / sampler tests."""
-import os
 
 import numpy as np
 import pytest

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.configs import deepseek_v2_236b, dbrx_132b, llama3_2_3b, granite_34b, gemma2_2b
 from repro.models.transformer.model import (
-    ParallelCtx, decode_step, forward, init_cache, init_transformer, lm_loss,
+    ParallelCtx, decode_step, forward, init_transformer, lm_loss,
     prefill_step,
 )
 from repro.models.transformer.moe import moe_ffn, moe_ffn_reference, init_moe

@@ -27,26 +27,45 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def segment_agg_compare(block_n: int = 32, block_e: int = 64,
+#: identifies the fused kernel generation in BENCH_segment_agg.json: the
+#: scalar-prefetch DMA-gather kernels (O(E) in the node count) replaced the
+#: one-hot MXU gathers ("onehot_matmul", O(E·N)) of the earlier generation.
+GATHER_MODE = "prefetch_dma"
+
+
+def _fused_timing_key(interpret: bool) -> str:
+    """Interpreter timings are not comparable to compiled ones — they get
+    their own key so downstream consumers can't confuse the two (the bench
+    gate only ever reads ``fused_us``)."""
+    return "fused_interpret_us" if interpret else "fused_us"
+
+
+def segment_agg_compare(block_n: int | None = None,
+                        block_e: int | None = None,
                         hidden: int = 16) -> dict:
     """xla-vs-fused NMP edge-update+aggregate on a real SEM mesh graph.
 
     The fused path runs the production Pallas kernels — compiled on TPU,
-    through the interpreter elsewhere (flagged; interpreter timings are not
-    comparable to compiled ones, but the consistency check is exact either
-    way).  Asserts fp32-level agreement of both outputs against the XLA
-    lowering and reports the dst-aligned layout's padding-waste fraction.
+    through the interpreter elsewhere.  Interpreter runs record their timing
+    under ``fused_interpret_us`` (``fused_us`` means a compiled run, full
+    stop), and the consistency check is exact either way.  Block sizes
+    default to the static autotune table (``pick_block_sizes``; the chosen
+    tile is logged in the payload).
     """
     from repro.core import box_mesh, partition_mesh
     from repro.core.consistent_mp import edge_update_aggregate, init_nmp_layer
     from repro.core.reference import rank_static_inputs
+    from repro.kernels.segment_agg.ops import pick_block_sizes
 
     interpret = jax.default_backend() != "tpu"
+    autotuned = block_n is None or block_e is None
+    auto_n, auto_e = pick_block_sizes(hidden, jnp.float32)
+    block_n = block_n or auto_n
+    block_e = block_e or auto_e
     mesh = box_mesh((4, 4, 2), p=2)
     pg = partition_mesh(mesh, (1, 1, 1))
     meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e))
     meta_r = {k: v[0] for k, v in meta.items()}
-    waste = pg.segment_layout(block_n, block_e)["waste"]
 
     rng = np.random.default_rng(0)
     params = init_nmp_layer(jax.random.PRNGKey(0), hidden, 2)
@@ -68,13 +87,114 @@ def segment_agg_compare(block_n: int = 32, block_e: int = 64,
     iters = 3 if interpret else 20
     xla_us = _time(xla_fn, params, x, e, iters=iters)
     fused_us = _time(fused_fn, params, x, e, iters=iters)
+    return {
+        "n_nodes": pg.n_pad, "n_edges": pg.e_pad, "hidden": hidden,
+        "block_n": block_n, "block_e": block_e, "autotuned_blocks": autotuned,
+        "gather_mode": GATHER_MODE,
+        "xla_us": xla_us, _fused_timing_key(interpret): fused_us,
+        "fused_interpret": interpret, "backend": jax.default_backend(),
+        "max_abs_err_e": err_e, "max_abs_err_agg": err_a,
+    }
+
+
+def _nmp_flops_per_edge(hidden: int, n_hidden: int, n_round: int,
+                        block_e: int) -> dict:
+    """Per-edge FLOP models for the two gather generations (the crossover
+    the size sweep demonstrates analytically alongside the timings):
+
+    * ``prefetch_dma`` — MLP matmuls only: the row gathers and the
+      scatter-add are O(H) data movement per edge, no gather FLOPs.
+    * ``onehot_matmul`` — the retired generation's extra ``[BE, N_round]``
+      one-hot matmul per src gather (+ the block-local dst one-hot): grows
+      linearly with the node count, the O(E·N) term this PR removed.
+    """
+    mlp = 2 * hidden * hidden * (3 + n_hidden)       # w0 slices + hidden stack
     return dict(
-        n_nodes=pg.n_pad, n_edges=pg.e_pad, hidden=hidden,
-        block_n=block_n, block_e=block_e,
-        xla_us=xla_us, fused_us=fused_us,
-        fused_interpret=interpret, backend=jax.default_backend(),
-        layout_waste=waste, max_abs_err_e=err_e, max_abs_err_agg=err_a,
+        prefetch_dma=mlp + 2 * hidden,               # + weighted scatter-add
+        onehot_matmul=mlp + 2 * n_round * hidden + 4 * block_e * hidden,
     )
+
+
+def segment_agg_size_sweep(sizes=(1_000, 10_000, 100_000), hidden: int = 16,
+                           degree: int = 6, verbose: bool = False) -> list:
+    """Fused-vs-xla timing sweep over graph sizes: N nodes, E = degree·N
+    random edges.
+
+    Demonstrates the O(E·N) -> O(E) crossover of the DMA-gather rewrite: the
+    measured fused time per edge stays ~flat in N (``us_per_edge``), while
+    the per-edge FLOP model of the retired one-hot generation grows linearly
+    with N (``flops_per_edge_onehot`` vs ``flops_per_edge_dma``).  Off-TPU
+    the timings come from the Pallas interpreter (``fused_interpret_us``) —
+    the scaling *shape* still shows, absolute numbers do not transfer.
+    """
+    from repro import nn
+    from repro.graph import segment
+    from repro.kernels.segment_agg.ops import (
+        compact_gather_layout, fused_nmp_edge_agg, pick_block_sizes)
+
+    interpret = jax.default_backend() != "tpu"
+    rows = []
+    for n in sizes:
+        n = int(n)
+        E = degree * n
+        block_n, block_e = pick_block_sizes(hidden, jnp.float32)
+        rng = np.random.default_rng(n)
+        src = rng.integers(0, n, E)
+        dst = rng.integers(0, n, E)
+        emask = np.ones(E, np.float32)
+        einv = np.ones(E, np.float32)
+        lay = compact_gather_layout(src, dst, n, block_e)
+        perm = jnp.asarray(lay["perm"])
+        seg_src = jnp.asarray(lay["src"])
+        seg_dst = jnp.asarray(lay["dst"])
+        x = jnp.asarray(rng.normal(size=(n, hidden)), jnp.float32)
+        e = jnp.asarray(rng.normal(size=(E, hidden)), jnp.float32)
+        params = nn.init_mlp(jax.random.PRNGKey(0), 3 * hidden,
+                             [hidden] * 2, hidden)
+        emask_j, einv_j = jnp.asarray(emask), jnp.asarray(einv)
+        dst_j = jnp.asarray(dst, jnp.int32)
+        src_j = jnp.asarray(src, jnp.int32)
+
+        def xla_fn(p, x, e):
+            feats = jnp.concatenate(
+                [segment.gather(x, src_j), segment.gather(x, dst_j), e], -1)
+            e_new = (e + nn.mlp(p, feats)) * emask_j[:, None]
+            return e_new, segment.segment_sum(
+                e_new * einv_j[:, None], dst_j, n)
+
+        def fused_fn(p, x, e):
+            return fused_nmp_edge_agg(
+                x, e, p, perm, seg_src, seg_dst, emask_j, einv_j,
+                block_n=block_n, interpret=interpret)
+
+        xla_jit, fused_jit = jax.jit(xla_fn), jax.jit(fused_fn)
+        e_x, a_x = xla_jit(params, x, e)
+        e_f, a_f = fused_jit(params, x, e)
+        err = max(float(jnp.abs(e_x - e_f).max()),
+                  float(jnp.abs(a_x - a_f).max()))
+        assert err < 1e-3, err
+
+        iters = 2 if interpret else 10
+        xla_us = _time(xla_jit, params, x, e, iters=iters)
+        fused_us = _time(fused_jit, params, x, e, iters=iters)
+        flops = _nmp_flops_per_edge(hidden, 2, -(-n // 8) * 8, block_e)
+        row = {
+            "n_nodes": n, "n_edges": E, "hidden": hidden,
+            "block_n": block_n, "block_e": block_e,
+            "gather_mode": GATHER_MODE,
+            "xla_us": xla_us, _fused_timing_key(interpret): fused_us,
+            "us_per_edge": fused_us / E,
+            "flops_per_edge_dma": flops["prefetch_dma"],
+            "flops_per_edge_onehot": flops["onehot_matmul"],
+            "fused_interpret": interpret, "max_abs_err": err,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"sweep N={n}: fused {fused_us:.0f} us "
+                  f"({row['us_per_edge']:.3f} us/edge), xla {xla_us:.0f} us, "
+                  f"onehot-model {flops['onehot_matmul']} flops/edge vs "
+                  f"dma {flops['prefetch_dma']}")
+    return rows
 
 
 def run(verbose: bool = True, seg_cmp: dict | None = None):
@@ -113,9 +233,10 @@ def run(verbose: bool = True, seg_cmp: dict | None = None):
 
     cmp = seg_cmp if seg_cmp is not None else segment_agg_compare()
     tag = "interp" if cmp["fused_interpret"] else cmp["backend"]
+    fused_us = cmp[_fused_timing_key(cmp["fused_interpret"])]
     rows.append(("nmp_edge_agg_xla", cmp["xla_us"],
-                 f"waste={cmp['layout_waste']:.3f}"))
-    rows.append((f"nmp_edge_agg_fused_{tag}", cmp["fused_us"],
+                 f"blocks={cmp['block_n']}x{cmp['block_e']}"))
+    rows.append((f"nmp_edge_agg_fused_{tag}", fused_us,
                  f"err={max(cmp['max_abs_err_e'], cmp['max_abs_err_agg']):.1e}"))
 
     if verbose:
@@ -125,4 +246,15 @@ def run(verbose: bool = True, seg_cmp: dict | None = None):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep-sizes", default=None,
+                    help="comma-separated node counts: run only the "
+                         "fused-vs-xla size sweep (e.g. '1000,10000')")
+    args = ap.parse_args()
+    if args.sweep_sizes:
+        sizes = [int(s) for s in args.sweep_sizes.split(",")]
+        segment_agg_size_sweep(sizes, verbose=True)
+    else:
+        run()

@@ -1,15 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes
-``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + layout
-padding-waste) and ``BENCH_halo_overlap.json`` (blocking-vs-overlap NMP
-schedule timings per rank count) so future PRs have a perf trajectory to
-regress against (see ``scripts/bench_gate.py``). Run:
+``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + optional graph
+size sweep + per-SHA ``history`` trajectory) and ``BENCH_halo_overlap.json``
+(blocking-vs-overlap NMP schedule timings per rank count) so future PRs
+have a perf trajectory to regress against (see ``scripts/bench_gate.py``).
+Run:
     PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+
+#: history entries carried in BENCH_segment_agg.json (oldest dropped first)
+HISTORY_CAP = 50
 
 
 def _write_json(path: str, payload: dict) -> dict:
@@ -19,10 +25,46 @@ def _write_json(path: str, payload: dict) -> dict:
     return payload
 
 
-def write_segment_agg_json(path: str = "BENCH_segment_agg.json") -> dict:
-    """Collect the xla-vs-fused segment-agg comparison and persist it."""
-    from benchmarks.kernel_bench import segment_agg_compare
-    return _write_json(path, segment_agg_compare())
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _with_history(path: str, payload: dict) -> dict:
+    """Append this run's timings to the prior file's ``history`` list so the
+    JSON carries a per-SHA trajectory (future gates can regress against the
+    trend instead of a single overwritten baseline)."""
+    prior = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prior = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prior = {}
+    entry = {"sha": _git_sha()}
+    for k in ("xla_us", "fused_us", "fused_interpret_us", "gather_mode",
+              "backend"):
+        if k in payload:
+            entry[k] = payload[k]
+    payload["history"] = (prior.get("history", []) + [entry])[-HISTORY_CAP:]
+    return payload
+
+
+def write_segment_agg_json(path: str = "BENCH_segment_agg.json",
+                           sweep_sizes=None) -> dict:
+    """Collect the xla-vs-fused segment-agg comparison (plus the graph-size
+    sweep when ``sweep_sizes`` is given) and persist it with the per-SHA
+    timing history appended."""
+    from benchmarks.kernel_bench import (
+        segment_agg_compare, segment_agg_size_sweep)
+    payload = segment_agg_compare()
+    if sweep_sizes:
+        payload["sweep"] = segment_agg_size_sweep(sweep_sizes)
+    return _write_json(path, _with_history(path, payload))
 
 
 def write_halo_overlap_json(path: str = "BENCH_halo_overlap.json") -> dict:
@@ -51,10 +93,11 @@ def main() -> None:
         elif mod is halo_overlap:
             kw = dict(overlap_payload=overlap_payload)
         all_rows += mod.run(verbose=True, **kw)
+    fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
-          f"(xla {payload['xla_us']:.0f} us, fused {payload['fused_us']:.0f} us"
+          f"(xla {payload['xla_us']:.0f} us, fused {fused_us:.0f} us"
           f"{' [interpret]' if payload['fused_interpret'] else ''}, "
-          f"waste {payload['layout_waste']:.3f})")
+          f"gather_mode {payload['gather_mode']})")
     worst = max((c["overlap_us"] / c["blocking_us"]
                  for c in overlap_payload["cases"]), default=1.0)
     print(f"wrote BENCH_halo_overlap.json ({len(overlap_payload['cases'])} "

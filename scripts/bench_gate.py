@@ -1,15 +1,18 @@
 """Perf gate for the NMP hot loop and the halo/compute schedule.
 
-Emits ``BENCH_segment_agg.json`` (xla/fused timings + layout padding-waste)
+Emits ``BENCH_segment_agg.json`` (xla/fused timings, gather mode, tile
+sizes, optional graph-size sweep, per-SHA history)
 and — when ``--halo-out``/``--halo-baseline`` ask for it —
 ``BENCH_halo_overlap.json`` (blocking-vs-overlap schedule timings per rank
 count); with baseline files provided, fails on regressions beyond
 ``--max-regression``:
 
 * segment-agg: fused-path wall time vs the baseline's.  Interpreter-mode
-  runs (no TPU attached) are recorded but never gated — interpreted-Pallas
-  timings are not comparable to compiled ones (and comparing them against
-  the compiled XLA path is meaningless, so no xla-vs-fused check either).
+  runs (no TPU attached) record their timing under ``fused_interpret_us``
+  (``fused_us`` exists only for compiled runs) and are never gated —
+  interpreted-Pallas timings are not comparable to compiled ones (and
+  comparing them against the compiled XLA path is meaningless, so no
+  xla-vs-fused check either).
 * halo overlap: the overlap/blocking *ratio* per rank count vs the
   baseline's ratio.  Both schedules compile on any host, and the ratio
   normalizes hardware differences away, so this gate also runs on CPU CI.
@@ -35,10 +38,13 @@ for p in (_REPO, os.path.join(_REPO, "src")):
 
 def gate_segment_agg(payload: dict, base: dict, max_regression: float) -> bool:
     """True iff the fused segment-agg path did not regress. Skips (passes)
-    when either run used the Pallas interpreter."""
-    if payload["fused_interpret"] or base.get("fused_interpret", True):
-        print("segment-agg gate skipped: interpreter-mode timings are not "
-              "comparable")
+    unless both runs have a compiled ``fused_us`` timing — interpreter runs
+    only carry ``fused_interpret_us``, which is not comparable to compiled
+    numbers (nor to the compiled ``xla_us``, so no fused-vs-xla ratio check
+    in that mode either)."""
+    if "fused_us" not in payload or "fused_us" not in base:
+        print("segment-agg gate skipped: interpreter-mode timings "
+              "(fused_interpret_us) are not comparable to compiled runs")
         return True
     limit = base["fused_us"] * (1.0 + max_regression)
     if payload["fused_us"] > limit:
@@ -110,6 +116,11 @@ def main() -> int:
                     help="previous BENCH_halo_overlap.json to gate against")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="allowed fractional slowdown vs baseline")
+    ap.add_argument("--sweep-sizes", default=None,
+                    help="comma-separated node counts for the fused-vs-xla "
+                         "graph-size sweep, recorded under 'sweep' in the "
+                         "segment-agg JSON (e.g. '1000' on CPU CI, "
+                         "'1000,10000,100000' on TPU)")
     args = ap.parse_args()
 
     # load baselines BEFORE running: --out/--halo-out default to the baseline
@@ -119,7 +130,9 @@ def main() -> int:
     halo_base = _load(args.halo_baseline)
 
     from benchmarks.run import write_halo_overlap_json, write_segment_agg_json
-    payload = write_segment_agg_json(args.out)
+    sweep = [int(s) for s in args.sweep_sizes.split(",")] \
+        if args.sweep_sizes else None
+    payload = write_segment_agg_json(args.out, sweep_sizes=sweep)
     print(json.dumps(payload, indent=2, sort_keys=True))
 
     ok = True

@@ -16,23 +16,34 @@ Backends for the 4a+4b hot loop (``backend=`` on :func:`nmp_layer`):
 
 * ``"xla"``   — plain lowering: HBM-materialized ``[E, 3H]`` gather+concat,
   edge MLP, then a serialized ``segment_sum`` scatter-add.  Always available.
-* ``"fused"`` — the Pallas kernel in ``repro.kernels.segment_agg``: the
-  src/dst node-feature gathers, the full residual edge MLP (incl. LayerNorm)
-  and the 1/d_ij-weighted aggregation run as MXU matmuls over VMEM tiles of a
-  destination-aligned edge layout; a ``jax.custom_vjp`` routes the backward
-  pass through a second Pallas kernel, so the layer stays fully
-  differentiable (Eq. 3 gradient consistency is preserved — tested).
-  Requires ``meta["seg_perm"]`` / ``meta["seg_dstl"]`` from the cached
-  layout pass (``PartitionedGraphs.segment_layout(block_n, block_e)``), built
-  with the same ``block_n``/``block_e`` passed here.  ``interpret=True``
-  executes the same kernels through the Pallas interpreter so CPU CI
-  exercises the production code path.
+* ``"fused"`` — the Pallas kernel pair in ``repro.kernels.segment_agg``:
+  per-tile src/dst node-id lists are scalar-prefetched into SMEM and drive
+  double-buffered DMA row gathers of node features out of HBM/ANY memory;
+  the full residual edge MLP (incl. LayerNorm) and the 1/d_ij-weighted
+  aggregation run on the VMEM tile, with the aggregate accumulated by
+  per-row scatter-adds (cost O(E·H) — no one-hot matrices, no O(E·N) term);
+  a ``jax.custom_vjp`` routes the backward pass through a second Pallas
+  kernel, so the layer stays fully differentiable (Eq. 3 gradient
+  consistency is preserved — tested).  Requires ``meta["seg_perm"]`` /
+  ``meta["seg_src"]`` / ``meta["seg_dst"]`` from the cached layout pass
+  (``PartitionedGraphs.segment_layout(block_n, block_e)``), built with the
+  same ``block_e`` passed here.  ``interpret=True`` executes the same
+  kernels through the Pallas interpreter so CPU CI exercises the production
+  code path.
 
-Both backends compute identical arithmetic (fp32-tolerance identical: the
-aggregation order differs — one-hot matmul vs scatter-add), so the paper's
-consistency guarantee survives the kernel swap; ``tests/test_consistency.py``
-asserts this on 1-rank and multi-partition halo graphs for values *and*
-gradients.
+Both backends compute identical arithmetic (fp32-tolerance identical: only
+the aggregation summation order differs), so the paper's consistency
+guarantee survives the kernel swap; ``tests/test_consistency.py`` asserts
+this on 1-rank and multi-partition halo graphs for values *and* gradients.
+
+Mixed precision (``precision=`` on :func:`nmp_layer`): ``"bf16"`` runs the
+Eq. 4a edge-MLP matmuls with bf16 operands and fp32 accumulation on *both*
+backends (``nn.mlp(precision=...)`` for xla, the in-kernel policy for
+fused); aggregation always accumulates fp32.  The default ``"fp32"`` is
+bit-stable with the pre-knob code, which is what the consistency tests pin
+— bf16 trades ~3 decimal digits of edge-MLP mantissa for MXU throughput and
+is NOT covered by the bitwise consistency guarantee (tested to bf16
+tolerance only).
 
 Schedules for the whole layer (``schedule=`` on :func:`nmp_layer`):
 
@@ -62,6 +73,10 @@ FUSED = "fused"
 
 BLOCKING = "blocking"
 OVERLAP = "overlap"
+
+FP32 = "fp32"
+BF16 = "bf16"
+PRECISIONS = (FP32, BF16)
 
 
 def init_nmp_layer(key, hidden: int, mlp_hidden_layers: int, dtype=jnp.float32) -> nn.Params:
@@ -93,6 +108,7 @@ def edge_update_aggregate(
     backend: str = XLA,
     interpret: bool = False,
     block_n: int = 128,
+    precision: str = FP32,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Eq. 4a + 4b on one shard: returns (e', local aggregate a).
 
@@ -100,24 +116,27 @@ def edge_update_aggregate(
     and the stacked single-device reference — both backends are available to
     both paths, which is how backend-vs-backend consistency is tested.
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected one of "
+                         f"{PRECISIONS}")
     src = meta["edge_src"]
     dst = meta["edge_dst"]
     n_pad = x.shape[-2]
 
     if backend == FUSED:
-        if "seg_perm" not in meta or "seg_dstl" not in meta:
+        if "seg_perm" not in meta or "seg_src" not in meta:
             raise ValueError(
-                "backend='fused' needs meta['seg_perm']/meta['seg_dstl'] — "
-                "attach the cached layout via "
+                "backend='fused' needs meta['seg_perm']/meta['seg_src']/"
+                "meta['seg_dst'] — attach the cached layout via "
                 "PartitionedGraphs.segment_layout / rank_static_inputs("
                 "seg_layout=...)")
         from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
 
         def one(xb, eb):
             return fused_nmp_edge_agg(
-                xb, eb, params["edge"], meta["seg_perm"], meta["seg_dstl"],
-                src, meta["edge_mask"], meta["edge_inv_mult"],
-                block_n=block_n, interpret=interpret)
+                xb, eb, params["edge"], meta["seg_perm"], meta["seg_src"],
+                meta["seg_dst"], meta["edge_mask"], meta["edge_inv_mult"],
+                block_n=block_n, interpret=interpret, precision=precision)
 
         return _map_batched(one, x, e)
 
@@ -128,7 +147,8 @@ def edge_update_aggregate(
     xi = segment.gather(x, src)
     xj = segment.gather(x, dst)
     feats = jnp.concatenate([xi, xj, e], axis=-1)
-    e_new = e + nn.mlp(params["edge"], feats)
+    e_new = e + nn.mlp(params["edge"], feats,
+                       precision=None if precision == FP32 else precision)
     e_new = e_new * meta["edge_mask"][..., None]
 
     # --- Eq. 4b: local aggregation with inverse edge multiplicity ---
@@ -150,6 +170,7 @@ def edge_update_aggregate_part(
     backend: str = XLA,
     interpret: bool = False,
     block_n: int = 128,
+    precision: str = FP32,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Eq. 4a + 4b restricted to one side of the interior/boundary edge split.
 
@@ -162,14 +183,18 @@ def edge_update_aggregate_part(
     """
     if part not in ("bnd", "int"):
         raise ValueError(f"unknown edge split part {part!r}")
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected one of "
+                         f"{PRECISIONS}")
     n_pad = x.shape[-2]
 
     if backend == FUSED:
         if f"seg_perm_{part}" not in meta:
             raise ValueError(
                 "schedule='overlap' with backend='fused' needs the per-side "
-                f"layout meta['seg_perm_{part}']/meta['seg_dstl_{part}'] — "
-                "attach it via PartitionedGraphs.device_arrays(seg_layout=..., "
+                f"layout meta['seg_perm_{part}']/meta['seg_src_{part}']/"
+                f"meta['seg_dst_{part}'] — attach it via "
+                "PartitionedGraphs.device_arrays(seg_layout=..., "
                 "split=True) / rank_static_inputs(..., split=True)")
         from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
 
@@ -178,9 +203,9 @@ def edge_update_aggregate_part(
             # mask/inv-mult arrays select exactly the side's contributions
             return fused_nmp_edge_agg(
                 xb, eb, params["edge"], meta[f"seg_perm_{part}"],
-                meta[f"seg_dstl_{part}"], meta["edge_src"],
+                meta[f"seg_src_{part}"], meta[f"seg_dst_{part}"],
                 meta["edge_mask"], meta["edge_inv_mult"],
-                block_n=block_n, interpret=interpret)
+                block_n=block_n, interpret=interpret, precision=precision)
 
         return _map_batched(one, x, e)
 
@@ -204,7 +229,10 @@ def edge_update_aggregate_part(
     def one(xb, eb):
         e_sub = eb[idx]
         feats = jnp.concatenate([xb[src], xb[dst], e_sub], axis=-1)
-        e_sub = (e_sub + nn.mlp(params["edge"], feats)) * mask[..., None]
+        e_sub = (e_sub + nn.mlp(
+            params["edge"], feats,
+            precision=None if precision == FP32 else precision)) \
+            * mask[..., None]
         agg = segment.segment_sum(e_sub * inv[..., None], dst, n_pad)
         e_full = jnp.zeros(eb.shape[:-1] + (e_sub.shape[-1],), e_sub.dtype)
         e_full = e_full.at[idx].add(e_sub * valid[..., None])
@@ -232,6 +260,7 @@ def nmp_layer(
     interpret: bool = False,
     block_n: int = 128,
     schedule: str = BLOCKING,
+    precision: str = FP32,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One consistent NMP layer. Returns (x', e').
 
@@ -241,8 +270,10 @@ def nmp_layer(
     is psum'ed over them before the halo sync. Arithmetically identical to
     the paper's layer — the aggregation sum is simply split one level more.
 
-    ``backend``/``interpret``/``block_n`` select and configure the Eq. 4a+4b
-    implementation — see the module docstring.
+    ``backend``/``interpret``/``block_n``/``precision`` select and configure
+    the Eq. 4a+4b implementation — see the module docstring (``precision=
+    "bf16"`` runs the edge-MLP matmuls with bf16 operands / fp32
+    accumulation; the fp32 default keeps the consistency tests bit-stable).
 
     ``schedule`` picks the communication schedule:
 
@@ -259,7 +290,8 @@ def nmp_layer(
       exchange neither reads nor writes.
     """
     if schedule == OVERLAP:
-        part_kw = dict(backend=backend, interpret=interpret, block_n=block_n)
+        part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
+                       precision=precision)
         # boundary side first — the exchange consumes its aggregate
         e_bnd, agg_bnd = edge_update_aggregate_part(
             params, x, e, meta, "bnd", **part_kw)
@@ -282,7 +314,7 @@ def nmp_layer(
 
     e_new, agg = edge_update_aggregate(
         params, x, e, meta, backend=backend, interpret=interpret,
-        block_n=block_n)
+        block_n=block_n, precision=precision)
     if edge_parallel_axes:
         # combine partial aggregates in the activation dtype (halves wire
         # bytes when activations are bf16)

@@ -48,7 +48,8 @@ def make_gnn_step_fns(
     # NMP hot-loop backend + halo/compute schedule from the model config
     # (see repro.core.consistent_mp)
     backend_kw = dict(backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                      block_n=cfg.seg_block_n, schedule=cfg.mp_schedule)
+                      block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
+                      precision=cfg.mp_precision)
 
     def shard_meta(meta):
         """Strip the leading rank axis inside the shard."""

@@ -32,10 +32,11 @@ class GNNConfig:
     name: str = "small"
     # --- NMP hot-loop backend (see repro.core.consistent_mp) ---
     mp_backend: str = "xla"      # "xla" | "fused" (Pallas kernel)
-    seg_block_n: int = 128       # node rows per fused-kernel block
-    seg_block_e: int = 128       # edge rows per fused-kernel block
+    seg_block_n: int = 128       # node padding granularity (fused kernel)
+    seg_block_e: int = 128       # edge rows per fused-kernel tile
     mp_interpret: bool = False   # run Pallas via interpreter (CPU CI)
     mp_schedule: str = "blocking"  # "blocking" | "overlap" (halo/compute)
+    mp_precision: str = "fp32"   # "fp32" | "bf16" edge-MLP matmul precision
 
     @staticmethod
     def small() -> "GNNConfig":
@@ -80,12 +81,14 @@ def gnn_forward(
     interpret: bool = False,
     block_n: int = 128,
     schedule: str = "blocking",
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y].
 
-    ``backend``/``interpret``/``block_n``/``schedule`` select the NMP 4a+4b
-    implementation and the halo/compute schedule (see
-    ``repro.core.consistent_mp``); usually taken from ``GNNConfig``.
+    ``backend``/``interpret``/``block_n``/``schedule``/``precision`` select
+    the NMP 4a+4b implementation, the halo/compute schedule and the edge-MLP
+    matmul precision (see ``repro.core.consistent_mp``); usually taken from
+    ``GNNConfig``.
     """
     e_in = build_edge_inputs(x, static_edge_feats, meta)
     h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
@@ -93,6 +96,6 @@ def gnn_forward(
     for lp in params["mp"]:
         h, e = nmp_layer(lp, h, e, meta, halo, backend=backend,
                          interpret=interpret, block_n=block_n,
-                         schedule=schedule)
+                         schedule=schedule, precision=precision)
     y = nn.mlp(params["node_dec"], h) * meta["node_mask"][..., None]
     return y

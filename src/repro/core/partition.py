@@ -93,9 +93,9 @@ class PartitionedGraphs:
     edge_mask: np.ndarray        # float32 [R, E_pad]
     edge_inv_mult: np.ndarray    # float32 [R, E_pad] (0 on padding)
     halo: HaloPlan
-    # dst-aligned segment layouts for the fused NMP kernel, memoized per
-    # (block_n, block_e, part) — the host-side sort+pad runs once per
-    # partition, not once per training step
+    # compact gather/scatter index layouts for the fused NMP kernel,
+    # memoized per (block_n, block_e, part) — the host-side sort runs once
+    # per partition, not once per training step
     _seg_layouts: Dict[Tuple[int, int, str], dict] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
     # interior/boundary edge classification for the overlap schedule,
@@ -168,28 +168,35 @@ class PartitionedGraphs:
 
     def segment_layout(self, block_n: int, block_e: int,
                        part: str = "all") -> dict:
-        """Cached dst-aligned edge layout for the fused segment-agg kernel.
+        """Cached compact gather/scatter index layout for the fused
+        segment-agg kernel (scalar-prefetch DMA gathers).
 
-        Runs ``dst_aligned_layout`` once per rank (padding edges are routed
-        to an out-of-range sentinel so they are dropped from the tiles), pads
-        the per-rank edge-block counts to a common maximum so the stacked
-        arrays shard over the rank axis, and records the padding-waste
-        fraction (fraction of tile slots that hold no real edge).
+        Runs ``compact_gather_layout`` once per rank (padding edges are
+        routed to an out-of-range sentinel so they are dropped from the
+        tiles) and pads the per-rank tile counts to a common maximum so the
+        stacked arrays shard over the rank axis — the pad tiles are entirely
+        empty (``perm == -1``, src/dst 0) and weight-masked inside the
+        kernel. Unlike the old dst-aligned block layout there is no
+        per-node-block padding: tile occupancy is E / (T·BE) by
+        construction, so no waste metric is recorded.
 
         ``part`` restricts the layout to one side of the interior/boundary
         split (``"int"`` | ``"bnd"``, see :meth:`interior_split`) — the
         overlap schedule runs the fused kernel once per side, so each side's
         layout must drop the other side's edges.
 
-        Returns {perm [R, NB, NE, BE] int32 (-1 = empty slot),
-                 dstl [R, NB, NE, BE] int32, n_node_blocks, n_edge_blocks,
-                 block_n, block_e, waste}.
+        ``block_n`` does not shape the compact layout (node rows are
+        DMA-gathered individually) but stays in the cache key so callers
+        that thread (block_n, block_e) uniformly keep exact memoization.
+
+        Returns {perm [R, T, BE] int32 (-1 = empty slot), src [R, T, BE]
+                 int32, dst [R, T, BE] int32, n_tiles, block_n, block_e}.
         """
         key = (int(block_n), int(block_e), part)
         cached = self._seg_layouts.get(key)
         if cached is not None:
             return cached
-        from repro.kernels.segment_agg.ops import dst_aligned_layout
+        from repro.kernels.segment_agg.ops import compact_gather_layout
         if part == "all":
             keep = self.edge_mask
         elif part in ("int", "bnd"):
@@ -200,19 +207,18 @@ class PartitionedGraphs:
         for r in range(self.R):
             # excluded edges get dst = n_pad -> dropped by the layout pass
             dst = np.where(keep[r] > 0, self.edge_dst[r], self.n_pad)
-            per_rank.append(dst_aligned_layout(dst, self.n_pad, block_n, block_e))
-        nb = per_rank[0]["n_node_blocks"]
-        ne = max(l["n_edge_blocks"] for l in per_rank)
-        perm = np.full((self.R, nb, ne, block_e), -1, dtype=np.int32)
-        dstl = np.zeros((self.R, nb, ne, block_e), dtype=np.int32)
+            per_rank.append(compact_gather_layout(
+                self.edge_src[r], dst, self.n_pad, block_e))
+        nt = max(l["n_tiles"] for l in per_rank)
+        perm = np.full((self.R, nt, block_e), -1, dtype=np.int32)
+        src = np.zeros((self.R, nt, block_e), dtype=np.int32)
+        dst_t = np.zeros((self.R, nt, block_e), dtype=np.int32)
         for r, l in enumerate(per_rank):
-            perm[r, :, :l["n_edge_blocks"]] = l["perm"]
-            dstl[r, :, :l["n_edge_blocks"]] = l["dstl"]
-        n_real = int((perm >= 0).sum())
-        waste = 1.0 - n_real / perm.size if perm.size else 0.0
-        layout = dict(perm=perm, dstl=dstl, n_node_blocks=nb,
-                      n_edge_blocks=ne, block_n=int(block_n),
-                      block_e=int(block_e), waste=waste)
+            perm[r, :l["n_tiles"]] = l["perm"]
+            src[r, :l["n_tiles"]] = l["src"]
+            dst_t[r, :l["n_tiles"]] = l["dst"]
+        layout = dict(perm=perm, src=src, dst=dst_t, n_tiles=nt,
+                      block_n=int(block_n), block_e=int(block_e))
         self._seg_layouts[key] = layout
         return layout
 
@@ -221,14 +227,15 @@ class PartitionedGraphs:
         """The dict of arrays a train/serve step consumes (shard over axis 0).
 
         ``seg_layout=(block_n, block_e)`` additionally includes the cached
-        dst-aligned layout index maps (``seg_perm``/``seg_dstl``) the fused
-        NMP backend consumes.
+        compact gather/scatter index lists (``seg_perm``/``seg_src``/
+        ``seg_dst``) the fused NMP backend's scalar-prefetch DMA kernels
+        consume.
 
         ``split=True`` attaches the interior/boundary edge split
         (:meth:`interior_split`) consumed by ``nmp_layer(schedule="overlap")``
         — the compacted ``edge_{bnd,int}_idx``/``_valid`` index lists for the
         xla backend and, when ``seg_layout`` is also given, the per-side
-        fused layouts ``seg_perm_{bnd,int}``/``seg_dstl_{bnd,int}``.
+        fused layouts ``seg_{perm,src,dst}_{bnd,int}``.
         """
         h = self.halo
         out = dict(
@@ -243,7 +250,8 @@ class PartitionedGraphs:
         if seg_layout is not None:
             layout = self.segment_layout(*seg_layout)
             out["seg_perm"] = layout["perm"]
-            out["seg_dstl"] = layout["dstl"]
+            out["seg_src"] = layout["src"]
+            out["seg_dst"] = layout["dst"]
         if split:
             sp = self.interior_split()
             for k in ("edge_bnd_idx", "edge_bnd_valid",
@@ -253,7 +261,8 @@ class PartitionedGraphs:
                 for part in ("bnd", "int"):
                     lay = self.segment_layout(*seg_layout, part=part)
                     out[f"seg_perm_{part}"] = lay["perm"]
-                    out[f"seg_dstl_{part}"] = lay["dstl"]
+                    out[f"seg_src_{part}"] = lay["src"]
+                    out[f"seg_dst_{part}"] = lay["dst"]
         return out
 
 

@@ -26,9 +26,9 @@ def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray,
     """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats.
 
     ``seg_layout=(block_n, block_e)`` additionally attaches the cached
-    dst-aligned layout maps (``seg_perm``/``seg_dstl``) for the fused NMP
-    backend — the host-side sort+pad runs once per partition (memoized on
-    ``pg``), not per step.
+    compact gather/scatter index lists (``seg_perm``/``seg_src``/``seg_dst``)
+    for the fused NMP backend — the host-side sort runs once per partition
+    (memoized on ``pg``), not per step.
 
     ``split=True`` attaches the interior/boundary edge split the overlap
     schedule consumes (see ``PartitionedGraphs.interior_split``).
@@ -55,6 +55,7 @@ def gnn_forward_stacked(
     interpret: bool = False,
     block_n: int = 128,
     schedule: str = "blocking",
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     """Paper GNN forward over all R ranks on one device (reference halo).
 
@@ -78,7 +79,8 @@ def gnn_forward_stacked(
         es.append(rnn.mlp(params["edge_enc"], e_in) * meta_r["edge_mask"][..., None])
     h, e = jnp.stack(hs), jnp.stack(es)
 
-    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n)
+    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
+                   precision=precision)
     for lp in params["mp"]:
         if schedule == "overlap":
             e_bnd, agg_bnd, e_int, agg_int = [], [], [], []
@@ -140,11 +142,12 @@ def loss_and_grad_stacked(
     interpret: bool = False,
     block_n: int = 128,
     schedule: str = "blocking",
+    precision: str = "fp32",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, rnn.Params]:
     def f(p):
         y = gnn_forward_stacked(p, x, meta, halo, backend=backend,
                                 interpret=interpret, block_n=block_n,
-                                schedule=schedule)
+                                schedule=schedule, precision=precision)
         return consistent_loss_stacked(y, y_hat, meta, fy), y
     (loss, y), grads = jax.value_and_grad(f, has_aux=True)(params)
     return loss, y, grads

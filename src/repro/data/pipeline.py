@@ -82,21 +82,39 @@ def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
 
 
 def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
-                     seg_block_n: int = 128, seg_block_e: int = 128,
-                     schedule: str = "blocking"):
+                     seg_block_n: int | None = 128,
+                     seg_block_e: int | None = 128,
+                     schedule: str = "blocking", hidden: int | None = None):
     """Host-side static metadata prep for the GNN step functions.
 
     Wraps ``rank_static_inputs`` and, for the fused NMP backend, attaches the
-    dst-aligned segment layout from the per-partition cache
-    (``PartitionedGraphs.segment_layout``): the O(E log E) sort+pad runs once
-    per partition here — never inside the per-step data path.
+    compact gather/scatter index layout (``seg_perm``/``seg_src``/``seg_dst``)
+    from the per-partition cache (``PartitionedGraphs.segment_layout``): the
+    O(E log E) sort runs once per partition here — never inside the per-step
+    data path.
+
+    Pass ``seg_block_n=None`` / ``seg_block_e=None`` to pick tile sizes from
+    the static autotune table (``repro.kernels.segment_agg.ops.
+    pick_block_sizes``, keyed on ``hidden``/dtype/backend and overridable
+    via the ``REPRO_SEG_BLOCKS`` env var).
 
     ``schedule="overlap"`` additionally attaches the cached interior/boundary
     edge split (and, for the fused backend, the per-side layouts) consumed
     by ``nmp_layer(schedule="overlap")``.
     """
     from repro.core.reference import rank_static_inputs
-    seg = (seg_block_n, seg_block_e) if backend == "fused" else None
+    seg = None
+    if backend == "fused":
+        if seg_block_n is None or seg_block_e is None:
+            if hidden is None:
+                raise ValueError(
+                    "autotuned block sizes (seg_block_n/seg_block_e=None) "
+                    "need hidden= — the table is keyed on the model width")
+            from repro.kernels.segment_agg.ops import pick_block_sizes
+            auto_n, auto_e = pick_block_sizes(hidden)
+            seg = (seg_block_n or auto_n, seg_block_e or auto_e)
+        else:
+            seg = (seg_block_n, seg_block_e)
     return rank_static_inputs(pg, coords, seg_layout=seg,
                               split=schedule == "overlap")
 

@@ -1,40 +1,45 @@
-"""Pallas TPU kernel: fused edge-MLP + destination-aligned segment-sum.
+"""Pallas TPU kernels: fused edge-MLP + destination-aligned segment-sum.
 
 The paper's NMP hot loop is (edge MLP -> 1/d_ij-weighted aggregate). A naive
 XLA lowering writes the MLP output to HBM, re-reads it for the scatter-add,
-and the scatter itself is serialized. TPU-native design here:
-
-  * host-side layout pass (``ops.dst_aligned_layout``) sorts edges by
-    destination and pads so that edge block j of node block i only touches
-    dst rows [i*BN, (i+1)*BN): the output BlockSpec becomes a pure function
-    of the grid — no data-dependent scatter;
-  * grid (n_node_blocks, n_edge_blocks): the MLP (two MXU matmuls) runs on
-    the [BE, F] edge tile in VMEM; the tile's contribution is accumulated
-    into a [BN, H] VMEM scratch via a one-hot matmul (dst-local one-hot x
-    e_new — an MXU op, not a scatter), flushed to HBM on the last edge block;
-  * e_new is streamed out tile-by-tile (needed by the next NMP layer).
-
-Mesh graphs have bounded degree, so dst-aligned padding is tight (measured
-in tests); power-law graphs pay more — reported by the layout pass.
+and the scatter itself is serialized.
 
 Two generations of kernels live here:
 
 * ``edge_mlp_agg`` — the original forward-only op over pre-gathered
-  ``[E, 3H]`` features (microbenchmark / oracle target);
-* ``nmp_edge_mlp_agg_fwd`` / ``nmp_edge_mlp_agg_bwd`` — the production pair
-  behind ``consistent_mp.nmp_layer(backend="fused")``: node-feature gathers
-  are fused into the kernel (src rows via a one-hot matmul against the full
-  node array in VMEM, dst rows from the streamed ``[BN, H]`` tile — the
-  ``[E, 3H]`` concat never exists in HBM), the full residual edge MLP
-  (first layer computed as three H-slices of w0, hidden ``[H, H]`` stack,
-  LayerNorm) runs on the tile, and the backward kernel re-derives the tile
-  VJP in VMEM (grad-wrt-features = transposed one-hot matmuls, grad-wrt-
-  weights accumulated in VMEM scratch across the grid).
+  ``[E, 3H]`` features (microbenchmark / oracle target). It consumes the
+  legacy dst-aligned block layout (``ops.dst_aligned_layout``) and
+  aggregates through a *block-local* ``[BE, block_n]`` one-hot matmul — an
+  MXU op whose cost is O(E · block_n · H), i.e. linear in E for a fixed
+  block size (block_n is a tile constant, never the node count).
 
-VMEM note: both fused kernels hold the full ``[N_round, H]`` node array (and
-the backward its gradient) in VMEM — fine for per-rank sub-graph sizes this
-repo targets (N_round * H * 4B << 16 MB); shard the graph harder before it
-stops fitting.
+* ``nmp_edge_mlp_agg_fwd`` / ``nmp_edge_mlp_agg_bwd`` — the production pair
+  behind ``consistent_mp.nmp_layer(backend="fused")``, rewritten around
+  **scalar-prefetch DMA gathers**: per-tile src/dst node-id lists are
+  prefetched into SMEM (``pltpu.PrefetchScalarGridSpec``) and drive
+  dynamic-slice row copies of node features out of HBM/ANY memory into a
+  double-buffered VMEM scratch (tile t+1's rows stream in while tile t
+  computes). The earlier generation gathered rows via ``[BE, N_round]``
+  one-hot MXU matmuls, making the per-tile cost O(E·N·H) and forcing the
+  whole node array to live in VMEM; the DMA gathers cost O(E·H) bytes and
+  O(1) VMEM rows per edge, so the fused layer's arithmetic scales with the
+  *edge* count — the regime the paper's Frontier runs assume. No one-hot
+  gather/scatter matrices are materialized anywhere in the fused pair: the
+  aggregation and the backward's node-gradient both run as per-row
+  read-modify-write updates against a VMEM accumulator.
+
+Mixed precision: ``precision="bf16"`` runs every edge-MLP matmul with
+bf16 operands accumulating into fp32 (``preferred_element_type``); the
+aggregation accumulator and all gradient accumulators stay fp32 either way.
+``precision="fp32"`` (default) is bit-stable with the XLA reference modulo
+summation order and is what the consistency tests pin.
+
+VMEM note: the fused forward holds the ``[N_round, H]`` *aggregate* (and
+the backward additionally the node-gradient accumulator) in VMEM scratch;
+the node features themselves stay in HBM/ANY and are streamed by rows.
+SMEM note: the prefetched index lists are ``[n_tiles, BE]`` int32 — 4·E
+bytes per operand; shard the graph harder (or raise ``block_e``) before
+per-rank E makes that exceed SMEM.
 """
 from __future__ import annotations
 
@@ -44,6 +49,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+FP32 = "fp32"
+BF16 = "bf16"
+PRECISIONS = (FP32, BF16)
+
+
+def _dot(a, b, precision: str):
+    """Matmul with the kernel's precision policy: bf16 operands / fp32
+    accumulation when ``precision == "bf16"``, plain fp32 otherwise."""
+    if precision == BF16:
+        return jax.lax.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+    return jax.lax.dot(a, b)
 
 
 def _kernel(feats_ref, dstl_ref, wgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
@@ -62,6 +80,7 @@ def _kernel(feats_ref, dstl_ref, wgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
     enew_ref[0, 0] = e_new.astype(enew_ref.dtype)
 
     # dst-local one-hot [BE, BN]: aggregation as an MXU matmul, not a scatter
+    # (BN = block_n, a tile constant — this is O(E·BN·H), linear in E)
     dstl = dstl_ref[0, 0]                                # [BE] in [0, BN)
     wgt = wgt_ref[0, 0]                                  # [BE] (0 on padding)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
@@ -74,139 +93,207 @@ def _kernel(feats_ref, dstl_ref, wgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
         agg_ref[0] = acc_scr[...].astype(agg_ref.dtype)
 
 
-def _mlp_tail(h, wrest_ref, brest_ref, lng_ref, lnb_ref, *, n_hidden: int,
-              has_ln: bool, eps: float = 1e-5):
-    """Hidden [H,H] stack + optional LayerNorm, mirroring ``nn.mlp`` exactly:
-    ELU after every dense layer except the last, then LN."""
+# ---------------------------------------------------------------------------
+# scalar-prefetch DMA gather / scatter helpers (shared by the fused pair)
+# ---------------------------------------------------------------------------
+
+def _gather_rows(idx_ref, t, nt, src_ref, buf, sem, block_e: int):
+    """Double-buffered row gather: rows ``idx_ref[t, :]`` of ``src_ref``
+    (HBM/ANY) land in ``buf[t % 2]`` (VMEM ``[2, BE, H]``).
+
+    At tile t the copies for tile t+1 are issued into the other slot before
+    waiting on tile t's — the next tile's rows stream in under this tile's
+    compute. The SMEM-resident index list (scalar prefetch) is what makes
+    reading tile t+1's indices ahead of the grid possible.
+    """
+    def issue(tt, slot):
+        def body(k, _):
+            pltpu.make_async_copy(
+                src_ref.at[pl.ds(idx_ref[tt, k], 1)],
+                buf.at[slot, pl.ds(k, 1)], sem.at[slot]).start()
+            return 0
+        jax.lax.fori_loop(0, block_e, body, 0)
+
+    @pl.when(t == 0)
+    def _first():
+        issue(0, 0)
+
+    @pl.when(t + 1 < nt)
+    def _ahead():
+        issue(t + 1, (t + 1) % 2)
+
+    def wait(k, _):
+        pltpu.make_async_copy(
+            src_ref.at[pl.ds(idx_ref[t, k], 1)],
+            buf.at[t % 2, pl.ds(k, 1)], sem.at[t % 2]).wait()
+        return 0
+    jax.lax.fori_loop(0, block_e, wait, 0)
+    return buf[t % 2]
+
+
+def _scatter_add_rows(idx_ref, t, rows, acc, block_e: int):
+    """Sequential per-row read-modify-write: ``acc[idx_ref[t, k]] += rows[k]``.
+
+    Duplicate destinations within the tile are handled by the loop's
+    sequential semantics; padding slots carry zero rows (weight-masked), so
+    their writes to row 0 are no-ops.
+    """
+    def body(k, _):
+        r = idx_ref[t, k]
+        cur = pl.load(acc, (pl.ds(r, 1), slice(None)))
+        pl.store(acc, (pl.ds(r, 1), slice(None)),
+                 cur + jax.lax.dynamic_slice_in_dim(rows, k, 1, axis=0))
+        return 0
+    jax.lax.fori_loop(0, block_e, body, 0)
+
+
+def _edge_mlp_tile(xi, xj, et, mask, w0, b0, wrest, brest, lng, lnb, *,
+                   hidden: int, n_hidden: int, has_ln: bool, precision: str,
+                   eps: float = 1e-5):
+    """Eq. 4a on one ``[BE, H]`` tile: the first dense layer runs as three
+    H-slices of w0 over the *virtual* concat [xi ++ xj ++ e] (the ``[BE, 3H]``
+    tensor is never materialized), then the hidden stack, LayerNorm, residual
+    and edge mask. Matmuls follow the ``precision`` policy; every other op
+    (ELU, LN statistics, residual) stays fp32."""
+    h = (_dot(xi, w0[:hidden], precision)
+         + _dot(xj, w0[hidden:2 * hidden], precision)
+         + _dot(et, w0[2 * hidden:], precision) + b0[0])
     for l in range(n_hidden):
         h = jax.nn.elu(h)
-        h = jax.lax.dot(h, wrest_ref[l].astype(jnp.float32)) + \
-            brest_ref[l].astype(jnp.float32)
+        h = _dot(h, wrest[l], precision) + brest[l]
     if has_ln:
         mu = jnp.mean(h, axis=-1, keepdims=True)
         var = jnp.var(h, axis=-1, keepdims=True)
         h = (h - mu) * jax.lax.rsqrt(var + eps)
-        h = h * lng_ref[0].astype(jnp.float32) + lnb_ref[0].astype(jnp.float32)
-    return h
+        h = h * lng[0] + lnb[0]
+    return (et + h) * mask[:, None]
 
 
-def _nmp_fwd_kernel(xfull_ref, xdst_ref, e_ref, srcg_ref, dstl_ref, emask_ref,
-                    einv_ref, w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref,
-                    lnb_ref, enew_ref, agg_ref, acc_scr, *, block_n: int,
-                    block_e: int, hidden: int, n_hidden: int, has_ln: bool):
-    """Fused Eq. 4a+4b tile: gather src/dst node rows (one-hot MXU matmuls),
-    run the full residual edge MLP (incl. LayerNorm), mask, and accumulate the
-    1/d_ij-weighted dst-aligned aggregate in VMEM scratch."""
-    ej = pl.program_id(1)
-    ne = pl.num_programs(1)
+# ---------------------------------------------------------------------------
+# fused NMP forward
+# ---------------------------------------------------------------------------
 
-    @pl.when(ej == 0)
+def _nmp_fwd_kernel(srcg_ref, dstg_ref, x_any, e_ref, emask_ref, einv_ref,
+                    w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref, lnb_ref,
+                    enew_ref, agg_ref, xi_buf, xj_buf, agg_scr, sem_src,
+                    sem_dst, *, block_e: int, hidden: int, n_hidden: int,
+                    has_ln: bool, precision: str):
+    """Fused Eq. 4a+4b tile: DMA-gather src/dst node rows, run the full
+    residual edge MLP (incl. LayerNorm), mask, and scatter the 1/d_ij-
+    weighted contribution into the fp32 VMEM aggregate."""
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    @pl.when(t == 0)
     def _init():
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        agg_scr[...] = jnp.zeros_like(agg_scr)
 
-    x = xfull_ref[...].astype(jnp.float32)               # [N_round, H]
-    xd = xdst_ref[...].astype(jnp.float32)               # [BN, H]
-    et = e_ref[0, 0].astype(jnp.float32)                 # [BE, H]
-    srcg = srcg_ref[0, 0]                                # [BE] in [0, N_round)
-    dstl = dstl_ref[0, 0]                                # [BE] in [0, BN)
-    mask = emask_ref[0, 0]                               # [BE] 1/0
-    wgt = einv_ref[0, 0]                                 # [BE] 1/d_ij (0 pad)
+    xi = _gather_rows(srcg_ref, t, nt, x_any, xi_buf, sem_src,
+                      block_e).astype(jnp.float32)        # [BE, H]
+    xj = _gather_rows(dstg_ref, t, nt, x_any, xj_buf, sem_dst,
+                      block_e).astype(jnp.float32)        # [BE, H]
+    et = e_ref[0].astype(jnp.float32)                     # [BE, H]
+    mask = emask_ref[0]                                   # [BE] 1/0
+    wgt = einv_ref[0]                                     # [BE] 1/d_ij (0 pad)
 
-    # src gather: one-hot [BE, N_round] x x — MXU matmul, no HBM gather
-    oh_src = (jax.lax.broadcasted_iota(jnp.int32, (block_e, x.shape[0]), 1)
-              == srcg[:, None]).astype(jnp.float32)
-    xi = jax.lax.dot(oh_src, x)                          # [BE, H]
-    # dst gather stays inside the streamed [BN, H] node tile
-    oh_dst = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
-              == dstl[:, None]).astype(jnp.float32)
-    xj = jax.lax.dot(oh_dst, xd)                         # [BE, H]
+    e_new = _edge_mlp_tile(
+        xi, xj, et, mask, w0_ref[...].astype(jnp.float32),
+        b0_ref[...].astype(jnp.float32), wrest_ref[...].astype(jnp.float32),
+        brest_ref[...].astype(jnp.float32), lng_ref[...].astype(jnp.float32),
+        lnb_ref[...].astype(jnp.float32), hidden=hidden, n_hidden=n_hidden,
+        has_ln=has_ln, precision=precision)
+    enew_ref[0] = e_new.astype(enew_ref.dtype)
 
-    # first dense layer on the *virtual* concat [xi ++ xj ++ e]: three
-    # H-slices of w0 — the [BE, 3H] tensor is never materialized
-    w0 = w0_ref[...].astype(jnp.float32)                 # [3H, H]
-    h = (jax.lax.dot(xi, w0[:hidden]) + jax.lax.dot(xj, w0[hidden:2 * hidden])
-         + jax.lax.dot(et, w0[2 * hidden:]) + b0_ref[0].astype(jnp.float32))
-    h = _mlp_tail(h, wrest_ref, brest_ref, lng_ref, lnb_ref,
-                  n_hidden=n_hidden, has_ln=has_ln)
+    _scatter_add_rows(dstg_ref, t, e_new * wgt[:, None], agg_scr, block_e)
 
-    e_new = (et + h) * mask[:, None]                     # residual + edge mask
-    enew_ref[0, 0] = e_new.astype(enew_ref.dtype)
-
-    acc_scr[...] += jax.lax.dot_general(
-        oh_dst * wgt[:, None], e_new, (((0,), (0,)), ((), ())))   # [BN, H]
-
-    @pl.when(ej == ne - 1)
+    @pl.when(t == nt - 1)
     def _flush():
-        agg_ref[0] = acc_scr[...].astype(agg_ref.dtype)
+        agg_ref[...] = agg_scr[...].astype(agg_ref.dtype)
 
 
-def nmp_edge_mlp_agg_fwd(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest,
-                         brest, lng, lnb, *, block_n: int, block_e: int,
-                         n_hidden: int, has_ln: bool, interpret: bool = False):
-    """Fused NMP forward. ``x``: [N_round, H] node features (N_round = NB*BN);
-    ``e_tiles``: [NB, NE, BE, H] dst-aligned edge tiles; ``srcg``/``dstl``:
-    global-src / block-local-dst ids per slot; ``emask``/``einv``: edge mask
-    and 1/d_ij (both 0 on padding slots).
+def nmp_edge_mlp_agg_fwd(x, e_tiles, srcg, dstg, emask, einv, w0, b0, wrest,
+                         brest, lng, lnb, *, block_e: int, n_hidden: int,
+                         has_ln: bool, precision: str = FP32,
+                         interpret: bool = False):
+    """Fused NMP forward. ``x``: [N_round, H] node features (HBM-resident;
+    only gathered rows enter VMEM); ``e_tiles``: [T, BE, H] dst-sorted edge
+    tiles; ``srcg``/``dstg``: [T, BE] global src/dst node ids per slot
+    (scalar-prefetched to SMEM, 0 on padding); ``emask``/``einv``: [T, BE]
+    edge mask and 1/d_ij (both 0 on padding slots).
 
-    Returns (e_new [NB, NE, BE, H], agg [NB, BN, H] fp32).
+    Returns (e_new [T, BE, H], agg [N_round, H] fp32).
     """
-    NB, NE, BE, H = e_tiles.shape
+    T, BE, H = e_tiles.shape
     Lp = wrest.shape[0]
+    n_round = x.shape[0]
     kern = functools.partial(
-        _nmp_fwd_kernel, block_n=block_n, block_e=block_e, hidden=H,
-        n_hidden=n_hidden, has_ln=has_ln)
-    return pl.pallas_call(
-        kern,
-        grid=(NB, NE),
+        _nmp_fwd_kernel, block_e=BE, hidden=H, n_hidden=n_hidden,
+        has_ln=has_ln, precision=precision)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
         in_specs=[
-            pl.BlockSpec((x.shape[0], H), lambda i, j: (0, 0)),
-            pl.BlockSpec((block_n, H), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),              # x (row DMA)
+            pl.BlockSpec((1, BE, H), lambda t, *_: (t, 0, 0)),
+            pl.BlockSpec((1, BE), lambda t, *_: (t, 0)),
+            pl.BlockSpec((1, BE), lambda t, *_: (t, 0)),
+            pl.BlockSpec((3 * H, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda t, *_: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, block_n, H), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, BE, H), lambda t, *_: (t, 0, 0)),
+            pl.BlockSpec((n_round, H), lambda t, *_: (0, 0)),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((2, BE, H), x.dtype),                   # xi double-buf
+            pltpu.VMEM((2, BE, H), x.dtype),                   # xj double-buf
+            pltpu.VMEM((n_round, H), jnp.float32),             # aggregate
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((NB, NE, BE, H), e_tiles.dtype),
-            jax.ShapeDtypeStruct((NB, block_n, H), jnp.float32),
+            jax.ShapeDtypeStruct((T, BE, H), e_tiles.dtype),
+            jax.ShapeDtypeStruct((n_round, H), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((block_n, H), jnp.float32)],
         interpret=interpret,
-    )(x, x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb)
+    )(srcg, dstg, x, e_tiles, emask, einv, w0, b0, wrest, brest, lng, lnb)
 
 
-def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
-                    w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref, lnb_ref,
-                    genew_ref, gagg_ref,
+# ---------------------------------------------------------------------------
+# fused NMP backward
+# ---------------------------------------------------------------------------
+
+def _nmp_bwd_kernel(srcg_ref, dstg_ref, x_any, gagg_any, e_ref, emask_ref,
+                    einv_ref, w0_ref, b0_ref, wrest_ref, brest_ref, lng_ref,
+                    lnb_ref, genew_ref,
                     gx_ref, ge_ref, gw0_ref, gb0_ref, gwrest_ref, gbrest_ref,
                     glng_ref, glnb_ref,
-                    gx_scr, gw0_scr, gb0_scr, gwrest_scr, gbrest_scr, glng_scr,
-                    glnb_scr, *, block_n: int, block_e: int, hidden: int,
-                    n_hidden: int, has_ln: bool):
-    """Backward of the fused NMP tile: per-tile VJP of the recomputed forward.
+                    xi_buf, xj_buf, gag_buf, gx_scr, gw0_scr, gb0_scr,
+                    gwrest_scr, gbrest_scr, glng_scr, glnb_scr, sem_src,
+                    sem_dst, sem_gag, *, block_e: int, hidden: int,
+                    n_hidden: int, has_ln: bool, precision: str):
+    """Backward of the fused NMP tile: per-tile VJP of the recomputed edge
+    MLP over DMA-gathered node rows.
 
-    grad-wrt-node-features flows through the transposed one-hot matmuls and is
-    accumulated over the whole grid in a VMEM scratch; grad-wrt-weights
-    accumulates per-tile ``feats^T @ g`` (inside the VJP) in VMEM scratch.
-    Both are flushed to HBM on the final grid step.
+    The aggregate's cotangent enters as gathered rows of ``g_agg`` (the
+    adjoint of a row scatter-add is a row gather scaled by the same 1/d_ij
+    weight); grads w.r.t. the gathered xi/xj rows are scattered back into a
+    full-size VMEM node-grad accumulator by the same per-row RMW loop the
+    forward aggregation uses. Weight grads accumulate in VMEM scratch across
+    the grid; everything flushes to HBM on the final tile.
     """
-    ei = pl.program_id(0)
-    ej = pl.program_id(1)
-    last = jnp.logical_and(ei == pl.num_programs(0) - 1,
-                           ej == pl.num_programs(1) - 1)
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
 
-    @pl.when(jnp.logical_and(ei == 0, ej == 0))
+    @pl.when(t == 0)
     def _init():
         gx_scr[...] = jnp.zeros_like(gx_scr)
         gw0_scr[...] = jnp.zeros_like(gw0_scr)
@@ -216,40 +303,23 @@ def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
         glng_scr[...] = jnp.zeros_like(glng_scr)
         glnb_scr[...] = jnp.zeros_like(glnb_scr)
 
-    n_round = gx_scr.shape[0]
-    srcg = srcg_ref[0, 0]
-    dstl = dstl_ref[0, 0]
-    dstg = dstl + ei * block_n                            # global dst ids
-    mask = emask_ref[0, 0]
-    wgt = einv_ref[0, 0]
-    oh_src = (jax.lax.broadcasted_iota(jnp.int32, (block_e, n_round), 1)
-              == srcg[:, None]).astype(jnp.float32)
-    oh_dstg = (jax.lax.broadcasted_iota(jnp.int32, (block_e, n_round), 1)
-               == dstg[:, None]).astype(jnp.float32)
-    oh_dstl = (jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
-               == dstl[:, None]).astype(jnp.float32)
+    xi = _gather_rows(srcg_ref, t, nt, x_any, xi_buf, sem_src,
+                      block_e).astype(jnp.float32)
+    xj = _gather_rows(dstg_ref, t, nt, x_any, xj_buf, sem_dst,
+                      block_e).astype(jnp.float32)
+    gag = _gather_rows(dstg_ref, t, nt, gagg_any, gag_buf, sem_gag,
+                       block_e).astype(jnp.float32)
+    mask = emask_ref[0]
+    wgt = einv_ref[0]
 
-    def tile_fwd(x, et, w0, b0, wrest, brest, lng, lnb):
-        # identical arithmetic to _nmp_fwd_kernel (dst gather routed through
-        # the full x so its cotangent lands on the right global rows)
-        xi = jax.lax.dot(oh_src, x)
-        xj = jax.lax.dot(oh_dstg, x)
-        h = (jax.lax.dot(xi, w0[:hidden]) + jax.lax.dot(xj, w0[hidden:2 * hidden])
-             + jax.lax.dot(et, w0[2 * hidden:]) + b0[0])
-        for l in range(n_hidden):
-            h = jax.nn.elu(h)
-            h = jax.lax.dot(h, wrest[l]) + brest[l]
-        if has_ln:
-            mu = jnp.mean(h, axis=-1, keepdims=True)
-            var = jnp.var(h, axis=-1, keepdims=True)
-            h = (h - mu) * jax.lax.rsqrt(var + 1e-5) * lng[0] + lnb[0]
-        e_new = (et + h) * mask[:, None]
-        agg_c = jax.lax.dot_general(oh_dstl * wgt[:, None], e_new,
-                                    (((0,), (0,)), ((), ())))
-        return e_new, agg_c
+    def tile_fwd(xi, xj, et, w0, b0, wrest, brest, lng, lnb):
+        # identical arithmetic to the forward tile (incl. the precision
+        # policy, so bf16 truncation is differentiated through)
+        return _edge_mlp_tile(xi, xj, et, mask, w0, b0, wrest, brest, lng,
+                              lnb, hidden=hidden, n_hidden=n_hidden,
+                              has_ln=has_ln, precision=precision)
 
-    args = (xfull_ref[...].astype(jnp.float32),
-            e_ref[0, 0].astype(jnp.float32),
+    args = (xi, xj, e_ref[0].astype(jnp.float32),
             w0_ref[...].astype(jnp.float32),
             b0_ref[...].astype(jnp.float32),
             wrest_ref[...].astype(jnp.float32),
@@ -257,12 +327,14 @@ def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
             lng_ref[...].astype(jnp.float32),
             lnb_ref[...].astype(jnp.float32))
     _, vjp = jax.vjp(tile_fwd, *args)
-    gx, ge, gw0, gb0, gwrest, gbrest, glng, glnb = vjp(
-        (genew_ref[0, 0].astype(jnp.float32),
-         gagg_ref[0].astype(jnp.float32)))
+    # e_new feeds both outputs: its cotangent is g_enew plus the weighted
+    # rows of g_agg its scatter-add contributed to
+    g_e_new = genew_ref[0].astype(jnp.float32) + gag * wgt[:, None]
+    gxi, gxj, ge, gw0, gb0, gwrest, gbrest, glng, glnb = vjp(g_e_new)
 
-    ge_ref[0, 0] = ge.astype(ge_ref.dtype)
-    gx_scr[...] += gx
+    ge_ref[0] = ge.astype(ge_ref.dtype)
+    _scatter_add_rows(srcg_ref, t, gxi, gx_scr, block_e)
+    _scatter_add_rows(dstg_ref, t, gxj, gx_scr, block_e)
     gw0_scr[...] += gw0
     gb0_scr[...] += gb0
     gwrest_scr[...] += gwrest
@@ -270,7 +342,7 @@ def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
     glng_scr[...] += glng
     glnb_scr[...] += glnb
 
-    @pl.when(last)
+    @pl.when(t == nt - 1)
     def _flush():
         gx_ref[...] = gx_scr[...].astype(gx_ref.dtype)
         gw0_ref[...] = gw0_scr[...].astype(gw0_ref.dtype)
@@ -281,54 +353,72 @@ def _nmp_bwd_kernel(xfull_ref, e_ref, srcg_ref, dstl_ref, emask_ref, einv_ref,
         glnb_ref[...] = glnb_scr[...].astype(glnb_ref.dtype)
 
 
-def nmp_edge_mlp_agg_bwd(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest,
-                         brest, lng, lnb, g_enew, g_agg, *, block_n: int,
-                         block_e: int, n_hidden: int, has_ln: bool,
+def nmp_edge_mlp_agg_bwd(x, e_tiles, srcg, dstg, emask, einv, w0, b0, wrest,
+                         brest, lng, lnb, g_enew, g_agg, *, block_e: int,
+                         n_hidden: int, has_ln: bool, precision: str = FP32,
                          interpret: bool = False):
     """Backward Pallas kernel for the fused NMP op.
 
-    Returns (g_x [N_round, H], g_e [NB, NE, BE, H], g_w0, g_b0, g_wrest,
-    g_brest, g_lng, g_lnb), all fp32.
+    ``g_agg`` stays HBM/ANY-resident like ``x``; its rows are DMA-gathered
+    per tile. Returns (g_x [N_round, H], g_e [T, BE, H], g_w0, g_b0,
+    g_wrest, g_brest, g_lng, g_lnb), all fp32.
     """
-    NB, NE, BE, H = e_tiles.shape
+    T, BE, H = e_tiles.shape
     Lp = wrest.shape[0]
-    N = x.shape[0]
+    n_round = x.shape[0]
     kern = functools.partial(
-        _nmp_bwd_kernel, block_n=block_n, block_e=block_e, hidden=H,
-        n_hidden=n_hidden, has_ln=has_ln)
+        _nmp_bwd_kernel, block_e=BE, hidden=H, n_hidden=n_hidden,
+        has_ln=has_ln, precision=precision)
     f32 = jnp.float32
-    return pl.pallas_call(
-        kern,
-        grid=(NB, NE),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
         in_specs=[
-            pl.BlockSpec((N, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, block_n, H), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),              # x
+            pl.BlockSpec(memory_space=pltpu.ANY),              # g_agg
+            pl.BlockSpec((1, BE, H), lambda t, *_: (t, 0, 0)),
+            pl.BlockSpec((1, BE), lambda t, *_: (t, 0)),
+            pl.BlockSpec((1, BE), lambda t, *_: (t, 0)),
+            pl.BlockSpec((3 * H, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda t, *_: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, BE, H), lambda t, *_: (t, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((N, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1, BE, H), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((3 * H, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((Lp, H, H), lambda i, j: (0, 0, 0)),
-            pl.BlockSpec((Lp, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, H), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_round, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, BE, H), lambda t, *_: (t, 0, 0)),
+            pl.BlockSpec((3 * H, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((Lp, H, H), lambda t, *_: (0, 0, 0)),
+            pl.BlockSpec((Lp, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
+            pl.BlockSpec((1, H), lambda t, *_: (0, 0)),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((2, BE, H), x.dtype),                   # xi double-buf
+            pltpu.VMEM((2, BE, H), x.dtype),                   # xj double-buf
+            pltpu.VMEM((2, BE, H), g_agg.dtype),               # g_agg rows
+            pltpu.VMEM((n_round, H), f32),                     # g_x accum
+            pltpu.VMEM((3 * H, H), f32),
+            pltpu.VMEM((1, H), f32),
+            pltpu.VMEM((Lp, H, H), f32),
+            pltpu.VMEM((Lp, H), f32),
+            pltpu.VMEM((1, H), f32),
+            pltpu.VMEM((1, H), f32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((N, H), f32),
-            jax.ShapeDtypeStruct((NB, NE, BE, H), f32),
+            jax.ShapeDtypeStruct((n_round, H), f32),
+            jax.ShapeDtypeStruct((T, BE, H), f32),
             jax.ShapeDtypeStruct((3 * H, H), f32),
             jax.ShapeDtypeStruct((1, H), f32),
             jax.ShapeDtypeStruct((Lp, H, H), f32),
@@ -336,18 +426,9 @@ def nmp_edge_mlp_agg_bwd(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest,
             jax.ShapeDtypeStruct((1, H), f32),
             jax.ShapeDtypeStruct((1, H), f32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((N, H), f32),
-            pltpu.VMEM((3 * H, H), f32),
-            pltpu.VMEM((1, H), f32),
-            pltpu.VMEM((Lp, H, H), f32),
-            pltpu.VMEM((Lp, H), f32),
-            pltpu.VMEM((1, H), f32),
-            pltpu.VMEM((1, H), f32),
-        ],
         interpret=interpret,
-    )(x, e_tiles, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
-      g_enew, g_agg)
+    )(srcg, dstg, x, g_agg, e_tiles, emask, einv, w0, b0, wrest, brest,
+      lng, lnb, g_enew)
 
 
 def edge_mlp_agg(feats, dst_local, weights, w1, b1, w2, b2, *,

@@ -1,23 +1,36 @@
-"""Host layout pass + jit'd wrappers for the fused segment-aggregation kernels.
+"""Host layout passes + jit'd wrappers for the fused segment-aggregation
+kernels.
 
 Two device entry points:
 
 * ``fused_edge_mlp_agg`` — the original forward-only op over pre-gathered
-  ``[E, 3H]`` features (kept as a microbenchmark / oracle target);
+  ``[E, 3H]`` features (kept as a microbenchmark / oracle target); consumes
+  the legacy block layout from ``dst_aligned_layout``.
 * ``fused_nmp_edge_agg`` — the production op used by
-  ``repro.core.consistent_mp``: node-feature gathers are fused into the
-  kernel (no HBM ``[E, 3H]`` concat), the full residual edge MLP (incl.
+  ``repro.core.consistent_mp``: node-feature rows are DMA-gathered inside
+  the kernel from per-tile index lists (scalar prefetch — no HBM ``[E, 3H]``
+  concat and no one-hot gather matmuls), the full residual edge MLP (incl.
   LayerNorm) runs in VMEM, and a ``jax.custom_vjp`` routes the backward pass
-  through a second Pallas kernel.
+  through a second Pallas kernel. ``precision="bf16"`` runs the edge-MLP
+  matmuls in bf16 with fp32 accumulation.
 
-The host-side ``dst_aligned_layout`` pass is O(E log E) (one argsort + one
-``searchsorted``) and is cached per partition by
-``repro.core.partition.PartitionedGraphs.segment_layout``.
+Layout passes (host-side, O(E log E), cached per partition by
+``repro.core.partition.PartitionedGraphs.segment_layout``):
+
+* ``compact_gather_layout`` — the production layout: edges sorted by
+  destination, chopped into flat ``[n_tiles, block_e]`` tiles with the
+  original edge id plus global src/dst node id recorded per slot. Only the
+  final tile carries padding, so the tile occupancy is ``E / (T·BE)``
+  regardless of the degree distribution — the per-node-block padding the old
+  dst-aligned layout paid (its ``waste`` metric) does not exist here.
+* ``dst_aligned_layout`` — the legacy per-node-block layout, kept for the
+  microbenchmark kernel.
 """
 from __future__ import annotations
 
 import functools
 import math
+import os
 from typing import Tuple
 
 import numpy as np
@@ -25,13 +38,90 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.segment_agg.kernel import (
-    edge_mlp_agg, nmp_edge_mlp_agg_bwd, nmp_edge_mlp_agg_fwd)
+    FP32, PRECISIONS, edge_mlp_agg, nmp_edge_mlp_agg_bwd, nmp_edge_mlp_agg_fwd)
+
+#: env var overriding the autotune table: "block_n,block_e"
+BLOCKS_ENV = "REPRO_SEG_BLOCKS"
+
+
+def pick_block_sizes(hidden: int, dtype=jnp.float32,
+                     backend: str | None = None) -> Tuple[int, int]:
+    """Static block-size autotune for the fused NMP kernels.
+
+    Returns ``(block_n, block_e)`` from a small table keyed on (hidden,
+    dtype, backend): edge tiles deep enough to amortize the per-row DMA
+    issue overhead, shallower for wide hidden sizes so the double-buffered
+    gather scratch ([2, BE, H] per operand) stays small. ``block_n`` only
+    sets the node-padding granularity for the DMA-gather kernels (the
+    compact layout has no node blocks) but still shapes the legacy
+    dst-aligned path.
+
+    The ``REPRO_SEG_BLOCKS`` env var ("block_n,block_e") overrides the
+    table — the escape hatch for hand-tuning on new hardware.
+    """
+    override = os.environ.get(BLOCKS_ENV)
+    if override:
+        bn, be = (int(v) for v in override.split(","))
+        return bn, be
+    if backend is None:
+        backend = jax.default_backend()
+    itemsize = jnp.dtype(dtype).itemsize
+    # (max_hidden, block_n, block_e) rows; first match wins. CPU/interpret
+    # rows use small tiles: the interpreter executes the per-row loops
+    # eagerly, so deep tiles only add latency there.
+    table = ((64, 16, 32), (256, 32, 64), (4096, 32, 32)) \
+        if backend != "tpu" else ((64, 128, 512), (256, 128, 256),
+                                  (4096, 128, 128))
+    for max_h, bn, be in table:
+        if hidden <= max_h:
+            break
+    if itemsize <= 2:       # bf16 rows are half the bytes: go deeper
+        be *= 2
+    return bn, be
+
+
+# ---------------------------------------------------------------------------
+# layout passes
+# ---------------------------------------------------------------------------
+
+def compact_gather_layout(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                          block_e: int) -> dict:
+    """Compact per-tile gather/scatter index lists for the DMA-gather kernel.
+
+    Edges are sorted by destination (stable, so coincident-copy summation
+    order is deterministic) and chopped into flat ``[n_tiles, block_e]``
+    tiles. Edges with ``dst`` outside ``[0, n_nodes)`` (padding edges routed
+    to a sentinel) are dropped. Per slot the layout records the original
+    edge id (``perm``, -1 on padding — only the last tile can have any) and
+    the global src/dst node ids (0 on padding; the kernel's padding rows
+    are weight-masked to zero, so their row-0 scatters are no-ops).
+
+    Returns {perm [T, BE] int32, src [T, BE] int32, dst [T, BE] int32,
+             n_tiles, block_e, n_edges}.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = np.nonzero((dst >= 0) & (dst < n_nodes))[0]
+    order = keep[np.argsort(dst[keep], kind="stable")]
+    n_real = int(order.size)
+    nt = max(1, math.ceil(n_real / block_e))
+    perm = np.full(nt * block_e, -1, dtype=np.int32)
+    perm[:n_real] = order
+    valid = perm >= 0
+    safe = np.clip(perm, 0, None)
+    src_t = np.where(valid, src[safe], 0).astype(np.int32)
+    dst_t = np.where(valid, dst[safe], 0).astype(np.int32)
+    return dict(perm=perm.reshape(nt, block_e),
+                src=src_t.reshape(nt, block_e),
+                dst=dst_t.reshape(nt, block_e),
+                n_tiles=nt, block_e=int(block_e), n_edges=n_real)
 
 
 def dst_aligned_layout(dst: np.ndarray, n_nodes: int, block_n: int,
                        block_e: int) -> dict:
-    """Sort edges by destination and pad per node-block to edge-block
-    multiples, vectorized (argsort + searchsorted — no per-block scans).
+    """Legacy layout for the microbenchmark kernel: sort edges by destination
+    and pad per node-block to edge-block multiples, vectorized (argsort +
+    searchsorted — no per-block scans).
 
     Edges with ``dst >= n_nodes`` (e.g. padding edges redirected to a
     sentinel) are dropped from the layout: their slots stay ``-1``.
@@ -125,34 +215,34 @@ _INT_ZERO = functools.partial(np.zeros, dtype=jax.dtypes.float0)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _nmp_core(static, x, e_t, srcg, dstl, emask, einv,
+def _nmp_core(static, x, e_t, srcg, dstg, emask, einv,
               w0, b0, wrest, brest, lng, lnb):
-    block_n, block_e, n_hidden, has_ln, interpret = static
+    block_e, n_hidden, has_ln, precision, interpret = static
     return nmp_edge_mlp_agg_fwd(
-        x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
-        block_n=block_n, block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
-        interpret=interpret)
+        x, e_t, srcg, dstg, emask, einv, w0, b0, wrest, brest, lng, lnb,
+        block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
+        precision=precision, interpret=interpret)
 
 
-def _nmp_core_fwd(static, x, e_t, srcg, dstl, emask, einv,
+def _nmp_core_fwd(static, x, e_t, srcg, dstg, emask, einv,
                   w0, b0, wrest, brest, lng, lnb):
-    out = _nmp_core(static, x, e_t, srcg, dstl, emask, einv,
+    out = _nmp_core(static, x, e_t, srcg, dstg, emask, einv,
                     w0, b0, wrest, brest, lng, lnb)
-    return out, (x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest,
+    return out, (x, e_t, srcg, dstg, emask, einv, w0, b0, wrest, brest,
                  lng, lnb)
 
 
 def _nmp_core_bwd(static, res, g):
-    block_n, block_e, n_hidden, has_ln, interpret = static
-    x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb = res
+    block_e, n_hidden, has_ln, precision, interpret = static
+    x, e_t, srcg, dstg, emask, einv, w0, b0, wrest, brest, lng, lnb = res
     g_enew, g_agg = g
     gx, ge, gw0, gb0, gwrest, gbrest, glng, glnb = nmp_edge_mlp_agg_bwd(
-        x, e_t, srcg, dstl, emask, einv, w0, b0, wrest, brest, lng, lnb,
+        x, e_t, srcg, dstg, emask, einv, w0, b0, wrest, brest, lng, lnb,
         g_enew.astype(e_t.dtype), g_agg.astype(jnp.float32),
-        block_n=block_n, block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
-        interpret=interpret)
+        block_e=block_e, n_hidden=n_hidden, has_ln=has_ln,
+        precision=precision, interpret=interpret)
     return (gx.astype(x.dtype), ge.astype(e_t.dtype),
-            _INT_ZERO(srcg.shape), _INT_ZERO(dstl.shape),
+            _INT_ZERO(srcg.shape), _INT_ZERO(dstg.shape),
             jnp.zeros_like(emask), jnp.zeros_like(einv),
             gw0.astype(w0.dtype), gb0.astype(b0.dtype),
             gwrest.astype(wrest.dtype), gbrest.astype(brest.dtype),
@@ -162,58 +252,63 @@ def _nmp_core_bwd(static, res, g):
 _nmp_core.defvjp(_nmp_core_fwd, _nmp_core_bwd)
 
 
-def fused_nmp_edge_agg(x, e, edge_params, perm, dstl, edge_src, edge_mask,
-                       edge_inv_mult, *, block_n: int,
-                       interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def fused_nmp_edge_agg(x, e, edge_params, seg_perm, seg_src, seg_dst,
+                       edge_mask, edge_inv_mult, *, block_n: int = 128,
+                       interpret: bool = False,
+                       precision: str = FP32) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused, differentiable Eq. 4a+4b (edge MLP -> weighted aggregate).
 
     Args:
       x: [N_pad, H] node features.
       e: [E_pad, H] edge features (original edge order).
       edge_params: ``nn.mlp`` params of the edge MLP (consumes 3H).
-      perm: [NB, NE, BE] dst-aligned layout (original edge id per slot, -1 pad).
-      dstl: [NB, NE, BE] block-local dst per slot (0 on padding).
-      edge_src / edge_mask / edge_inv_mult: [E_pad] metadata arrays.
-      block_n: node rows per block — must match the value the layout was
-        built with (checked: the layout's block count must equal
-        ``ceil(N_pad / block_n)``).
+      seg_perm: [T, BE] compact layout (original edge id per slot, -1 pad).
+      seg_src / seg_dst: [T, BE] global src/dst node id per slot (0 on
+        padding) — scalar-prefetched into SMEM to drive the kernel's row
+        DMAs; see ``compact_gather_layout``.
+      edge_mask / edge_inv_mult: [E_pad] metadata arrays.
+      block_n: node-padding granularity (the DMA-gather kernel has no node
+        blocks; kept so config threading stays uniform with the legacy
+        layout and the xla backend).
+      precision: "fp32" | "bf16" — bf16 runs the edge-MLP matmuls with bf16
+        operands and fp32 accumulation (aggregation always accumulates fp32).
 
-    Gradient contract: ``edge_src``/``edge_mask``/``edge_inv_mult`` (and the
-    layout maps) are static graph metadata — the custom VJP returns zero
-    cotangents for them.  (The xla backend would propagate mask/inv-mult
-    gradients if asked; nothing in this repo differentiates graph metadata.)
+    Gradient contract: the index lists and ``edge_mask``/``edge_inv_mult``
+    are static graph metadata — the custom VJP returns zero cotangents for
+    them.  (The xla backend would propagate mask/inv-mult gradients if
+    asked; nothing in this repo differentiates graph metadata.)
 
     Returns (e_new [E_pad, H] == (e + MLP([x_i,x_j,e])) * mask,
              agg [N_pad, H] == segment_sum(e_new * 1/d_ij, dst)).
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected one of "
+                         f"{PRECISIONS}")
     n_pad, hid = x.shape
-    nb = perm.shape[0]
-    n_round = nb * block_n
-    if nb != -(-n_pad // block_n):
-        raise ValueError(
-            f"layout has {nb} node blocks but ceil({n_pad}/{block_n}) = "
-            f"{-(-n_pad // block_n)}; was the layout built with a different "
-            "block_n?")
     w0, b0, wrest, brest, lng, lnb, n_hidden, has_ln = _stack_edge_mlp(edge_params)
     if w0.shape[0] != 3 * hid:
         raise ValueError(f"edge MLP consumes {w0.shape[0]} features, expected "
                          f"3*H = {3 * hid}")
 
-    safe = jnp.clip(perm, 0, e.shape[0] - 1)
-    valid = (perm >= 0)
-    validf = valid.astype(e.dtype)
-    e_t = e[safe] * validf[..., None]
-    srcg = jnp.where(valid, edge_src[safe], 0).astype(jnp.int32)
-    emask_t = (edge_mask[safe] * validf).astype(jnp.float32)
-    einv_t = (edge_inv_mult[safe] * validf).astype(jnp.float32)
+    # pad node rows so the fp32 VMEM accumulator tiles cleanly
+    n_round = -(-max(n_pad, 1) // 8) * 8
     x_k = jnp.pad(x, ((0, n_round - n_pad), (0, 0)))
 
-    static = (int(block_n), int(perm.shape[-1]), int(n_hidden), bool(has_ln),
-              bool(interpret))
-    e_tiles, agg = _nmp_core(static, x_k, e_t, srcg, dstl, emask_t, einv_t,
+    safe = jnp.clip(seg_perm, 0, e.shape[0] - 1)
+    valid = (seg_perm >= 0)
+    validf = valid.astype(e.dtype)
+    e_t = e[safe] * validf[..., None]
+    srcg = jnp.clip(seg_src, 0, n_round - 1).astype(jnp.int32)
+    dstg = jnp.clip(seg_dst, 0, n_round - 1).astype(jnp.int32)
+    emask_t = (edge_mask[safe] * validf).astype(jnp.float32)
+    einv_t = (edge_inv_mult[safe] * validf).astype(jnp.float32)
+
+    static = (int(seg_perm.shape[-1]), int(n_hidden), bool(has_ln),
+              str(precision), bool(interpret))
+    e_tiles, agg = _nmp_core(static, x_k, e_t, srcg, dstg, emask_t, einv_t,
                              w0, b0, wrest, brest, lng, lnb)
 
     e_new = jnp.zeros_like(e, shape=(e.shape[0], hid))
     e_new = e_new.at[safe.reshape(-1)].add(
         (e_tiles * validf[..., None]).reshape(-1, hid))
-    return e_new, agg.reshape(n_round, hid)[:n_pad].astype(e.dtype)
+    return e_new, agg[:n_pad].astype(e.dtype)

@@ -42,6 +42,12 @@ def main():
                     choices=["blocking", "overlap"],
                     help="halo/compute schedule (overlap hides the exchange "
                          "behind interior-edge work)")
+    ap.add_argument("--mp-precision", default="fp32",
+                    choices=["fp32", "bf16"],
+                    help="edge-MLP matmul precision: bf16 runs the matmuls "
+                         "with bf16 operands and fp32 accumulation (faster "
+                         "on MXU hardware; not bit-stable with fp32 — see "
+                         "CONTRIBUTING.md)")
     args = ap.parse_args()
 
     sem = box_mesh(tuple(args.elements), p=args.order)
@@ -56,7 +62,8 @@ def main():
                        halo_mode=args.halo, ckpt_dir=args.ckpt,
                        mp_backend=args.mp_backend,
                        mp_interpret=args.mp_interpret,
-                       mp_schedule=args.mp_schedule)
+                       mp_schedule=args.mp_schedule,
+                       mp_precision=args.mp_precision)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg)
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")

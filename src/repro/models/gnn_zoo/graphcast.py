@@ -40,9 +40,10 @@ class GraphCastConfig:
     edge_parallel_axes: tuple = ()   # 2nd-level edge sharding (psum combine)
     remat_segment: int = 1           # sqrt(L) checkpointing: layers per segment
     mp_backend: str = "xla"         # NMP 4a+4b backend ("xla" | "fused")
-    seg_block_n: int = 128          # fused-kernel node block
+    seg_block_n: int = 128          # fused-kernel node padding granularity
     mp_interpret: bool = False      # Pallas interpreter (CPU CI)
     mp_schedule: str = "blocking"   # halo/compute schedule ("blocking" | "overlap")
+    mp_precision: str = "fp32"      # edge-MLP matmuls: "fp32" | "bf16" (fp32 accum)
 
 
 def init_graphcast(key, cfg: GraphCastConfig):
@@ -73,7 +74,8 @@ def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
         hn, en = nmp_layer(p_l, hc, ec, meta, halo,
                            edge_parallel_axes=cfg.edge_parallel_axes,
                            backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                           block_n=cfg.seg_block_n, schedule=cfg.mp_schedule)
+                           block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
+                           precision=cfg.mp_precision)
         return (hn.astype(cfg.act_dtype), en.astype(cfg.act_dtype)), None
 
     seg = cfg.remat_segment

@@ -46,8 +46,17 @@ def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = True)
     return p
 
 
-def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
-    y = x @ p["w"]
+def dense(p: Params, x: jnp.ndarray, precision: str | None = None) -> jnp.ndarray:
+    """``precision="bf16"`` runs the matmul with bf16 operands accumulating
+    into fp32 (``preferred_element_type``) — the same mixed-precision policy
+    the fused Pallas kernels apply; ``None``/``"fp32"`` is the plain path."""
+    if precision == "bf16":
+        y = jax.lax.dot_general(
+            x.astype(jnp.bfloat16), p["w"].astype(jnp.bfloat16),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        y = x @ p["w"]
     if "b" in p:
         y = y + p["b"]
     return y
@@ -75,10 +84,10 @@ def init_mlp(key, d_in: int, hidden: Sequence[int], d_out: int,
     return p
 
 
-def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+def mlp(p: Params, x: jnp.ndarray, precision: str | None = None) -> jnp.ndarray:
     n = len(p["layers"])
     for i, lp in enumerate(p["layers"]):
-        x = dense(lp, x)
+        x = dense(lp, x, precision=precision)
         if i < n - 1:
             x = jax.nn.elu(x)
     if "ln" in p:

@@ -35,11 +35,12 @@ class TrainConfig:
     ckpt_every: int = 100
     log_every: int = 20
     seed: int = 0
-    # NMP hot-loop backend / schedule overrides (None = keep the GNNConfig's
-    # choice); see repro.core.consistent_mp for backend/schedule semantics
+    # NMP hot-loop backend / schedule / precision overrides (None = keep the
+    # GNNConfig's choice); see repro.core.consistent_mp for the semantics
     mp_backend: Optional[str] = None
     mp_interpret: bool = False
     mp_schedule: Optional[str] = None
+    mp_precision: Optional[str] = None
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -68,6 +69,8 @@ def train_consistent_gnn(
                                   mp_interpret=tcfg.mp_interpret)
     if tcfg.mp_schedule is not None:
         cfg = dataclasses.replace(cfg, mp_schedule=tcfg.mp_schedule)
+    if tcfg.mp_precision is not None:
+        cfg = dataclasses.replace(cfg, mp_precision=tcfg.mp_precision)
     spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
     # layout + interior/boundary split passes are cached on pg — one
     # host-side pass per partition, amortized over every training step

@@ -140,27 +140,35 @@ def test_neighbor_rounds_cover_all_pairs():
 
 def test_segment_layout_cache_roundtrip():
     """Layout memoization on PartitionedGraphs: same dict object on re-query,
-    real edges covered exactly once, padding edges dropped, waste recorded."""
+    real edges covered exactly once per rank, padding edges dropped, per-slot
+    src/dst ids match the edge arrays, tiles dst-sorted."""
     m = box_mesh((4, 4, 2), p=2)
     pg = partition_mesh(m, (2, 2, 1))
     lay = pg.segment_layout(16, 32)
     assert pg.segment_layout(16, 32) is lay          # cache hit, no recompute
     assert pg.segment_layout(16, 16) is not lay      # different key
-    perm, dstl = lay["perm"], lay["dstl"]
-    assert perm.shape == (pg.R, lay["n_node_blocks"], lay["n_edge_blocks"], 32)
-    assert 0.0 <= lay["waste"] < 1.0
+    perm, src, dst = lay["perm"], lay["src"], lay["dst"]
+    assert perm.shape == (pg.R, lay["n_tiles"], 32)
+    assert src.shape == perm.shape and dst.shape == perm.shape
     for r in range(pg.R):
-        real = np.sort(perm[r][perm[r] >= 0])
-        np.testing.assert_array_equal(real, np.nonzero(pg.edge_mask[r] > 0)[0])
-        # dstl points inside the owning node block
-        for b in range(lay["n_node_blocks"]):
-            sel = perm[r, b][perm[r, b] >= 0]
-            np.testing.assert_array_equal(
-                dstl[r, b][perm[r, b] >= 0], pg.edge_dst[r][sel] - b * 16)
+        flat = perm[r].reshape(-1)
+        real = flat >= 0
+        np.testing.assert_array_equal(
+            np.sort(flat[real]), np.nonzero(pg.edge_mask[r] > 0)[0])
+        # slots carry the edge's global src/dst node ids, dst-sorted
+        np.testing.assert_array_equal(src[r].reshape(-1)[real],
+                                      pg.edge_src[r][flat[real]])
+        np.testing.assert_array_equal(dst[r].reshape(-1)[real],
+                                      pg.edge_dst[r][flat[real]])
+        assert (np.diff(pg.edge_dst[r][flat[real]]) >= 0).all()
+        # padding slots are zeroed (the kernel weight-masks them)
+        assert (src[r].reshape(-1)[~real] == 0).all()
+        assert (dst[r].reshape(-1)[~real] == 0).all()
     # device_arrays carries the maps through to step metadata
     meta = pg.device_arrays(seg_layout=(16, 32))
     np.testing.assert_array_equal(meta["seg_perm"], perm)
-    np.testing.assert_array_equal(meta["seg_dstl"], dstl)
+    np.testing.assert_array_equal(meta["seg_src"], src)
+    np.testing.assert_array_equal(meta["seg_dst"], dst)
 
 
 def test_interior_split_properties():
@@ -215,8 +223,8 @@ def test_interior_split_properties():
     # device_arrays(split=True) carries everything through to step metadata
     meta = pg.device_arrays(seg_layout=(16, 32), split=True)
     for k in ("edge_bnd_idx", "edge_bnd_valid", "edge_int_idx",
-              "edge_int_valid", "seg_perm_bnd", "seg_dstl_bnd",
-              "seg_perm_int", "seg_dstl_int"):
+              "edge_int_valid", "seg_perm_bnd", "seg_src_bnd",
+              "seg_dst_bnd", "seg_perm_int", "seg_src_int", "seg_dst_int"):
         assert k in meta, k
 
     # single-rank graph: no boundary at all
@@ -224,6 +232,56 @@ def test_interior_split_properties():
     sp1 = pg1.interior_split()
     assert sp1["interior_frac"] == 1.0
     assert float(sp1["edge_bnd_mask"].sum()) == 0.0
+
+
+def test_zero_boundary_partition_fused_layout_and_consistency():
+    """Degenerate partition: a 1-rank graph has zero boundary edges, so the
+    "bnd" side's compact layout is a single all-padding tile — the fused
+    kernel must still run it (values and grads) and produce exact zeros,
+    while the "int" side reproduces the unsplit layout's edge set."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.consistent_mp import (
+        edge_update_aggregate, edge_update_aggregate_part, init_nmp_layer)
+    from repro.core.reference import rank_static_inputs
+
+    m = box_mesh((2, 2, 2), p=2)
+    pg = partition_mesh(m, (1, 1, 1))
+    lay_b = pg.segment_layout(16, 32, part="bnd")
+    assert (lay_b["perm"] == -1).all()               # no boundary edges
+    lay_i = pg.segment_layout(16, 32, part="int")
+    np.testing.assert_array_equal(
+        np.sort(lay_i["perm"][lay_i["perm"] >= 0]),
+        np.nonzero(pg.edge_mask[0] > 0)[0])
+
+    meta = rank_static_inputs(pg, m.coords, seg_layout=(16, 32), split=True)
+    meta_r = {k: v[0] for k, v in meta.items()}
+    rng = np.random.default_rng(0)
+    params = init_nmp_layer(jax.random.PRNGKey(0), 8, 2)
+    x = jnp.asarray(rng.normal(size=(pg.n_pad, 8)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(pg.e_pad, 8)), jnp.float32)
+
+    def run(part):
+        def f(p, x, e):
+            eo, ao = edge_update_aggregate_part(
+                p, x, e, meta_r, part, backend="fused", interpret=True,
+                block_n=16)
+            return eo, ao
+        (eo, ao), vjp = jax.vjp(lambda p, x, e: f(p, x, e), params, x, e)
+        g = vjp((jnp.ones_like(eo), jnp.ones_like(ao)))
+        return eo, ao, g
+
+    e_b, a_b, g_b = run("bnd")
+    assert float(jnp.abs(e_b).max()) == 0.0 and float(jnp.abs(a_b).max()) == 0.0
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g_b))
+    # int side alone == unsplit fused result
+    e_i, a_i, _ = run("int")
+    e_all, a_all = edge_update_aggregate(
+        params, x, e, meta_r, backend="fused", interpret=True, block_n=16)
+    np.testing.assert_allclose(np.asarray(e_i), np.asarray(e_all),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a_i), np.asarray(a_all),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_gather_scatter_roundtrip():

@@ -1,0 +1,103 @@
+"""Multilevel V-cycle sweep: us/node vs level count.
+
+Times the stacked consistent-GNN forward (xla backend, jit-compiled) for a
+sweep of hierarchy depths on a fixed partitioned mesh, asserting on the way
+that every depth's partitioned loss matches its own 1-rank run (the
+multilevel consistency guarantee — the timing sweep doubles as an
+end-to-end check).  The payload becomes ``BENCH_multilevel.json`` (written
+by ``benchmarks/run.py`` / ``scripts/bench_gate.py`` and uploaded by the CI
+``bench-gate`` job).
+
+Per level count the sweep records the level sizes (node count shrinks
+geometrically), wall time, us/node, and the graph *diameter proxy* — the
+number of NMP hops information can travel per forward, which is what the
+coarse levels buy: one hop at level l spans ~``(p * 2^(l-1))`` fine-graph
+hops, so depth buys long-range transfer at a near-constant us/node cost.
+
+Absolute timings are host-dependent; no ratio is gated (the consistency
+assertions are the gate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.halo_overlap import _time
+
+LEVELS = (1, 2, 3)
+
+
+def multilevel_sweep(levels=LEVELS, elements=(4, 4, 2), order=2,
+                     grid=(2, 2, 1)) -> dict:
+    """One case per hierarchy depth: partitioned stacked forward, timed."""
+    import numpy as np
+
+    from repro.core import (
+        A2A, NONE, GNNConfig, HaloSpec, box_mesh, build_hierarchy,
+        gather_node_features, init_gnn, taylor_green_velocity,
+    )
+    from repro.core.coarsen import multilevel_static_inputs
+    from repro.core.partition import scatter_node_outputs
+    from repro.core.reference import gnn_forward_stacked
+
+    mesh = box_mesh(elements, p=order)
+    x_global = taylor_green_velocity(mesh.coords)
+    R = int(np.prod(grid))
+
+    cases = []
+    for n_levels in levels:
+        cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2,
+                        n_levels=n_levels, coarse_mp_layers=2)
+        params = init_gnn(jax.random.PRNGKey(0), cfg)
+
+        def ev(g, mode):
+            ml = build_hierarchy(mesh, g, n_levels)
+            meta = multilevel_static_inputs(ml)
+            x = jnp.asarray(gather_node_features(ml.levels[0], x_global))
+            f = jax.jit(lambda p, xx: gnn_forward_stacked(p, xx, meta,
+                                                          HaloSpec(mode=mode)))
+            return f, x, ml
+
+        f_r, x_r, ml = ev(grid, A2A if R > 1 else NONE)
+        f_1, x_1, ml1 = ev((1, 1, 1), NONE)
+        # consistency: the partitioned run must match 1-rank node-for-node
+        g_r = scatter_node_outputs(ml.levels[0], np.asarray(f_r(params, x_r)))
+        g_1 = scatter_node_outputs(ml1.levels[0], np.asarray(f_1(params, x_1)))
+        err = float(np.abs(g_r - g_1).max())
+        assert err < 1e-4, f"multilevel consistency violated at L={n_levels}: {err}"
+
+        us = _time(f_r, params, x_r, iters=10)
+        # reach: fine hops spanned per forward (fine layers + coarse layers
+        # at stride p * 2^(l-1) per hop)
+        reach = cfg.n_mp_layers
+        for lvl in range(1, n_levels):
+            reach += cfg.coarse_mp_layers * mesh.p * (2 ** (lvl - 1))
+        cases.append(dict(
+            levels=n_levels,
+            level_sizes=ml.level_sizes(),
+            us=us,
+            us_per_node=us / mesh.n_nodes,
+            hop_reach=reach,
+            max_abs_err_vs_1rank=err,
+        ))
+    return dict(backend=jax.default_backend(), elements=list(elements),
+                order=order, grid=list(grid), n_nodes=mesh.n_nodes,
+                cases=cases)
+
+
+def run(verbose: bool = True, payload: dict | None = None):
+    payload = payload if payload is not None else multilevel_sweep()
+    rows = []
+    for c in payload["cases"]:
+        sizes = "/".join(str(s) for s in c["level_sizes"])
+        rows.append((f"multilevel_L{c['levels']}", c["us"],
+                     f"sizes={sizes} reach={c['hop_reach']} "
+                     f"err={c['max_abs_err_vs_1rank']:.1e}"))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]}: {r[1]:.0f} us  ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -73,25 +73,36 @@ def write_halo_overlap_json(path: str = "BENCH_halo_overlap.json") -> dict:
     return _write_json(path, overlap_compare())
 
 
+def write_multilevel_json(path: str = "BENCH_multilevel.json") -> dict:
+    """Collect the us/node-vs-level-count V-cycle sweep (with its built-in
+    partitioned-vs-1-rank consistency assertions) and persist it."""
+    from benchmarks.multilevel import multilevel_sweep
+    return _write_json(path, multilevel_sweep())
+
+
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench,
-                            halo_overlap)
+                            halo_overlap, multilevel)
     payload = write_segment_agg_json()   # computed once, reused by kernel_bench
     overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
+    multilevel_payload = write_multilevel_json()  # reused by multilevel.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
                        (partition_stats, "TableII"),
                        (weak_scaling, "Fig7/8"),
                        (kernel_bench, "kernels"),
-                       (halo_overlap, "halo-overlap")):
+                       (halo_overlap, "halo-overlap"),
+                       (multilevel, "multilevel")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
         kw = {}
         if mod is kernel_bench:
             kw = dict(seg_cmp=payload)
         elif mod is halo_overlap:
             kw = dict(overlap_payload=overlap_payload)
+        elif mod is multilevel:
+            kw = dict(payload=multilevel_payload)
         all_rows += mod.run(verbose=True, **kw)
     fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
@@ -103,6 +114,10 @@ def main() -> None:
     print(f"wrote BENCH_halo_overlap.json ({len(overlap_payload['cases'])} "
           f"rank counts, worst overlap/blocking ratio {worst:.2f} on "
           f"{overlap_payload['backend']})")
+    deepest = multilevel_payload["cases"][-1]
+    print(f"wrote BENCH_multilevel.json (levels up to {deepest['levels']}, "
+          f"{deepest['us_per_node']:.2f} us/node at depth, hop reach "
+          f"{deepest['hop_reach']})")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -110,6 +110,12 @@ def main() -> int:
                          "sweep only runs when this or --halo-baseline is "
                          "given (keeps the segment-agg-only quick check "
                          "quick)")
+    ap.add_argument("--multilevel-out", default=None,
+                    help="where to write BENCH_multilevel.json (us/node vs "
+                         "V-cycle depth); the sweep only runs when given. "
+                         "Its partitioned-vs-1-rank consistency assertions "
+                         "are the gate — timings are recorded, not gated "
+                         "(absolute us/node is host-dependent)")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_segment_agg.json to gate against")
     ap.add_argument("--halo-baseline", default=None,
@@ -144,6 +150,12 @@ def main() -> int:
         print(json.dumps(halo_payload, indent=2, sort_keys=True))
         if halo_base is not None:
             ok &= gate_halo_overlap(halo_payload, halo_base, args.max_regression)
+    if args.multilevel_out:
+        # the sweep asserts multilevel consistency internally (raises on
+        # violation); the JSON is an uploaded artifact, not a timing gate
+        from benchmarks.run import write_multilevel_json
+        ml_payload = write_multilevel_json(args.multilevel_out)
+        print(json.dumps(ml_payload, indent=2, sort_keys=True))
     return 0 if ok else 1
 
 

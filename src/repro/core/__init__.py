@@ -1,8 +1,12 @@
 """The paper's primary contribution: consistent distributed mesh-based GNNs."""
-from repro.core.gnn import GNNConfig, gnn_forward, init_gnn
+from repro.core.coarsen import MultiLevelGraphs, TransferPlan, build_hierarchy, multilevel_static_inputs
+from repro.core.gnn import GNNConfig, gnn_forward, init_coarse_levels, init_gnn
 from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync
 from repro.core.consistent_loss import consistent_mse, consistent_node_count, consistent_node_sum
-from repro.core.consistent_mp import BLOCKING, OVERLAP, init_nmp_layer, nmp_layer
+from repro.core.consistent_mp import (
+    BLOCKING, OVERLAP, init_nmp_layer, multilevel_vcycle, nmp_layer,
+    prolong_aggregate, restrict_aggregate,
+)
 from repro.core.mesh_gen import SEMMesh, box_mesh, gll_points, mesh_graph_edges, taylor_green_velocity
 from repro.core.partition import (
     PartitionedGraphs,

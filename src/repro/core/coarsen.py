@@ -1,0 +1,315 @@
+"""Consistent multilevel (coarse-grid) hierarchy over the SEM mesh.
+
+Flat message passing moves information one graph hop per layer, so a
+surrogate at O(1B) nodes would need thousands of layers for domain-scale
+transfer.  Multi-Grid GNNs (Garnier et al., 2024) and X-MeshGraphNet
+(Nabian et al., 2024) show the scalable answer is a coarse-grid hierarchy:
+restrict node state to a much smaller graph, message-pass there (one coarse
+hop spans many fine hops), and prolong the result back.  This module builds
+that hierarchy *consistently* — the R-rank partitioned V-cycle is
+arithmetically identical to the 1-rank run — by expressing both inter-level
+transfers as edge aggregates completed by the existing halo-sum machinery.
+
+Levels
+  0   the GLL-node graph (``SEMMesh``, the paper's Sec. II-A graph);
+  1   element centroids: one node per spectral element, edges between
+      elements sharing at least one GLL node;
+  l>1 element-block clustering: the element grid is coarsened by
+      ``cluster`` per axis, nodes are block centroids, edges connect blocks
+      containing adjacent members (projection of the level below).
+
+Consistency construction (the load-bearing part):
+
+* every level is a ``PartitionedGraphs`` over the SAME R ranks, built with
+  ``from_edge_partition`` on a ``node2rank`` derived from the element
+  partition — a coarse node's primary copy lives on the rank owning its
+  (first) fine children, so restriction is rank-local in the common case;
+* each restriction/prolongation edge (fine f -> coarse c, weight pair) is
+  assigned to exactly ONE rank: the primary rank of the fine endpoint.
+  That rank always holds f; a replica copy of c is forced onto it via
+  ``from_edge_partition(extra_nodes=...)``;
+* the restriction aggregate is therefore a *partial sum over rank-local
+  children*, completed by ``halo_sync(..., combine='sum')`` over the coarse
+  level's halo plan — exactly like the Eq. 4b edge aggregate.  Replica
+  copies contribute zero and end up holding the full sum, so every coarse
+  copy is consistent.  Prolongation is the transpose: partial sums land on
+  the fine primary copy and the FINE level's halo plan completes them.
+  1-rank == R-rank then holds level by level (values and gradients), which
+  ``tests/test_multilevel.py`` and ``tests/drivers/multilevel_driver.py``
+  assert for both NMP backends and both halo schedules.
+
+Everything here is host-side numpy, computed once per partition; device
+arrays come from :func:`multilevel_static_inputs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.mesh_gen import SEMMesh, mesh_graph_edges, undirected_to_directed
+from repro.core.partition import (
+    PartitionedGraphs, RankGraph, _round_up, from_edge_partition,
+    from_element_partition, pack, partition_elements,
+)
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    """Padded per-rank restriction/prolongation index maps between two levels.
+
+    Each row set r holds the transfer edges assigned to rank r (primary rank
+    of the fine endpoint); ``fine_idx``/``coarse_idx`` are LOCAL node indices
+    on that rank at the fine/coarse level.  ``r_w`` (restriction) and
+    ``p_w`` (prolongation) are the per-edge weights — 1/|children(c)| and
+    1/|parents(f)| respectively, so both transfers are means over the
+    membership relation; padding slots carry weight 0.
+    """
+    fine_idx: np.ndarray     # int32 [R, M_pad]
+    coarse_idx: np.ndarray   # int32 [R, M_pad]
+    r_w: np.ndarray          # float32 [R, M_pad]
+    p_w: np.ndarray          # float32 [R, M_pad]
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.fine_idx.shape[1])
+
+
+@dataclasses.dataclass
+class MultiLevelGraphs:
+    """The full coarsening hierarchy: per-level partitions + transfers.
+
+    ``levels[0]`` is the fine (GLL-node) partition; ``transfers[l-1]``
+    connects level l-1 to level l.  ``coords[l]`` are the global node
+    coordinates of level l (centroids for l >= 1) — the source of each
+    level's static geometric edge features.
+    """
+    levels: List[PartitionedGraphs]
+    coords: List[np.ndarray]
+    transfers: List[TransferPlan]
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def level_sizes(self) -> List[int]:
+        return [pg.n_global for pg in self.levels]
+
+
+def _primary_ranks(graphs: List[RankGraph], n_nodes: int) -> np.ndarray:
+    """Lowest rank holding a copy of each global node (-1 if unowned)."""
+    primary = np.full(n_nodes, -1, dtype=np.int64)
+    for r in range(len(graphs) - 1, -1, -1):
+        primary[graphs[r].global_ids] = r
+    return primary
+
+
+def _parents_table(pairs: np.ndarray, n_fine: int) -> np.ndarray:
+    """Ragged membership as a padded table: parents[f] -> [P] coarse ids,
+    -1 padding (P = max parents per fine node, <= 2^dim for SEM meshes)."""
+    order = np.lexsort((pairs[:, 1], pairs[:, 0]))
+    f_sorted = pairs[order, 0]
+    counts = np.bincount(f_sorted, minlength=n_fine)
+    P = int(counts.max()) if counts.size else 1
+    table = np.full((n_fine, max(P, 1)), -1, dtype=np.int64)
+    slot = np.arange(pairs.shape[0]) - np.concatenate(
+        [[0], np.cumsum(counts)[:-1]])[f_sorted]
+    table[f_sorted, slot] = pairs[order, 1]
+    return table
+
+
+def _project_edges(fine_edges: np.ndarray, parents: np.ndarray) -> np.ndarray:
+    """Coarse directed edges: project fine edges through the membership
+    relation (every parent-pair of a fine edge's endpoints, self-loops
+    dropped, deduplicated).  Vectorized: the cross product of the padded
+    parent lists of each edge's endpoints, masked and uniqued."""
+    if fine_edges.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    pu = parents[fine_edges[:, 0]]          # [E, P]
+    pv = parents[fine_edges[:, 1]]          # [E, P]
+    cu = np.repeat(pu[:, :, None], pu.shape[1], axis=2).reshape(-1)
+    cv = np.repeat(pv[:, None, :], pv.shape[1], axis=1).reshape(-1)
+    keep = (cu >= 0) & (cv >= 0) & (cu != cv)
+    if not keep.any():
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.unique(np.stack([cu[keep], cv[keep]], axis=-1), axis=0)
+
+
+def _local_lookup(graphs: List[RankGraph], n_nodes: int) -> np.ndarray:
+    """[R, n_nodes] global -> local node index per rank (-1 if absent)."""
+    lut = np.full((len(graphs), n_nodes), -1, dtype=np.int64)
+    for r, g in enumerate(graphs):
+        lut[r, g.global_ids] = np.arange(g.global_ids.size)
+    return lut
+
+
+def _pack_transfer(pairs: np.ndarray, owner: np.ndarray,
+                   fine_graphs: List[RankGraph],
+                   coarse_graphs: List[RankGraph],
+                   R: int, pad_to: int = 8,
+                   n_fine: int = 0, n_coarse: int = 0) -> TransferPlan:
+    """Assign each (fine, coarse) transfer edge to ``owner`` (the fine
+    endpoint's primary rank) and pack local-index maps padded per rank."""
+    f_g, c_g = pairs[:, 0].astype(np.int64), pairs[:, 1].astype(np.int64)
+    n_children = np.bincount(c_g, minlength=n_coarse)
+    n_parents = np.bincount(f_g, minlength=n_fine)
+    lut_f = _local_lookup(fine_graphs, n_fine)
+    lut_c = _local_lookup(coarse_graphs, n_coarse)
+
+    counts = np.bincount(owner, minlength=R)
+    m_pad = _round_up(int(counts.max()) if counts.size else 1, pad_to)
+    fi = np.zeros((R, m_pad), dtype=np.int32)
+    ci = np.zeros((R, m_pad), dtype=np.int32)
+    rw = np.zeros((R, m_pad), dtype=np.float32)
+    pw = np.zeros((R, m_pad), dtype=np.float32)
+    order = np.argsort(owner, kind="stable")
+    slot = np.arange(pairs.shape[0]) - np.concatenate(
+        [[0], np.cumsum(counts)[:-1]])[owner[order]]
+    r_o, f_o, c_o = owner[order], f_g[order], c_g[order]
+    lf, lc = lut_f[r_o, f_o], lut_c[r_o, c_o]
+    assert (lf >= 0).all() and (lc >= 0).all(), \
+        "transfer edge references a node missing from its owner rank"
+    fi[r_o, slot] = lf
+    ci[r_o, slot] = lc
+    rw[r_o, slot] = 1.0 / n_children[c_o]
+    pw[r_o, slot] = 1.0 / n_parents[f_o]
+    return TransferPlan(fine_idx=fi, coarse_idx=ci, r_w=rw, p_w=pw)
+
+
+def build_hierarchy(mesh: SEMMesh, rank_grid: Sequence[int], n_levels: int,
+                    cluster: int = 2, pad_to: int = 8) -> MultiLevelGraphs:
+    """Build the consistent multilevel hierarchy for an element partition.
+
+    Level 0 reuses the paper's element partitioner; level 1 collapses each
+    element to its centroid (``node2rank = elem2rank``, so coarse nodes live
+    with their fine children); deeper levels cluster the element grid by
+    ``cluster`` per axis, a block's primary rank being that of its first
+    member — rank-grid/cluster misalignment then genuinely splits a block's
+    children across ranks, which is the case the halo-summed restriction
+    exists for.
+    """
+    if n_levels < 1:
+        raise ValueError("n_levels must be >= 1")
+    R = int(np.prod(rank_grid))
+    e2r = partition_elements(mesh, rank_grid)
+    graphs0 = from_element_partition(mesh, e2r, R)
+    pg0 = pack(graphs0, mesh.n_nodes, pad_to=pad_to)
+
+    levels = [pg0]
+    coords = [mesh.coords]
+    transfers: List[TransferPlan] = []
+
+    prev_graphs = graphs0
+    prev_coords = mesh.coords
+    prev_primary = _primary_ranks(graphs0, mesh.n_nodes)
+    prev_edges = undirected_to_directed(mesh_graph_edges(mesh))
+    # element-grid position per level-(l-1) node, used for block clustering
+    prev_grid = None
+    prev_grid_dims = None
+
+    for level in range(1, n_levels):
+        if level == 1:
+            # element centroids: membership = the element-node incidence
+            n_coarse = mesh.n_elem
+            t_fine = mesh.elem_nodes.reshape(-1)
+            t_coarse = np.repeat(np.arange(mesh.n_elem), mesh.nodes_per_elem)
+            pairs = np.stack([t_fine, t_coarse], axis=-1)
+            coarse_coords = np.stack([
+                prev_coords[mesh.elem_nodes[e]].mean(axis=0)
+                for e in range(mesh.n_elem)])
+            node2rank = e2r.copy()
+            grid = np.array([mesh.element_grid_index(e)
+                             for e in range(mesh.n_elem)], dtype=np.int64)
+            grid_dims = np.array(mesh.nelem_axes, dtype=np.int64)
+        else:
+            # cluster the element grid by `cluster` per axis
+            block = prev_grid // cluster
+            grid_dims = (prev_grid_dims + cluster - 1) // cluster
+            strides = np.ones_like(grid_dims)
+            for ax in range(1, len(grid_dims)):
+                strides[ax] = strides[ax - 1] * grid_dims[ax - 1]
+            flat = (block * strides[None, :]).sum(axis=1)
+            n_coarse = int(np.prod(grid_dims))
+            pairs = np.stack([np.arange(flat.size, dtype=np.int64), flat],
+                             axis=-1)
+            coarse_coords = np.zeros((n_coarse, prev_coords.shape[1]))
+            counts = np.bincount(flat, minlength=n_coarse).astype(np.float64)
+            for d in range(prev_coords.shape[1]):
+                coarse_coords[:, d] = np.bincount(
+                    flat, weights=prev_coords[:, d], minlength=n_coarse)
+            coarse_coords /= np.maximum(counts, 1.0)[:, None]
+            # a block lives with its first member's children, reusing the
+            # existing rank assignment
+            first = np.full(n_coarse, flat.size, dtype=np.int64)
+            np.minimum.at(first, flat, np.arange(flat.size))
+            node2rank = prev_primary[first]
+            grid = np.zeros((n_coarse, len(grid_dims)), dtype=np.int64)
+            rem = np.arange(n_coarse)
+            for ax in range(len(grid_dims)):
+                grid[:, ax] = rem % grid_dims[ax]
+                rem = rem // grid_dims[ax]
+
+        if n_coarse < 1:
+            raise ValueError(f"level {level} has no nodes")
+
+        # dedup the membership pairs (a face GLL node appears once per
+        # touching element — each (f, c) must count once in the transfer)
+        pairs = np.unique(pairs, axis=0)
+        parents = _parents_table(pairs, len(prev_coords))
+        coarse_edges = _project_edges(prev_edges, parents)
+
+        # transfer edges are owned by the fine endpoint's primary rank;
+        # force a coarse replica there so both endpoints are rank-local
+        owner = prev_primary[pairs[:, 0]]
+        extra_arr = [np.unique(pairs[owner == r, 1]) for r in range(R)]
+
+        coarse_graphs = from_edge_partition(
+            n_coarse, coarse_edges, R, node2part=node2rank,
+            extra_nodes=extra_arr)
+        pg_c = pack(coarse_graphs, n_coarse, pad_to=pad_to)
+        transfers.append(_pack_transfer(
+            pairs, owner, prev_graphs, coarse_graphs, R, pad_to=pad_to,
+            n_fine=len(prev_coords), n_coarse=n_coarse))
+        levels.append(pg_c)
+        coords.append(coarse_coords)
+
+        prev_graphs = coarse_graphs
+        prev_coords = coarse_coords
+        prev_primary = node2rank.copy()
+        prev_edges = coarse_edges
+        prev_grid = grid
+        prev_grid_dims = grid_dims
+
+    return MultiLevelGraphs(levels=levels, coords=coords, transfers=transfers)
+
+
+def multilevel_static_inputs(ml: MultiLevelGraphs,
+                             seg_layout: tuple | None = None,
+                             split: bool = False) -> Dict:
+    """Flat static-metadata dict for the multilevel GNN step functions.
+
+    Level-0 keys are unprefixed (drop-in compatible with the single-level
+    paths); level l >= 1 arrays are prefixed ``lvl{l}_`` and additionally
+    carry the transfer maps ``lvl{l}_t_fine`` / ``_t_coarse`` / ``_t_rw`` /
+    ``_t_pw`` connecting level l-1 to l.  Every array keeps the leading rank
+    axis, so the whole dict shards over the graph mesh axis exactly like the
+    single-level metadata (``distributed._meta_specs``).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.reference import rank_static_inputs
+
+    meta = rank_static_inputs(ml.levels[0], ml.coords[0],
+                              seg_layout=seg_layout, split=split)
+    for level in range(1, ml.n_levels):
+        m = rank_static_inputs(ml.levels[level], ml.coords[level],
+                               seg_layout=seg_layout, split=split)
+        t = ml.transfers[level - 1]
+        m["t_fine"] = jnp.asarray(t.fine_idx)
+        m["t_coarse"] = jnp.asarray(t.coarse_idx)
+        m["t_rw"] = jnp.asarray(t.r_w)
+        m["t_pw"] = jnp.asarray(t.p_w)
+        for k, v in m.items():
+            meta[f"lvl{level}_{k}"] = v
+    return meta

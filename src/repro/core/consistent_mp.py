@@ -59,13 +59,13 @@ Schedules for the whole layer (``schedule=`` on :func:`nmp_layer`):
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core.halo import HaloSpec, halo_sync
+from repro.core.halo import NEIGHBOR, HaloSpec, halo_sync
 from repro.graph import segment
 
 XLA = "xla"
@@ -328,3 +328,148 @@ def nmp_layer(
 
     # --- Eq. 4e: node update (residual) ---
     return node_update(params, x, agg, meta), e_new
+
+
+# ---------------------------------------------------------------------------
+# multilevel (coarse-grid) message passing
+# ---------------------------------------------------------------------------
+
+def level_meta(meta: Dict[str, jnp.ndarray], level: int) -> Dict[str, jnp.ndarray]:
+    """Extract one level's sub-metadata from the flat multilevel dict.
+
+    Level 0 keys are unprefixed; coarse levels are prefixed ``lvl{l}_``
+    (see ``repro.core.coarsen.multilevel_static_inputs``).
+    """
+    if level == 0:
+        return {k: v for k, v in meta.items() if not k.startswith("lvl")}
+    prefix = f"lvl{level}_"
+    sub = {k[len(prefix):]: v for k, v in meta.items() if k.startswith(prefix)}
+    if not sub:
+        raise ValueError(
+            f"multilevel meta for level {level} missing — attach the "
+            "coarse-level arrays via repro.core.coarsen."
+            "multilevel_static_inputs / prepare_gnn_meta(hierarchy=...)")
+    return sub
+
+
+def _transfer(x: jnp.ndarray, src_idx: jnp.ndarray, dst_idx: jnp.ndarray,
+              w: jnp.ndarray, n_out: int) -> jnp.ndarray:
+    """Weighted gather/scatter-add: out[dst] += w * x[src] (0-weight pad)."""
+    def one(xb):
+        return segment.segment_sum(xb[src_idx] * w[:, None], dst_idx, n_out)
+    return jax.vmap(one)(x) if x.ndim == 3 else one(x)
+
+
+def restrict_aggregate(x_fine: jnp.ndarray, tmeta: Dict[str, jnp.ndarray],
+                       n_coarse_pad: int) -> jnp.ndarray:
+    """Rank-local restriction partial sum (fine -> coarse, weight 1/|children|).
+
+    Each restriction edge lives on exactly one rank (the fine endpoint's
+    primary), so this is a PARTIAL sum: the caller must complete it with
+    ``halo_sync(..., combine='sum')`` over the coarse level's halo plan —
+    the same synchronization the Eq. 4b edge aggregate gets.  Without the
+    halo-sum, coarse replica copies would hold zeros and the hierarchy
+    would break the 1-rank == R-rank guarantee.
+    """
+    return _transfer(x_fine, tmeta["t_fine"], tmeta["t_coarse"],
+                     tmeta["t_rw"], n_coarse_pad)
+
+
+def prolong_aggregate(x_coarse: jnp.ndarray, tmeta: Dict[str, jnp.ndarray],
+                      n_fine_pad: int) -> jnp.ndarray:
+    """Rank-local prolongation partial sum (coarse -> fine, weight
+    1/|parents|); completed by a halo-sum over the FINE level's plan."""
+    return _transfer(x_coarse, tmeta["t_coarse"], tmeta["t_fine"],
+                     tmeta["t_pw"], n_fine_pad)
+
+
+def multilevel_vcycle(
+    coarse_params: Sequence[nn.Params],   # one {"edge_enc", "mp"} per coarse level
+    h: jnp.ndarray,                       # [N_pad, H] or [B, N_pad, H] fine state
+    meta: Dict[str, jnp.ndarray],         # flat multilevel metadata (lvl{l}_ keys)
+    halo: HaloSpec,                       # level-0 halo
+    coarse_halos: Sequence[HaloSpec] = (),
+    sync_fns: Sequence[Callable | None] | None = None,
+    *,
+    backend: str = XLA,
+    interpret: bool = False,
+    block_n: int = 128,
+    schedule: str = BLOCKING,
+    precision: str = FP32,
+) -> jnp.ndarray:
+    """One consistent V-cycle over the coarsening hierarchy. Returns h'.
+
+    Down sweep, level l-1 -> l: the fine state is restricted
+    (:func:`restrict_aggregate`), the partial sums are halo-summed over the
+    coarse level's plan — the step that makes the hierarchy consistent —
+    then ``coarse_params[l-1]["mp"]`` consistent NMP layers smooth at that
+    level (running through the SAME backend/schedule/precision machinery as
+    the fine layers: fused layouts and interior/boundary splits come from
+    each level's own ``PartitionedGraphs``).  Up sweep: each level's state
+    is prolonged (:func:`prolong_aggregate`), halo-summed over the finer
+    level's plan, and residually added.
+
+    ``coarse_halos[l-1]`` is level l's HaloSpec (each level has its own
+    ppermute rounds); with fewer entries than coarse levels the level-0
+    ``halo`` spec is reused — correct ONLY for the A2A and NONE modes, and
+    note the fallback inherits ``wire_dtype`` too (fine-level wire
+    compression then also applies to the coarse exchanges).  A NEIGHBOR-mode
+    ``halo`` with a missing coarse spec raises rather than routing that
+    level's exchange through the fine level's rank-adjacency perms (unless a
+    ``sync_fns`` entry overrides that level's exchange).  ``sync_fns``
+    optionally overrides the exchange per level (index l applies to level
+    l), mirroring ``nmp_layer(sync_fn=...)``.
+    """
+    n_levels = len(coarse_params) + 1
+    metas = [level_meta(meta, lvl) for lvl in range(n_levels)]
+    if halo.mode == NEIGHBOR:
+        for lvl in range(1, n_levels):
+            covered = (lvl - 1 < len(coarse_halos)
+                       or (sync_fns is not None and sync_fns[lvl] is not None))
+            if not covered:
+                raise ValueError(
+                    "NEIGHBOR-mode multilevel exchange needs one HaloSpec "
+                    f"per coarse level (level {lvl} has neither a "
+                    f"coarse_halos entry — got {len(coarse_halos)} for "
+                    f"{n_levels - 1} coarse levels — nor a sync_fns "
+                    "override): the level-0 perms encode the FINE rank "
+                    "adjacency and cannot be reused — build each level's "
+                    "spec via halo_spec_from_plan(hierarchy.levels[l].halo, "
+                    "...)")
+    halos = [halo] + [
+        coarse_halos[i] if i < len(coarse_halos) else halo
+        for i in range(n_levels - 1)
+    ]
+
+    def sync(a, lvl, m):
+        if sync_fns is not None and sync_fns[lvl] is not None:
+            return sync_fns[lvl](a)
+        return halo_sync(a, m, halos[lvl], combine="sum")
+
+    layer_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
+                    schedule=schedule, precision=precision)
+    states = [h]
+    # --- down sweep: restrict, complete partial sums, smooth ---
+    for lvl in range(1, n_levels):
+        m = metas[lvl]
+        n_pad_c = m["node_mask"].shape[-1]
+        c = restrict_aggregate(states[-1], m, n_pad_c)
+        c = sync(c, lvl, m) * m["node_mask"][..., None]
+        p = coarse_params[lvl - 1]
+        e = nn.mlp(p["edge_enc"], m["static_edge_feats"]) \
+            * m["edge_mask"][..., None]
+        if c.ndim == 3:
+            e = jnp.broadcast_to(e[None], (c.shape[0],) + e.shape)
+        for lp in p["mp"]:
+            c, e = nmp_layer(lp, c, e, m, halos[lvl],
+                             sync_fn=sync_fns[lvl] if sync_fns else None,
+                             **layer_kw)
+        states.append(c)
+    # --- up sweep: prolong, complete partial sums, residual add ---
+    for lvl in range(n_levels - 1, 0, -1):
+        mf = metas[lvl - 1]
+        n_pad_f = mf["node_mask"].shape[-1]
+        up = prolong_aggregate(states[lvl], metas[lvl], n_pad_f)
+        up = sync(up, lvl - 1, mf)
+        states[lvl - 1] = (states[lvl - 1] + up) * mf["node_mask"][..., None]
+    return states[0]

@@ -38,18 +38,26 @@ def make_gnn_step_fns(
     data_axes: Sequence[str] = ("data",),
     graph_axis: str = "graph",
     learning_rate: float = 1e-3,
+    coarse_halos: Sequence[HaloSpec] = (),
 ):
     """Build jit'd (eval_step, loss_step, train_step) closed over mesh/halo.
 
     train_step here is plain SGD for consistency experiments; the full
     training loop (AdamW etc.) lives in repro.train and reuses grad_step.
+
+    Multilevel models (``cfg.n_levels > 1``) additionally need
+    ``coarse_halos`` — one HaloSpec per coarse level, each built from that
+    level's own halo plan (``halo_spec_from_plan(hierarchy.levels[l].halo,
+    mode, axis=graph_axis)``) — and metadata carrying the ``lvl{l}_*``
+    arrays (``prepare_gnn_meta(hierarchy=...)``).
     """
     all_axes = tuple(data_axes) + (graph_axis,)
     # NMP hot-loop backend + halo/compute schedule from the model config
     # (see repro.core.consistent_mp)
     backend_kw = dict(backend=cfg.mp_backend, interpret=cfg.mp_interpret,
                       block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
-                      precision=cfg.mp_precision)
+                      precision=cfg.mp_precision,
+                      coarse_halos=tuple(coarse_halos))
 
     def shard_meta(meta):
         """Strip the leading rank axis inside the shard."""

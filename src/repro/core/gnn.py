@@ -11,13 +11,13 @@ Configs: "small" (N_H=8, M=4, 2 MLP hidden layers, 3,979 params) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core.consistent_mp import init_nmp_layer, nmp_layer
+from repro.core.consistent_mp import init_nmp_layer, multilevel_vcycle, nmp_layer
 from repro.core.halo import HaloSpec
 
 
@@ -37,6 +37,10 @@ class GNNConfig:
     mp_interpret: bool = False   # run Pallas via interpreter (CPU CI)
     mp_schedule: str = "blocking"  # "blocking" | "overlap" (halo/compute)
     mp_precision: str = "fp32"   # "fp32" | "bf16" edge-MLP matmul precision
+    # --- multilevel (coarse-grid) message passing (repro.core.coarsen) ---
+    n_levels: int = 1            # 1 = flat NMP; >1 adds a consistent V-cycle
+    coarse_mp_layers: int = 2    # NMP layers smoothing each coarse level
+    coarse_edge_in: int = 4      # coarse static edge feats (dist vec + mag)
 
     @staticmethod
     def small() -> "GNNConfig":
@@ -49,7 +53,7 @@ class GNNConfig:
 
 def init_gnn(key, cfg: GNNConfig, dtype=jnp.float32) -> nn.Params:
     keys = jax.random.split(key, cfg.n_mp_layers + 3)
-    return {
+    params = {
         "node_enc": nn.init_mlp(keys[0], cfg.node_in, [cfg.hidden] * cfg.mlp_hidden_layers, cfg.hidden, dtype),
         "edge_enc": nn.init_mlp(keys[1], cfg.edge_in, [cfg.hidden] * cfg.mlp_hidden_layers, cfg.hidden, dtype),
         "mp": [init_nmp_layer(keys[2 + i], cfg.hidden, cfg.mlp_hidden_layers, dtype)
@@ -57,6 +61,30 @@ def init_gnn(key, cfg: GNNConfig, dtype=jnp.float32) -> nn.Params:
         "node_dec": nn.init_mlp(keys[-1], cfg.hidden, [cfg.hidden] * cfg.mlp_hidden_layers,
                                 cfg.node_out, dtype, final_layernorm=False),
     }
+    if cfg.n_levels > 1:
+        params["coarse"] = init_coarse_levels(
+            jax.random.fold_in(key, 7), cfg.hidden, cfg.mlp_hidden_layers,
+            cfg.n_levels, cfg.coarse_mp_layers, cfg.coarse_edge_in, dtype)
+    return params
+
+
+def init_coarse_levels(key, hidden: int, mlp_hidden_layers: int,
+                       n_levels: int, coarse_mp_layers: int,
+                       coarse_edge_in: int, dtype=jnp.float32) -> list:
+    """Per-coarse-level params for the V-cycle: an edge encoder lifting the
+    level's static geometric edge features to the hidden width, plus
+    ``coarse_mp_layers`` consistent NMP layers smoothing that level."""
+    out = []
+    for lvl in range(1, n_levels):
+        kl = jax.random.fold_in(key, lvl)
+        ke, *kmp = jax.random.split(kl, coarse_mp_layers + 1)
+        out.append({
+            "edge_enc": nn.init_mlp(ke, coarse_edge_in,
+                                    [hidden] * mlp_hidden_layers, hidden, dtype),
+            "mp": [init_nmp_layer(k, hidden, mlp_hidden_layers, dtype)
+                   for k in kmp],
+        })
+    return out
 
 
 def build_edge_inputs(x: jnp.ndarray, static_edge_feats: jnp.ndarray,
@@ -82,6 +110,7 @@ def gnn_forward(
     block_n: int = 128,
     schedule: str = "blocking",
     precision: str = "fp32",
+    coarse_halos: Sequence[HaloSpec] = (),
 ) -> jnp.ndarray:
     """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y].
 
@@ -89,13 +118,28 @@ def gnn_forward(
     the NMP 4a+4b implementation, the halo/compute schedule and the edge-MLP
     matmul precision (see ``repro.core.consistent_mp``); usually taken from
     ``GNNConfig``.
+
+    When the params carry coarse levels (``GNNConfig.n_levels > 1``), the M
+    fine NMP layers act as the pre-smoother and a consistent multilevel
+    V-cycle runs before the decoder; ``meta`` must then hold the coarse-level
+    arrays (``prepare_gnn_meta(hierarchy=...)``) and ``coarse_halos`` one
+    HaloSpec per coarse level (each level has its own exchange plan).
     """
-    e_in = build_edge_inputs(x, static_edge_feats, meta)
-    h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
-    e = nn.mlp(params["edge_enc"], e_in) * meta["edge_mask"][..., None]
+    sub = meta
+    if "coarse" in params:
+        from repro.core.consistent_mp import level_meta
+        sub = level_meta(meta, 0)
+    e_in = build_edge_inputs(x, static_edge_feats, sub)
+    h = nn.mlp(params["node_enc"], x) * sub["node_mask"][..., None]
+    e = nn.mlp(params["edge_enc"], e_in) * sub["edge_mask"][..., None]
     for lp in params["mp"]:
-        h, e = nmp_layer(lp, h, e, meta, halo, backend=backend,
+        h, e = nmp_layer(lp, h, e, sub, halo, backend=backend,
                          interpret=interpret, block_n=block_n,
                          schedule=schedule, precision=precision)
-    y = nn.mlp(params["node_dec"], h) * meta["node_mask"][..., None]
+    if "coarse" in params:
+        h = multilevel_vcycle(params["coarse"], h, meta, halo, coarse_halos,
+                              backend=backend, interpret=interpret,
+                              block_n=block_n, schedule=schedule,
+                              precision=precision)
+    y = nn.mlp(params["node_dec"], h) * sub["node_mask"][..., None]
     return y

@@ -353,6 +353,7 @@ def from_edge_partition(
     R: int,
     node2part: np.ndarray | None = None,
     assign: str = "dst",
+    extra_nodes: Sequence[np.ndarray] | None = None,
 ) -> List[RankGraph]:
     """Vertex-cut partition of an arbitrary directed edge list.
 
@@ -360,6 +361,13 @@ def from_edge_partition(
     blocks by default); each directed edge is assigned to one rank
     (``assign`` = 'dst' | 'src'); endpoint copies are replicated wherever
     used. d_ij == 1 always; d_i = number of ranks holding a copy of i.
+
+    ``extra_nodes`` (one array of global ids per rank) forces additional
+    replica copies beyond the edge-endpoint closure — the multilevel
+    hierarchy uses this to place a coarse-node copy on every rank that owns
+    restriction/prolongation edges into it (``repro.core.coarsen``), so the
+    inter-level transfer aggregates can be completed by the same halo-sum
+    machinery as the edge aggregates.
     """
     if node2part is None:
         node2part = (np.arange(n_nodes) * R) // max(n_nodes, 1)
@@ -372,7 +380,10 @@ def from_edge_partition(
     for r in range(R):
         er = directed_edges[e_owner == r]
         prim = np.nonzero(node2part == r)[0]
-        gids = np.unique(np.concatenate([er.reshape(-1), prim]))
+        parts = [er.reshape(-1), prim]
+        if extra_nodes is not None and len(extra_nodes[r]):
+            parts.append(np.asarray(extra_nodes[r], dtype=np.int64))
+        gids = np.unique(np.concatenate(parts))
         rank_nodes.append(gids)
         rank_edges.append(er)
         node_mult[gids] += 1

@@ -45,6 +45,91 @@ def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray,
     return meta
 
 
+def vcycle_stacked(
+    coarse_params,
+    h: jnp.ndarray,                  # [R, N_pad, H]
+    meta: Dict[str, jnp.ndarray],    # flat multilevel stacked metadata
+    halo: HaloSpec,
+    *,
+    backend: str = "xla",
+    interpret: bool = False,
+    block_n: int = 128,
+    schedule: str = "blocking",
+    precision: str = "fp32",
+) -> jnp.ndarray:
+    """Single-device oracle for ``consistent_mp.multilevel_vcycle``: ranks
+    loop in python and every exchange — the restriction/prolongation
+    completion halo-sums included — goes through ``halo_sync_reference``
+    over each level's stacked A2A arrays.  The production shard_map V-cycle
+    must agree with this exactly (tests/test_multilevel.py, values and
+    gradients, both backends x both schedules)."""
+    from repro.core.consistent_mp import (
+        edge_update_aggregate, edge_update_aggregate_part, level_meta,
+        node_update, prolong_aggregate, restrict_aggregate)
+
+    n_levels = len(coarse_params) + 1
+    metas = [level_meta(meta, lvl) for lvl in range(n_levels)]
+    R = h.shape[0]
+    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
+                   precision=precision)
+
+    def smooth(lp, hl, el, m):
+        """One consistent NMP layer over the stacked ranks (reference halo)."""
+        if schedule == "overlap":
+            outs_b = [edge_update_aggregate_part(
+                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, "bnd",
+                **part_kw) for r in range(R)]
+            outs_i = [edge_update_aggregate_part(
+                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, "int",
+                **part_kw) for r in range(R)]
+            agg = jnp.stack([o[1] for o in outs_b])
+            if halo.mode != "none":
+                agg = halo_sync_reference(agg, m, halo, combine="sum")
+            agg = agg + jnp.stack([o[1] for o in outs_i])
+            e_new = jnp.stack([b[0] + i[0] for b, i in zip(outs_b, outs_i)])
+        else:
+            outs = [edge_update_aggregate(
+                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, **part_kw)
+                for r in range(R)]
+            agg = jnp.stack([o[1] for o in outs])
+            if halo.mode != "none":
+                agg = halo_sync_reference(agg, m, halo, combine="sum")
+            e_new = jnp.stack([o[0] for o in outs])
+        h_new = jnp.stack([
+            node_update(lp, hl[r], agg[r], {k: v[r] for k, v in m.items()})
+            for r in range(R)])
+        return h_new, e_new
+
+    states = [h]
+    for lvl in range(1, n_levels):
+        m = metas[lvl]
+        n_pad_c = m["node_mask"].shape[-1]
+        c = jnp.stack([restrict_aggregate(
+            states[-1][r], {k: v[r] for k, v in m.items()}, n_pad_c)
+            for r in range(R)])
+        if halo.mode != "none":
+            c = halo_sync_reference(c, m, halo, combine="sum")
+        c = c * m["node_mask"][..., None]
+        p = coarse_params[lvl - 1]
+        e = jnp.stack([
+            rnn.mlp(p["edge_enc"], m["static_edge_feats"][r])
+            * m["edge_mask"][r][..., None] for r in range(R)])
+        for lp in p["mp"]:
+            c, e = smooth(lp, c, e, m)
+        states.append(c)
+    for lvl in range(n_levels - 1, 0, -1):
+        mt = metas[lvl]
+        mf = metas[lvl - 1]
+        n_pad_f = mf["node_mask"].shape[-1]
+        up = jnp.stack([prolong_aggregate(
+            states[lvl][r], {k: v[r] for k, v in mt.items()}, n_pad_f)
+            for r in range(R)])
+        if halo.mode != "none":
+            up = halo_sync_reference(up, mf, halo, combine="sum")
+        states[lvl - 1] = (states[lvl - 1] + up) * mf["node_mask"][..., None]
+    return states[0]
+
+
 def gnn_forward_stacked(
     params: rnn.Params,
     x: jnp.ndarray,                  # [R, N_pad, F_x]
@@ -65,11 +150,18 @@ def gnn_forward_stacked(
     runs the interior/boundary split with the exchange restricted to the
     boundary partial aggregate — the same dataflow the production overlap
     path hides communication behind (``meta`` then needs the split arrays
-    from ``rank_static_inputs(..., split=True)``).
+    from ``rank_static_inputs(..., split=True)``).  Params carrying coarse
+    levels run the multilevel V-cycle through :func:`vcycle_stacked` before
+    the decoder (``meta`` from
+    ``repro.core.coarsen.multilevel_static_inputs``).
     """
     from repro.core.consistent_mp import (
-        edge_update_aggregate, edge_update_aggregate_part, node_update)
+        edge_update_aggregate, edge_update_aggregate_part, level_meta,
+        node_update)
 
+    full_meta = meta
+    if "coarse" in params:
+        meta = level_meta(meta, 0)
     R = x.shape[0]
     hs, es = [], []
     for r in range(R):
@@ -118,6 +210,11 @@ def gnn_forward_stacked(
         ])
         e = jnp.stack(new_e)
 
+    if "coarse" in params:
+        h = vcycle_stacked(params["coarse"], h, full_meta, halo,
+                           backend=backend, interpret=interpret,
+                           block_n=block_n, schedule=schedule,
+                           precision=precision)
     return jnp.stack([rnn.mlp(params["node_dec"], h[r]) * meta["node_mask"][r][..., None]
                       for r in range(R)])
 

@@ -84,7 +84,8 @@ def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
 def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
                      seg_block_n: int | None = 128,
                      seg_block_e: int | None = 128,
-                     schedule: str = "blocking", hidden: int | None = None):
+                     schedule: str = "blocking", hidden: int | None = None,
+                     hierarchy=None):
     """Host-side static metadata prep for the GNN step functions.
 
     Wraps ``rank_static_inputs`` and, for the fused NMP backend, attaches the
@@ -101,6 +102,12 @@ def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
     ``schedule="overlap"`` additionally attaches the cached interior/boundary
     edge split (and, for the fused backend, the per-side layouts) consumed
     by ``nmp_layer(schedule="overlap")``.
+
+    ``hierarchy`` (a ``repro.core.coarsen.MultiLevelGraphs`` whose level 0
+    is ``pg``) switches to the multilevel layout: the same level-0 keys plus
+    ``lvl{l}_*`` coarse-level arrays and restriction/prolongation transfer
+    maps, with the per-level seg layouts / interior splits attached under
+    the same rules as level 0.
     """
     from repro.core.reference import rank_static_inputs
     seg = None
@@ -115,6 +122,23 @@ def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
             seg = (seg_block_n or auto_n, seg_block_e or auto_e)
         else:
             seg = (seg_block_n, seg_block_e)
+    if hierarchy is not None:
+        if hierarchy.levels[0] is not pg:
+            raise ValueError("hierarchy.levels[0] must be the pg passed in "
+                             "(the fine partition the step fns shard over)")
+        # the hierarchy carries its build-time coords (coarse centroids are
+        # derived from them) — refuse a mismatched coords argument rather
+        # than silently using a different coordinate source per level
+        if coords is not None and coords is not hierarchy.coords[0] \
+                and not np.array_equal(coords, hierarchy.coords[0]):
+            raise ValueError(
+                "coords disagrees with hierarchy.coords[0]: the hierarchy's "
+                "build-time coordinates define every level's static edge "
+                "features — rebuild the hierarchy from the transformed mesh "
+                "instead of passing different coords here")
+        from repro.core.coarsen import multilevel_static_inputs
+        return multilevel_static_inputs(hierarchy, seg_layout=seg,
+                                        split=schedule == "overlap")
     return rank_static_inputs(pg, coords, seg_layout=seg,
                               split=schedule == "overlap")
 

@@ -48,15 +48,36 @@ def main():
                          "with bf16 operands and fp32 accumulation (faster "
                          "on MXU hardware; not bit-stable with fp32 — see "
                          "CONTRIBUTING.md)")
+    ap.add_argument("--levels", type=int, default=1,
+                    help="multilevel message-passing depth: 1 = flat NMP; "
+                         ">1 adds a consistent coarse-grid V-cycle (level 1 "
+                         "= element centroids, deeper levels cluster the "
+                         "element grid 2x per axis — repro.core.coarsen)")
+    ap.add_argument("--coarse-mp-layers", type=int, default=2,
+                    help="NMP layers smoothing each coarse level")
     args = ap.parse_args()
 
     sem = box_mesh(tuple(args.elements), p=args.order)
-    pg = partition_mesh(sem, tuple(args.ranks))
     R = int(np.prod(args.ranks))
-    mesh_dev = make_mesh((args.data_parallel, R), ("data", "graph"))
     cfg = GNNConfig.small() if args.model == "small" else GNNConfig.large()
+    hierarchy = None
+    if args.levels > 1:
+        import dataclasses
+
+        from repro.core.coarsen import build_hierarchy
+        cfg = dataclasses.replace(cfg, n_levels=args.levels,
+                                  coarse_mp_layers=args.coarse_mp_layers,
+                                  coarse_edge_in=sem.dim + 1)
+        hierarchy = build_hierarchy(sem, tuple(args.ranks), args.levels)
+        pg = hierarchy.levels[0]
+        sizes = " -> ".join(str(s) for s in hierarchy.level_sizes())
+        print(f"multilevel hierarchy: {sizes} nodes per level")
+    else:
+        pg = partition_mesh(sem, tuple(args.ranks))
+    mesh_dev = make_mesh((args.data_parallel, R), ("data", "graph"))
     print(f"mesh: {sem.n_elem} elems p={args.order} ({sem.n_nodes} nodes); "
-          f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}")
+          f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}; "
+          f"levels={args.levels}")
 
     tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
                        halo_mode=args.halo, ckpt_dir=args.ckpt,
@@ -64,7 +85,8 @@ def main():
                        mp_interpret=args.mp_interpret,
                        mp_schedule=args.mp_schedule,
                        mp_precision=args.mp_precision)
-    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg)
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
+                                hierarchy=hierarchy)
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")
 

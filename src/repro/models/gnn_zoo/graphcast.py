@@ -44,6 +44,10 @@ class GraphCastConfig:
     mp_interpret: bool = False      # Pallas interpreter (CPU CI)
     mp_schedule: str = "blocking"   # halo/compute schedule ("blocking" | "overlap")
     mp_precision: str = "fp32"      # edge-MLP matmuls: "fp32" | "bf16" (fp32 accum)
+    # --- multilevel (coarse-grid) processor (repro.core.coarsen) ---
+    n_levels: int = 1               # >1 appends a consistent V-cycle after the scan
+    coarse_mp_layers: int = 2       # NMP layers smoothing each coarse level
+    coarse_edge_in: int = 4         # coarse static edge feats (dist vec + mag)
 
 
 def init_graphcast(key, cfg: GraphCastConfig):
@@ -52,20 +56,37 @@ def init_graphcast(key, cfg: GraphCastConfig):
     # stacked processor layers (scanned)
     stacked = jax.vmap(
         lambda k: init_nmp_layer(k, cfg.hidden, cfg.mlp_hidden_layers))(layer_keys)
-    return {
+    params = {
         "node_enc": nn.init_mlp(ks[1], cfg.in_dim, [cfg.hidden], cfg.hidden),
         "edge_enc": nn.init_mlp(ks[2], cfg.edge_in, [cfg.hidden], cfg.hidden),
         "proc": stacked,
         "node_dec": nn.init_mlp(ks[3], cfg.hidden, [cfg.hidden], cfg.out_dim,
                                 final_layernorm=False),
     }
+    if cfg.n_levels > 1:
+        from repro.core.gnn import init_coarse_levels
+        params["coarse"] = init_coarse_levels(
+            jax.random.fold_in(key, 7), cfg.hidden, cfg.mlp_hidden_layers,
+            cfg.n_levels, cfg.coarse_mp_layers, cfg.coarse_edge_in)
+    return params
 
 
 def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
-                      cfg: GraphCastConfig):
-    """x: [N_pad, in_dim]; edge_feats: [E_pad, edge_in] -> [N_pad, out_dim]."""
-    h = nn.mlp(params["node_enc"], x) * meta["node_mask"][..., None]
-    e = nn.mlp(params["edge_enc"], edge_feats) * meta["edge_mask"][..., None]
+                      cfg: GraphCastConfig, coarse_halos: tuple = ()):
+    """x: [N_pad, in_dim]; edge_feats: [E_pad, edge_in] -> [N_pad, out_dim].
+
+    With ``cfg.n_levels > 1`` the scanned processor acts as the fine
+    pre-smoother and the consistent multilevel V-cycle runs before the
+    decoder; ``meta`` must then carry the ``lvl{l}_*`` coarse arrays
+    (``prepare_gnn_meta(hierarchy=...)``) and ``coarse_halos`` one HaloSpec
+    per coarse level."""
+    lvl0 = meta
+    if "coarse" in params:
+        from repro.core.consistent_mp import level_meta
+        lvl0 = level_meta(meta, 0)
+    h = nn.mlp(params["node_enc"], x) * lvl0["node_mask"][..., None]
+    e = nn.mlp(params["edge_enc"], edge_feats) * lvl0["edge_mask"][..., None]
+    full_meta, meta = meta, lvl0
     h = h.astype(cfg.act_dtype)
     e = e.astype(cfg.act_dtype)
 
@@ -97,6 +118,13 @@ def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
         if cfg.remat:
             body = jax.checkpoint(body)
         (h, e), _ = jax.lax.scan(body, (h, e), params["proc"])
+    if "coarse" in params:
+        from repro.core.consistent_mp import multilevel_vcycle
+        h = multilevel_vcycle(
+            params["coarse"], h.astype(jnp.float32), full_meta, halo,
+            coarse_halos, backend=cfg.mp_backend, interpret=cfg.mp_interpret,
+            block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
+            precision=cfg.mp_precision).astype(cfg.act_dtype)
     return nn.mlp(params["node_dec"], h.astype(jnp.float32)) \
         * meta["node_mask"][..., None]
 

@@ -62,8 +62,15 @@ def train_consistent_gnn(
     sem_mesh: SEMMesh,
     cfg: GNNConfig,
     tcfg: TrainConfig,
+    hierarchy=None,
 ) -> dict:
-    """Full training run; returns history with losses (paper Fig. 6 right)."""
+    """Full training run; returns history with losses (paper Fig. 6 right).
+
+    ``hierarchy`` (``repro.core.coarsen.MultiLevelGraphs`` with ``pg`` as
+    level 0) enables the consistent multilevel V-cycle when
+    ``cfg.n_levels > 1``: each coarse level gets its own halo spec and its
+    static arrays ride along in the step metadata.
+    """
     if tcfg.mp_backend is not None:
         cfg = dataclasses.replace(cfg, mp_backend=tcfg.mp_backend,
                                   mp_interpret=tcfg.mp_interpret)
@@ -71,14 +78,24 @@ def train_consistent_gnn(
         cfg = dataclasses.replace(cfg, mp_schedule=tcfg.mp_schedule)
     if tcfg.mp_precision is not None:
         cfg = dataclasses.replace(cfg, mp_precision=tcfg.mp_precision)
+    if cfg.n_levels > 1 and hierarchy is None:
+        raise ValueError("cfg.n_levels > 1 needs hierarchy= "
+                         "(repro.core.coarsen.build_hierarchy)")
     spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
+    coarse_specs = ()
+    if hierarchy is not None and cfg.n_levels > 1:
+        coarse_specs = tuple(
+            halo_spec_from_plan(lvl.halo, tcfg.halo_mode, axis="graph")
+            for lvl in hierarchy.levels[1:])
     # layout + interior/boundary split passes are cached on pg — one
     # host-side pass per partition, amortized over every training step
     meta = prepare_gnn_meta(pg, sem_mesh.coords, backend=cfg.mp_backend,
                             seg_block_n=cfg.seg_block_n,
                             seg_block_e=cfg.seg_block_e,
-                            schedule=cfg.mp_schedule)
-    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec)
+                            schedule=cfg.mp_schedule,
+                            hierarchy=hierarchy if cfg.n_levels > 1 else None)
+    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec,
+                                           coarse_halos=coarse_specs)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
     params = init_gnn(jax.random.PRNGKey(tcfg.seed), cfg)

@@ -1,17 +1,28 @@
-"""Multi-device consistency driver (run as a subprocess with 8 host devices).
+"""Multi-device consistency driver (run as a subprocess with host devices).
 
 Verifies on REAL collectives (shard_map over a ('data','graph') mesh):
-  Eq. 2 — forward/loss partition invariance for R in {2, 4, 8}, both halo
-          modes (A2A, NEIGHBOR), vs the R=1 un-partitioned baseline;
+  Eq. 2 — forward/loss partition invariance vs the R=1 un-partitioned
+          baseline, both halo modes (A2A, NEIGHBOR);
   Eq. 3 — gradient consistency vs R=1;
   inconsistent mode (halo None) deviates;
-  shard_map path agrees with the single-device stacked reference.
+  shard_map path agrees with the single-device stacked reference;
+  bf16 wire compression (``HaloSpec.wire_dtype`` -> ``_maybe_compress``)
+  stays within bf16 tolerance of the uncompressed exchange.
+
+Respects an externally-forced ``XLA_FLAGS=--xla_force_host_platform_
+device_count={2,4,8}`` (the CI consistency-matrix job) and scales the rank
+grids to the device count; standalone invocations default to 8 devices.
+``--schedule`` selects the halo/compute schedule (the overlap schedule must
+reproduce the same losses/grads bit-for-bit-ish).
 
 Exit code 0 = all assertions passed.
 """
+import argparse
+import dataclasses
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import sys
 
@@ -29,42 +40,61 @@ from repro.core.reference import (
     loss_and_grad_stacked, rank_static_inputs,
 )
 
+# (rank_grid, data_parallel) cases per forced host-device count
+CASES = {
+    2: (((2, 1, 1), 1),),
+    4: (((2, 1, 1), 2), ((2, 2, 1), 1)),
+    8: (((2, 1, 1), 4), ((2, 2, 1), 2), ((4, 2, 1), 1)),
+}
 
-def run_case(mesh_dev, pg, sem_mesh, params, cfg, mode, batch=2):
+
+def run_case(mesh_dev, pg, sem_mesh, params, cfg, mode, batch=2,
+             schedule="blocking", wire_dtype=None):
     """Run loss+grad through the shard_map path on a (data, graph) mesh."""
-    spec = halo_spec_from_plan(pg.halo, mode, axis="graph")
-    meta = rank_static_inputs(pg, sem_mesh.coords)
+    spec = halo_spec_from_plan(pg.halo, mode, axis="graph",
+                               wire_dtype=wire_dtype)
+    meta = rank_static_inputs(pg, sem_mesh.coords,
+                              split=schedule == "overlap")
     x_global = gather_node_features(pg, taylor_green_velocity(sem_mesh.coords))
     # batch of identical snapshots (loss must be invariant to B here)
     x = np.broadcast_to(x_global[None], (batch,) + x_global.shape).copy()
-    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec)
+    run_cfg = dataclasses.replace(cfg, mp_schedule=schedule)
+    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, run_cfg, spec)
     xs, ms = shard_inputs(mesh_dev, jnp.asarray(x), meta)
     loss, grads = grad_step(params, xs, xs, ms)
     return float(loss), jax.tree.map(np.asarray, grads)
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="blocking",
+                    choices=["blocking", "overlap"])
+    args = ap.parse_args()
     n_dev = len(jax.devices())
-    assert n_dev == 8, f"expected 8 host devices, got {n_dev}"
+    assert n_dev in CASES, f"need 2, 4 or 8 host devices, got {n_dev}"
     sem_mesh = box_mesh((4, 4, 2), p=3)
     cfg = GNNConfig.small()
     params = init_gnn(jax.random.PRNGKey(0), cfg)
 
     # ---- R=1 baseline (reference path, exact) ----
     pg1 = partition_mesh(sem_mesh, (1, 1, 1))
-    meta1 = rank_static_inputs(pg1, sem_mesh.coords)
+    meta1 = rank_static_inputs(pg1, sem_mesh.coords,
+                               split=args.schedule == "overlap")
     x1 = jnp.asarray(gather_node_features(pg1, taylor_green_velocity(sem_mesh.coords)))
-    l1, _, g1 = loss_and_grad_stacked(params, x1, x1, meta1, HaloSpec(mode=NONE), cfg.node_out)
+    l1, _, g1 = loss_and_grad_stacked(params, x1, x1, meta1,
+                                      HaloSpec(mode=NONE), cfg.node_out,
+                                      schedule=args.schedule)
     l1 = float(l1)
-    print(f"R=1 loss {l1:.8f}")
+    print(f"R=1 loss {l1:.8f} (schedule={args.schedule}, {n_dev} devices)")
 
     results = {}
-    for rank_grid, data_sz in (((2, 1, 1), 4), ((2, 2, 1), 2), ((4, 2, 1), 1)):
+    for rank_grid, data_sz in CASES[n_dev]:
         R = int(np.prod(rank_grid))
         pg = partition_mesh(sem_mesh, rank_grid)
         mesh_dev = jax.make_mesh((data_sz, R), ("data", "graph"))
         for mode in (A2A, NEIGHBOR, NONE):
-            loss, grads = run_case(mesh_dev, pg, sem_mesh, params, cfg, mode, batch=data_sz)
+            loss, grads = run_case(mesh_dev, pg, sem_mesh, params, cfg, mode,
+                                   batch=data_sz, schedule=args.schedule)
             results[(R, mode)] = (loss, grads)
             print(f"R={R} mode={mode:9s} loss={loss:.8f} dev={abs(loss-l1):.2e}")
 
@@ -78,9 +108,27 @@ def main():
                                        err_msg=f"grad mismatch R={R} mode={mode}")
 
     # A2A and NEIGHBOR must agree with each other bit-for-bit-ish
-    for R in (2, 4, 8):
+    for rank_grid, _ in CASES[n_dev]:
+        R = int(np.prod(rank_grid))
         la, ln = results[(R, A2A)][0], results[(R, NEIGHBOR)][0]
         assert abs(la - ln) < 1e-7, (R, la, ln)
+
+    # ---- bf16 wire compression through the REAL collectives: the
+    # _maybe_compress path quantizes the on-wire halo buffers; the loss must
+    # stay within bf16 tolerance of the uncompressed run and must not be
+    # bitwise identical (the compression actually engaged) ----
+    rank_grid, data_sz = CASES[n_dev][-1]
+    R = int(np.prod(rank_grid))
+    pg = partition_mesh(sem_mesh, rank_grid)
+    mesh_dev = jax.make_mesh((data_sz, R), ("data", "graph"))
+    l_comp, _ = run_case(mesh_dev, pg, sem_mesh, params, cfg, NEIGHBOR,
+                         batch=data_sz, schedule=args.schedule,
+                         wire_dtype=jnp.bfloat16)
+    l_full = results[(R, NEIGHBOR)][0]
+    assert abs(l_comp - l_full) < 2e-2 * max(1.0, abs(l_full)), (l_comp, l_full)
+    assert l_comp != l_full, "bf16 wire compression did not engage"
+    print(f"bf16 wire compression: loss {l_comp:.8f} "
+          f"(dev {abs(l_comp - l_full):.2e} from fp32 wire, within tolerance)")
 
     print("CONSISTENCY DRIVER PASS")
 

@@ -12,6 +12,27 @@ from repro.core.reference import gnn_forward_stacked, rank_static_inputs
 from repro.core.consistent_loss import consistent_node_count, consistent_node_sum
 
 
+def test_maybe_compress_unit():
+    """The halo_sync on-wire compression hook: converts only when a
+    wire_dtype is set AND differs from the buffer dtype, always reporting
+    the dtype to restore after the collective."""
+    from repro.core.halo import _maybe_compress
+    buf = jnp.ones((4, 3), jnp.float32)
+    # no wire dtype -> pass-through, original dtype reported
+    out, orig = _maybe_compress(buf, HaloSpec(mode=A2A))
+    assert out is buf and orig == jnp.float32
+    # bf16 wire -> converted, fp32 reported for the post-exchange restore
+    out, orig = _maybe_compress(buf, HaloSpec(mode=A2A, wire_dtype=jnp.bfloat16))
+    assert out.dtype == jnp.bfloat16 and orig == jnp.float32
+    # wire dtype equal to the buffer dtype -> no conversion op emitted
+    out, orig = _maybe_compress(buf, HaloSpec(mode=A2A, wire_dtype=jnp.float32))
+    assert out is buf and orig == jnp.float32
+    # quantization is real: a value not representable in bf16 round-trips lossy
+    v = jnp.asarray([[1.0 + 2.0 ** -12]], jnp.float32)
+    comp, _ = _maybe_compress(v, HaloSpec(mode=A2A, wire_dtype=jnp.bfloat16))
+    assert float(comp.astype(jnp.float32)[0, 0]) != float(v[0, 0])
+
+
 def test_halo_wire_bf16_compression_close():
     """bf16 on-wire halo (beyond-paper) stays within bf16 tolerance of f32."""
     mesh = box_mesh((4, 2, 2), p=2)

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.mesh_gen import (
-    box_mesh, element_lattice_edges, gll_points, mesh_graph_edges,
-    taylor_green_velocity, undirected_to_directed,
+    box_mesh, edge_features, element_lattice_edges, gll_points,
+    mesh_graph_edges, taylor_green_velocity, undirected_to_directed,
 )
 
 
@@ -74,6 +74,44 @@ def test_graph_edges_match_lattice_grid():
         for ax in range(len(nelem)):
             expect += (npts[ax] - 1) * int(np.prod(npts)) // npts[ax]
         assert e.shape[0] == expect
+
+
+def test_undirected_to_directed_edge_cases():
+    # empty input stays empty with the right shape (rank-local sub-graphs of
+    # empty ranks hit this)
+    empty = undirected_to_directed(np.zeros((0, 2), dtype=np.int64))
+    assert empty.shape == (0, 2)
+    # single edge -> both directions, order preserved then reversed
+    d = undirected_to_directed(np.array([[3, 7]]))
+    np.testing.assert_array_equal(d, [[3, 7], [7, 3]])
+    # doubling is exact: every undirected pair appears exactly once per
+    # direction, no dedup is performed here (dedup is the caller's contract)
+    und = np.array([[0, 1], [0, 1], [1, 2]])
+    d = undirected_to_directed(und)
+    assert d.shape == (6, 2)
+    np.testing.assert_array_equal(d[:3], und)
+    np.testing.assert_array_equal(d[3:], und[:, ::-1])
+
+
+def test_edge_features_edge_cases():
+    coords = np.array([[0.0, 0.0], [3.0, 4.0], [1.0, 1.0]])
+    # relative position + magnitude, dim+1 columns
+    f = edge_features(coords, np.array([[0, 1]]))
+    np.testing.assert_allclose(f, [[3.0, 4.0, 5.0]])
+    # direction matters: the reversed edge negates the vector, not the norm
+    f_rev = edge_features(coords, np.array([[1, 0]]))
+    np.testing.assert_allclose(f_rev, [[-3.0, -4.0, 5.0]])
+    # self-loop -> zero vector, zero magnitude (no NaN from the norm)
+    f_self = edge_features(coords, np.array([[2, 2]]))
+    np.testing.assert_allclose(f_self, [[0.0, 0.0, 0.0]])
+    assert np.isfinite(f_self).all()
+    # empty edge list -> [0, dim+1]
+    f_empty = edge_features(coords, np.zeros((0, 2), dtype=np.int64))
+    assert f_empty.shape == (0, 3)
+    # 3D coords -> 4 columns (the paper's 7-dim init = these + rel velocity)
+    c3 = np.array([[0.0, 0.0, 0.0], [1.0, 2.0, 2.0]])
+    f3 = edge_features(c3, np.array([[0, 1]]))
+    np.testing.assert_allclose(f3, [[1.0, 2.0, 2.0, 3.0]])
 
 
 def test_taylor_green_divergence_free_sample():

@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn, partition_mesh,
-    gather_node_features, taylor_green_velocity,
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    init_gnn, partition_mesh, gather_node_features, taylor_green_velocity,
 )
-from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
+from repro.core.reference import loss_and_grad_stacked
 
 
 def run(verbose: bool = True):
@@ -27,11 +27,12 @@ def run(verbose: bool = True):
 
     def ev(grid, mode):
         pg = partition_mesh(mesh, grid)
-        meta = rank_static_inputs(pg, mesh.coords)
+        plan = NMPPlan(halo=HaloSpec(mode=mode))
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
         x = jnp.asarray(gather_node_features(pg, x_global))
         t0 = time.perf_counter()
-        loss, _, _ = loss_and_grad_stacked(params, x, x, meta,
-                                           HaloSpec(mode=mode), cfg.node_out)
+        loss, _, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
         return float(loss), (time.perf_counter() - t0) * 1e6
 
     rows = []
@@ -69,13 +70,14 @@ def run_fused_backend(verbose: bool = True, block_n: int = 16,
 
     def ev(grid, mode, backend):
         pg = partition_mesh(mesh, grid)
-        meta = rank_static_inputs(pg, mesh.coords,
-                                  seg_layout=(block_n, block_e))
+        plan = NMPPlan(halo=HaloSpec(mode=mode), backend=backend,
+                       interpret=interpret, block_n=block_n, block_e=block_e)
+        graph = ShardedGraph.build(pg, mesh.coords,
+                                   plan.replace(backend="fused"))
         x = jnp.asarray(gather_node_features(pg, x_global))
         t0 = time.perf_counter()
-        loss, _, _ = loss_and_grad_stacked(
-            params, x, x, meta, HaloSpec(mode=mode), cfg.node_out,
-            backend=backend, interpret=interpret, block_n=block_n)
+        loss, _, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
         return float(loss), (time.perf_counter() - t0) * 1e6
 
     rows = []

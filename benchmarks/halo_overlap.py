@@ -40,10 +40,11 @@ def _time(fn, *args, iters=20):
 def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
     """One case per partition grid: blocking vs overlap stacked forward."""
     from repro.core import (
-        A2A, NONE, GNNConfig, HaloSpec, box_mesh, gather_node_features,
-        init_gnn, partition_mesh, taylor_green_velocity,
+        A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+        gather_node_features, init_gnn, partition_mesh,
+        taylor_green_velocity,
     )
-    from repro.core.reference import gnn_forward_stacked, rank_static_inputs
+    from repro.core.reference import gnn_forward_stacked
 
     mesh = box_mesh(elements, p=order)
     cfg = GNNConfig.small()
@@ -53,13 +54,16 @@ def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
     cases = []
     for grid in grids:
         pg = partition_mesh(mesh, grid)
-        meta = rank_static_inputs(pg, mesh.coords, split=True)
-        x = jnp.asarray(gather_node_features(pg, x_global))
         spec = HaloSpec(mode=NONE if pg.R == 1 else A2A)
+        plans = {s: NMPPlan(halo=spec, schedule=s)
+                 for s in ("blocking", "overlap")}
+        graph = ShardedGraph.build(pg, mesh.coords, plans["overlap"])
+        x = jnp.asarray(gather_node_features(pg, x_global))
 
         def fwd(schedule):
+            plan = plans[schedule]
             return jax.jit(lambda p, xx: gnn_forward_stacked(
-                p, xx, meta, spec, schedule=schedule))
+                p, xx, graph, plan))
 
         f_b, f_o = fwd("blocking"), fwd("overlap")
         y_b = f_b(params, x)

@@ -52,9 +52,8 @@ def segment_agg_compare(block_n: int | None = None,
     default to the static autotune table (``pick_block_sizes``; the chosen
     tile is logged in the payload).
     """
-    from repro.core import box_mesh, partition_mesh
+    from repro.core import NMPPlan, ShardedGraph, box_mesh, partition_mesh
     from repro.core.consistent_mp import edge_update_aggregate, init_nmp_layer
-    from repro.core.reference import rank_static_inputs
     from repro.kernels.segment_agg.ops import pick_block_sizes
 
     interpret = jax.default_backend() != "tpu"
@@ -64,8 +63,10 @@ def segment_agg_compare(block_n: int | None = None,
     block_e = block_e or auto_e
     mesh = box_mesh((4, 4, 2), p=2)
     pg = partition_mesh(mesh, (1, 1, 1))
-    meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e))
-    meta_r = {k: v[0] for k, v in meta.items()}
+    plan_fused = NMPPlan(backend="fused", interpret=interpret,
+                         block_n=block_n, block_e=block_e)
+    plan_xla = plan_fused.replace(backend="xla")
+    graph_r = ShardedGraph.build(pg, mesh.coords, plan_fused).rank(0)
 
     rng = np.random.default_rng(0)
     params = init_nmp_layer(jax.random.PRNGKey(0), hidden, 2)
@@ -73,10 +74,9 @@ def segment_agg_compare(block_n: int | None = None,
     e = jnp.asarray(rng.normal(size=(pg.e_pad, hidden)), jnp.float32)
 
     xla_fn = jax.jit(lambda p, x, e: edge_update_aggregate(
-        p, x, e, meta_r, backend="xla"))
+        p, x, e, graph_r, plan_xla))
     fused_fn = jax.jit(lambda p, x, e: edge_update_aggregate(
-        p, x, e, meta_r, backend="fused", interpret=interpret,
-        block_n=block_n))
+        p, x, e, graph_r, plan_fused))
 
     e_x, a_x = xla_fn(params, x, e)
     e_f, a_f = fused_fn(params, x, e)

@@ -33,10 +33,10 @@ def multilevel_sweep(levels=LEVELS, elements=(4, 4, 2), order=2,
     import numpy as np
 
     from repro.core import (
-        A2A, NONE, GNNConfig, HaloSpec, box_mesh, build_hierarchy,
-        gather_node_features, init_gnn, taylor_green_velocity,
+        A2A, NONE, GNNConfig, NMPPlan, ShardedGraph, box_mesh,
+        build_hierarchy, gather_node_features, init_gnn,
+        taylor_green_velocity,
     )
-    from repro.core.coarsen import multilevel_static_inputs
     from repro.core.partition import scatter_node_outputs
     from repro.core.reference import gnn_forward_stacked
 
@@ -52,10 +52,11 @@ def multilevel_sweep(levels=LEVELS, elements=(4, 4, 2), order=2,
 
         def ev(g, mode):
             ml = build_hierarchy(mesh, g, n_levels)
-            meta = multilevel_static_inputs(ml)
+            plan = NMPPlan.build(ml, mode)
+            graph = ShardedGraph.build(ml.levels[0], ml.coords[0], plan,
+                                       hierarchy=ml)
+            f = jax.jit(lambda p, xx: gnn_forward_stacked(p, xx, graph, plan))
             x = jnp.asarray(gather_node_features(ml.levels[0], x_global))
-            f = jax.jit(lambda p, xx: gnn_forward_stacked(p, xx, meta,
-                                                          HaloSpec(mode=mode)))
             return f, x, ml
 
         f_r, x_r, ml = ev(grid, A2A if R > 1 else NONE)

@@ -1,0 +1,107 @@
+"""Autoregressive rollout sweep: us/node/step vs rollout depth K.
+
+Times the jitted stacked K-step rollout (``repro.core.reference.
+rollout_stacked`` — the same scan-over-own-predictions dataflow the
+production shard_map path runs) for a sweep of K on a fixed 4-partition
+mesh, under BOTH halo/compute schedules, asserting on the way that every
+(K, schedule) cell's rollout loss matches its own 1-rank run — the
+consistency guarantee compounds through the autoregressive feedback, so
+the sweep doubles as the sharpest end-to-end check in the bench suite.
+The payload becomes ``BENCH_rollout.json`` (written by ``benchmarks/run.py``
+/ ``scripts/bench_gate.py --rollout-out`` and uploaded by the CI
+``bench-gate`` job).
+
+Absolute timings are host-dependent; no timing is gated (the consistency
+assertions are the gate).  ``us_per_node_step`` should stay ~flat in K —
+the scan adds no per-step overhead beyond the forward itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.halo_overlap import _time
+
+KS = (1, 2, 4)
+DT = 0.05
+
+
+def rollout_sweep(ks=KS, elements=(4, 4, 2), order=2, grid=(2, 2, 1)) -> dict:
+    import numpy as np
+
+    from repro.core import (
+        A2A, NONE, GNNConfig, NMPPlan, ShardedGraph, box_mesh,
+        gather_node_features, init_gnn, partition_mesh,
+        taylor_green_velocity,
+    )
+    from repro.core.reference import rollout_stacked
+
+    mesh = box_mesh(elements, p=order)
+    cfg = GNNConfig.small()
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    R = int(np.prod(grid))
+
+    def setup(g, mode, schedule):
+        pg = partition_mesh(mesh, g)
+        plan = NMPPlan.build(pg, mode, schedule=schedule)
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
+        x0 = jnp.asarray(gather_node_features(
+            pg, taylor_green_velocity(mesh.coords)))
+        return pg, plan, graph, x0
+
+    # partitions/graphs depend only on the schedule — build once, reuse
+    # across the K sweep (the layout/split passes are the expensive part)
+    setups = {s: (setup(grid, A2A if R > 1 else NONE, s),
+                  setup((1, 1, 1), NONE, s))
+              for s in ("blocking", "overlap")}
+    cases = []
+    for k in ks:
+        tg = [taylor_green_velocity(mesh.coords, t=(i + 1) * DT)
+              for i in range(k)]
+        row = dict(k=k, schedules={})
+        for schedule in ("blocking", "overlap"):
+            (pg, plan, graph, x0), (pg1, plan1, graph1, x01) = \
+                setups[schedule]
+            tgts = jnp.stack([jnp.asarray(gather_node_features(pg, t))
+                              for t in tg])
+            f = jax.jit(lambda p, x, t, _g=graph, _pl=plan: rollout_stacked(
+                p, x, t, _g, _pl, cfg.node_out)[0])
+            # consistency vs this K's own 1-rank run — asserted, not gated
+            tgts1 = jnp.stack([jnp.asarray(gather_node_features(pg1, t))
+                               for t in tg])
+            l_r = float(f(params, x0, tgts))
+            l_1 = float(jax.jit(
+                lambda p, x, t: rollout_stacked(
+                    p, x, t, graph1, plan1, cfg.node_out)[0])(
+                        params, x01, tgts1))
+            err = abs(l_r - l_1)
+            assert err < 2e-6 * max(1.0, abs(l_1)), \
+                f"rollout consistency violated at K={k} {schedule}: {err}"
+            us = _time(f, params, x0, tgts, iters=10)
+            row["schedules"][schedule] = dict(
+                us=us,
+                us_per_node_step=us / (mesh.n_nodes * k),
+                loss_dev_vs_1rank=err,
+            )
+        cases.append(row)
+    return dict(backend=jax.default_backend(), elements=list(elements),
+                order=order, grid=list(grid), n_nodes=mesh.n_nodes,
+                ranks=R, cases=cases)
+
+
+def run(verbose: bool = True, payload: dict | None = None):
+    payload = payload if payload is not None else rollout_sweep()
+    rows = []
+    for c in payload["cases"]:
+        for schedule, s in c["schedules"].items():
+            rows.append((f"rollout_K{c['k']}_{schedule}", s["us"],
+                         f"us/node/step={s['us_per_node_step']:.3f} "
+                         f"dev={s['loss_dev_vs_1rank']:.1e}"))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]}: {r[1]:.0f} us  ({r[2]})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -2,9 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + optional graph
-size sweep + per-SHA ``history`` trajectory) and ``BENCH_halo_overlap.json``
-(blocking-vs-overlap NMP schedule timings per rank count) so future PRs
-have a perf trajectory to regress against (see ``scripts/bench_gate.py``).
+size sweep + per-SHA ``history`` trajectory), ``BENCH_halo_overlap.json``
+(blocking-vs-overlap NMP schedule timings per rank count), and
+``BENCH_rollout.json`` (us/node/step vs autoregressive rollout depth K,
+both schedules, consistency-asserted) so future PRs have a perf trajectory
+to regress against (see ``scripts/bench_gate.py``).
 Run:
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -80,13 +82,22 @@ def write_multilevel_json(path: str = "BENCH_multilevel.json") -> dict:
     return _write_json(path, multilevel_sweep())
 
 
+def write_rollout_json(path: str = "BENCH_rollout.json") -> dict:
+    """Collect the us/node/step-vs-K autoregressive rollout sweep (both
+    schedules, with its built-in 1-rank-vs-partitioned consistency
+    assertions) and persist it."""
+    from benchmarks.rollout import rollout_sweep
+    return _write_json(path, rollout_sweep())
+
+
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench,
-                            halo_overlap, multilevel)
+                            halo_overlap, multilevel, rollout)
     payload = write_segment_agg_json()   # computed once, reused by kernel_bench
     overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
     multilevel_payload = write_multilevel_json()  # reused by multilevel.run
+    rollout_payload = write_rollout_json()        # reused by rollout.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
@@ -94,7 +105,8 @@ def main() -> None:
                        (weak_scaling, "Fig7/8"),
                        (kernel_bench, "kernels"),
                        (halo_overlap, "halo-overlap"),
-                       (multilevel, "multilevel")):
+                       (multilevel, "multilevel"),
+                       (rollout, "rollout")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
         kw = {}
         if mod is kernel_bench:
@@ -103,6 +115,8 @@ def main() -> None:
             kw = dict(overlap_payload=overlap_payload)
         elif mod is multilevel:
             kw = dict(payload=multilevel_payload)
+        elif mod is rollout:
+            kw = dict(payload=rollout_payload)
         all_rows += mod.run(verbose=True, **kw)
     fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
@@ -118,6 +132,10 @@ def main() -> None:
     print(f"wrote BENCH_multilevel.json (levels up to {deepest['levels']}, "
           f"{deepest['us_per_node']:.2f} us/node at depth, hop reach "
           f"{deepest['hop_reach']})")
+    longest = rollout_payload["cases"][-1]
+    print(f"wrote BENCH_rollout.json (K up to {longest['k']}, "
+          f"{longest['schedules']['blocking']['us_per_node_step']:.3f} "
+          f"us/node/step blocking, consistency-asserted)")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -13,16 +13,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn, partition_mesh,
-    gather_node_features, taylor_green_velocity,
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    init_gnn, partition_mesh, gather_node_features, taylor_green_velocity,
 )
-from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
+from repro.core.reference import loss_and_grad_stacked
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
 
 
 def _train(mesh, pg, cfg, mode, n_steps, lr=3e-3):
-    spec = HaloSpec(mode=mode)
-    meta = rank_static_inputs(pg, mesh.coords)
+    plan = NMPPlan(halo=HaloSpec(mode=mode))
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
     x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
     params = init_gnn(jax.random.PRNGKey(0), cfg)
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(lr), weight_decay=0.0)
@@ -30,7 +30,7 @@ def _train(mesh, pg, cfg, mode, n_steps, lr=3e-3):
 
     @jax.jit
     def step(params, opt):
-        loss, _, grads = loss_and_grad_stacked(params, x, x, meta, spec, cfg.node_out)
+        loss, _, grads = loss_and_grad_stacked(params, x, x, graph, plan, cfg.node_out)
         params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
         return params, opt, loss
 

@@ -10,6 +10,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph_state import NMPPlan, ShardedGraph
 from repro.core.halo import NONE, HaloSpec
 from repro.core.partition import partition_graph
 from repro.models.gnn_zoo.graphcast import (
@@ -38,7 +39,8 @@ def main():
     ])
     n_total = n_grid + n_mesh
     pg = partition_graph(n_total, edges, 1)
-    meta = {k: jnp.asarray(v[0]) for k, v in pg.device_arrays().items()}
+    graph = ShardedGraph.from_arrays(
+        {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}).rank(0)
 
     cfg = GraphCastConfig(in_dim=n_vars + 3, hidden=64, n_layers=4,
                           out_dim=n_vars, mlp_hidden_layers=1)
@@ -50,14 +52,14 @@ def main():
     x = np.zeros((pg.n_pad, n_vars + 3), np.float32)
     x[:n_grid, :n_vars] = state
     x[:n_total, n_vars:] = xyz
-    ef = np.zeros((meta["edge_src"].shape[0], cfg.edge_in), np.float32)
-    src, dst = np.asarray(meta["edge_src"]), np.asarray(meta["edge_dst"])
+    ef = np.zeros((graph["edge_src"].shape[0], cfg.edge_in), np.float32)
+    src, dst = np.asarray(graph["edge_src"]), np.asarray(graph["edge_dst"])
     rel = xyz[np.clip(dst, 0, n_total - 1) % n_total] - xyz[np.clip(src, 0, n_total - 1) % n_total]
-    ef[:, :3] = rel * np.asarray(meta["edge_mask"])[:, None]
-    ef[:, 3] = np.linalg.norm(rel, axis=-1) * np.asarray(meta["edge_mask"])
+    ef[:, :3] = rel * np.asarray(graph["edge_mask"])[:, None]
+    ef[:, 3] = np.linalg.norm(rel, axis=-1) * np.asarray(graph["edge_mask"])
 
-    out = graphcast_forward(params, jnp.asarray(x), jnp.asarray(ef), meta,
-                            HaloSpec(mode=NONE), cfg)
+    out = graphcast_forward(params, jnp.asarray(x), jnp.asarray(ef), graph,
+                            NMPPlan(halo=HaloSpec(mode=NONE)), cfg)
     pred = np.asarray(out)[:n_grid]
     print(f"predicted next-state grid field: {pred.shape}, finite: "
           f"{np.isfinite(pred).all()}")

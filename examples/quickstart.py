@@ -13,12 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn, partition_mesh,
-    gather_node_features, scatter_node_outputs, taylor_green_velocity,
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    init_gnn, partition_mesh, gather_node_features, scatter_node_outputs,
+    taylor_green_velocity,
 )
-from repro.core.reference import (
-    gnn_forward_stacked, rank_static_inputs,
-)
+from repro.core.reference import gnn_forward_stacked
 
 
 def main():
@@ -39,15 +38,16 @@ def main():
     pg1 = partition_mesh(mesh, (1, 1, 1))
     y_ref = gnn_forward_stacked(
         params, jnp.asarray(gather_node_features(pg1, vel)),
-        rank_static_inputs(pg1, mesh.coords), HaloSpec(mode=NONE))
+        ShardedGraph.build(pg1, mesh.coords),
+        NMPPlan(halo=HaloSpec(mode=NONE)))
     y_ref = scatter_node_outputs(pg1, np.asarray(y_ref))
 
-    meta = rank_static_inputs(pg, mesh.coords)
+    graph = ShardedGraph.build(pg, mesh.coords)
     x = jnp.asarray(gather_node_features(pg, vel))
-    y_con = scatter_node_outputs(pg, np.asarray(
-        gnn_forward_stacked(params, x, meta, HaloSpec(mode=A2A))))
-    y_std = scatter_node_outputs(pg, np.asarray(
-        gnn_forward_stacked(params, x, meta, HaloSpec(mode=NONE))))
+    y_con = scatter_node_outputs(pg, np.asarray(gnn_forward_stacked(
+        params, x, graph, NMPPlan(halo=HaloSpec(mode=A2A)))))
+    y_std = scatter_node_outputs(pg, np.asarray(gnn_forward_stacked(
+        params, x, graph, NMPPlan(halo=HaloSpec(mode=NONE)))))
 
     print(f"max |consistent - unpartitioned| = {np.abs(y_con - y_ref).max():.2e}"
           "   (Eq. 2 holds)")

@@ -116,6 +116,12 @@ def main() -> int:
                          "Its partitioned-vs-1-rank consistency assertions "
                          "are the gate — timings are recorded, not gated "
                          "(absolute us/node is host-dependent)")
+    ap.add_argument("--rollout-out", default=None,
+                    help="where to write BENCH_rollout.json (us/node/step "
+                         "vs autoregressive rollout depth K, both "
+                         "schedules); the sweep only runs when given. Its "
+                         "1-rank-vs-partitioned consistency assertions are "
+                         "the gate — timings are recorded, not gated")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_segment_agg.json to gate against")
     ap.add_argument("--halo-baseline", default=None,
@@ -156,6 +162,11 @@ def main() -> int:
         from benchmarks.run import write_multilevel_json
         ml_payload = write_multilevel_json(args.multilevel_out)
         print(json.dumps(ml_payload, indent=2, sort_keys=True))
+    if args.rollout_out:
+        # likewise consistency-asserted internally, timings recorded only
+        from benchmarks.run import write_rollout_json
+        ro_payload = write_rollout_json(args.rollout_out)
+        print(json.dumps(ro_payload, indent=2, sort_keys=True))
     return 0 if ok else 1
 
 

@@ -39,14 +39,14 @@ def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
     cfg = config(shape)
     regression = shape["kind"] == "molecule"
 
-    def loss_local(params, inputs, meta):
+    def loss_local(params, inputs, graph):
         x = inputs["x"][0]
-        out = gat_forward(params, x, meta, halo, cfg)
+        out = gat_forward(params, x, graph, halo, cfg)
         if regression:
             tgt = inputs["labels"][0].astype(jnp.float32)[:, None]
-            return G.consistent_mse_loss(out, tgt, meta["node_inv_mult"], (graph_axis,))
+            return G.consistent_mse_loss(out, tgt, graph["node_inv_mult"], (graph_axis,))
         return G.consistent_ce_loss(out, inputs["labels"][0],
-                                    meta["node_inv_mult"], (graph_axis,))
+                                    graph["node_inv_mult"], (graph_axis,))
     return loss_local
 
 

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.graph_state import ShardedGraph
 from repro.core.halo import NEIGHBOR, NONE, HaloSpec
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
 
@@ -108,10 +109,10 @@ def make_gnn_train_step(loss_local, mesh: Mesh, in_specs_inputs, graph_axis: str
     all_axes = tuple(mesh.axis_names)
 
     def step_local(state, inputs, meta):
-        meta_l = {k: v[0] for k, v in meta.items()}
+        graph_l = ShardedGraph.from_arrays({k: v[0] for k, v in meta.items()})
 
         def loss_fn(p):
-            return loss_local(p, inputs, meta_l)
+            return loss_local(p, inputs, graph_l)
 
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         grads = jax.tree.map(lambda g: jax.lax.pmean(g, all_axes), grads)
@@ -134,8 +135,8 @@ def make_gnn_train_step(loss_local, mesh: Mesh, in_specs_inputs, graph_axis: str
 def make_gnn_eval_step(fwd_local, mesh: Mesh, in_specs_inputs, out_specs,
                        graph_axis: str):
     def eval_local(params, inputs, meta):
-        meta_l = {k: v[0] for k, v in meta.items()}
-        return fwd_local(params, inputs, meta_l)
+        graph_l = ShardedGraph.from_arrays({k: v[0] for k, v in meta.items()})
+        return fwd_local(params, inputs, graph_l)
 
     def wrap(meta):
         return jax.shard_map(

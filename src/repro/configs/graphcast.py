@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import gnn_common as G
+from repro.core.graph_state import NMPPlan
 from repro.models.gnn_zoo.graphcast import (
     GraphCastConfig, graphcast_forward, init_graphcast,
 )
@@ -67,18 +68,20 @@ def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
     params_bf16 = bool(ov.get("params_bf16"))
     regression = shape["kind"] == "molecule"
 
-    def loss_local(params, inputs, meta):
+    plan = NMPPlan(halo=halo)
+
+    def loss_local(params, inputs, graph):
         if params_bf16:
             params = jax.tree.map(
                 lambda x: x.astype(jnp.bfloat16)
                 if x.dtype == jnp.float32 else x, params)
         out = graphcast_forward(params, inputs["x"][0], inputs["edge_feats"][0],
-                                meta, halo, cfg)
+                                graph, plan, cfg)
         if regression:
             tgt = inputs["labels"][0].astype(jnp.float32)[:, None]
-            return G.consistent_mse_loss(out, tgt, meta["node_inv_mult"], (graph_axis,))
+            return G.consistent_mse_loss(out, tgt, graph["node_inv_mult"], (graph_axis,))
         return G.consistent_ce_loss(out, inputs["labels"][0],
-                                    meta["node_inv_mult"], (graph_axis,))
+                                    graph["node_inv_mult"], (graph_axis,))
     return loss_local
 
 

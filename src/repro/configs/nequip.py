@@ -47,11 +47,11 @@ def _loss_local_factory(shape, halo, graph_axis, mesh, overrides=None):
     if kw:
         cfg = type(cfg)(**{**cfg.__dict__, **kw})
 
-    def loss_local(params, inputs, meta):
+    def loss_local(params, inputs, graph):
         e_site = nequip_forward(params, inputs["species"][0], inputs["pos"][0],
-                                meta, halo, cfg)
+                                graph, halo, cfg)
         return G.consistent_mse_loss(e_site, inputs["target"][0],
-                                     meta["node_inv_mult"], (graph_axis,))
+                                     graph["node_inv_mult"], (graph_axis,))
     return loss_local
 
 

@@ -1,6 +1,10 @@
 """The paper's primary contribution: consistent distributed mesh-based GNNs."""
-from repro.core.coarsen import MultiLevelGraphs, TransferPlan, build_hierarchy, multilevel_static_inputs
+from repro.core.coarsen import MultiLevelGraphs, TransferPlan, build_hierarchy
 from repro.core.gnn import GNNConfig, gnn_forward, init_coarse_levels, init_gnn
+from repro.core.graph_state import (
+    NMPPlan, ShardedGraph, as_graph, nmp_impl, register_nmp_impl,
+    registered_nmp_impls,
+)
 from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync
 from repro.core.consistent_loss import consistent_mse, consistent_node_count, consistent_node_sum
 from repro.core.consistent_mp import (

@@ -39,12 +39,14 @@ Consistency construction (the load-bearing part):
   assert for both NMP backends and both halo schedules.
 
 Everything here is host-side numpy, computed once per partition; device
-arrays come from :func:`multilevel_static_inputs`.
+arrays come from ``ShardedGraph.build(pg, coords, plan, hierarchy=...)``
+(``repro.core.graph_state``), which nests each coarse level as a child
+``ShardedGraph`` carrying its transfer maps.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
@@ -284,32 +286,7 @@ def build_hierarchy(mesh: SEMMesh, rank_grid: Sequence[int], n_levels: int,
     return MultiLevelGraphs(levels=levels, coords=coords, transfers=transfers)
 
 
-def multilevel_static_inputs(ml: MultiLevelGraphs,
-                             seg_layout: tuple | None = None,
-                             split: bool = False) -> Dict:
-    """Flat static-metadata dict for the multilevel GNN step functions.
-
-    Level-0 keys are unprefixed (drop-in compatible with the single-level
-    paths); level l >= 1 arrays are prefixed ``lvl{l}_`` and additionally
-    carry the transfer maps ``lvl{l}_t_fine`` / ``_t_coarse`` / ``_t_rw`` /
-    ``_t_pw`` connecting level l-1 to l.  Every array keeps the leading rank
-    axis, so the whole dict shards over the graph mesh axis exactly like the
-    single-level metadata (``distributed._meta_specs``).
-    """
-    import jax.numpy as jnp
-
-    from repro.core.reference import rank_static_inputs
-
-    meta = rank_static_inputs(ml.levels[0], ml.coords[0],
-                              seg_layout=seg_layout, split=split)
-    for level in range(1, ml.n_levels):
-        m = rank_static_inputs(ml.levels[level], ml.coords[level],
-                               seg_layout=seg_layout, split=split)
-        t = ml.transfers[level - 1]
-        m["t_fine"] = jnp.asarray(t.fine_idx)
-        m["t_coarse"] = jnp.asarray(t.coarse_idx)
-        m["t_rw"] = jnp.asarray(t.r_w)
-        m["t_pw"] = jnp.asarray(t.p_w)
-        for k, v in m.items():
-            meta[f"lvl{level}_{k}"] = v
-    return meta
+# Device arrays for a hierarchy are produced by ``ShardedGraph.build(pg,
+# coords, plan, hierarchy=ml)`` (repro.core.graph_state), which nests each
+# coarse level as a child ShardedGraph carrying its transfer maps — the
+# retired flat ``lvl{l}_*``-prefixed meta dict is gone.

@@ -12,7 +12,12 @@ Layer structure follows the paper exactly:
   4d  a_i*  = sum over coincident copies       (fused scatter-add)
   4e  x_i'  = MLP_n(a_i*, x_i)                 (residual on node features)
 
-Backends for the 4a+4b hot loop (``backend=`` on :func:`nmp_layer`):
+Execution policy comes from one :class:`~repro.core.graph_state.NMPPlan`;
+graph state from one :class:`~repro.core.graph_state.ShardedGraph`.  The
+four (backend x schedule) layer implementations register themselves in the
+``graph_state`` registry at import:
+
+Backends for the 4a+4b hot loop (``plan.backend``):
 
 * ``"xla"``   — plain lowering: HBM-materialized ``[E, 3H]`` gather+concat,
   edge MLP, then a serialized ``segment_sum`` scatter-add.  Always available.
@@ -20,32 +25,23 @@ Backends for the 4a+4b hot loop (``backend=`` on :func:`nmp_layer`):
   per-tile src/dst node-id lists are scalar-prefetched into SMEM and drive
   double-buffered DMA row gathers of node features out of HBM/ANY memory;
   the full residual edge MLP (incl. LayerNorm) and the 1/d_ij-weighted
-  aggregation run on the VMEM tile, with the aggregate accumulated by
-  per-row scatter-adds (cost O(E·H) — no one-hot matrices, no O(E·N) term);
-  a ``jax.custom_vjp`` routes the backward pass through a second Pallas
-  kernel, so the layer stays fully differentiable (Eq. 3 gradient
-  consistency is preserved — tested).  Requires ``meta["seg_perm"]`` /
-  ``meta["seg_src"]`` / ``meta["seg_dst"]`` from the cached layout pass
-  (``PartitionedGraphs.segment_layout(block_n, block_e)``), built with the
-  same ``block_e`` passed here.  ``interpret=True`` executes the same
-  kernels through the Pallas interpreter so CPU CI exercises the production
-  code path.
+  aggregation run on the VMEM tile; a ``jax.custom_vjp`` routes the backward
+  pass through a second Pallas kernel (Eq. 3 gradient consistency preserved
+  — tested).  Requires the cached segment layout on the graph
+  (``ShardedGraph.build`` attaches it when the plan's backend is fused).
+  ``plan.interpret`` executes the same kernels through the Pallas
+  interpreter so CPU CI exercises the production code path.
 
 Both backends compute identical arithmetic (fp32-tolerance identical: only
 the aggregation summation order differs), so the paper's consistency
-guarantee survives the kernel swap; ``tests/test_consistency.py`` asserts
-this on 1-rank and multi-partition halo graphs for values *and* gradients.
+guarantee survives the kernel swap.
 
-Mixed precision (``precision=`` on :func:`nmp_layer`): ``"bf16"`` runs the
-Eq. 4a edge-MLP matmuls with bf16 operands and fp32 accumulation on *both*
-backends (``nn.mlp(precision=...)`` for xla, the in-kernel policy for
-fused); aggregation always accumulates fp32.  The default ``"fp32"`` is
-bit-stable with the pre-knob code, which is what the consistency tests pin
-— bf16 trades ~3 decimal digits of edge-MLP mantissa for MXU throughput and
-is NOT covered by the bitwise consistency guarantee (tested to bf16
-tolerance only).
+Mixed precision (``plan.precision``): ``"bf16"`` runs the Eq. 4a edge-MLP
+matmuls with bf16 operands and fp32 accumulation on *both* backends;
+aggregation always accumulates fp32.  The default ``"fp32"`` is what the
+bitwise consistency tests pin.
 
-Schedules for the whole layer (``schedule=`` on :func:`nmp_layer`):
+Schedules (``plan.schedule``):
 
 * ``"blocking"`` — exchange and compute run serially (paper order).
 * ``"overlap"``  — interior/boundary split: edges whose destination is
@@ -53,30 +49,31 @@ Schedules for the whole layer (``schedule=`` on :func:`nmp_layer`):
   halo exchange, and the (typically much larger) interior edge set — whose
   aggregate rows the exchange never touches — is processed with no data
   dependence on the collective, so XLA's latency-hiding scheduler can run
-  it under the in-flight ppermute rounds.  Values and gradients match the
-  blocking schedule to fp32 tolerance (tested, incl. the two-level
-  ``rounds2d`` halo).
+  it under the in-flight ppermute rounds.  Arithmetically identical to
+  blocking (``halo_sync(agg_bnd) + agg_int == halo_sync(agg_bnd + agg_int)``).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence
+import functools
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
+from repro.core.graph_state import (
+    BF16, BLOCKING, FP32, FUSED, OVERLAP, PRECISIONS, XLA, NMPPlan,
+    ShardedGraph, as_graph, nmp_impl, register_nmp_impl,
+)
 from repro.core.halo import NEIGHBOR, HaloSpec, halo_sync
 from repro.graph import segment
 
-XLA = "xla"
-FUSED = "fused"
-
-BLOCKING = "blocking"
-OVERLAP = "overlap"
-
-FP32 = "fp32"
-BF16 = "bf16"
-PRECISIONS = (FP32, BF16)
+__all__ = [
+    "XLA", "FUSED", "BLOCKING", "OVERLAP", "FP32", "BF16", "PRECISIONS",
+    "init_nmp_layer", "edge_update_aggregate", "edge_update_aggregate_part",
+    "node_update", "nmp_layer", "multilevel_vcycle", "restrict_aggregate",
+    "prolong_aggregate",
+]
 
 
 def init_nmp_layer(key, hidden: int, mlp_hidden_layers: int, dtype=jnp.float32) -> nn.Params:
@@ -99,60 +96,28 @@ def _map_batched(one, x, e):
     return one(x, e)
 
 
-def edge_update_aggregate(
-    params: nn.Params,
-    x: jnp.ndarray,            # [N_pad, H] or [B, N_pad, H]
-    e: jnp.ndarray,            # [E_pad, H] or [B, E_pad, H]
-    meta: Dict[str, jnp.ndarray],
-    *,
-    backend: str = XLA,
-    interpret: bool = False,
-    block_n: int = 128,
-    precision: str = FP32,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Eq. 4a + 4b on one shard: returns (e', local aggregate a).
+def _mlp_precision(plan: NMPPlan):
+    return None if plan.precision == FP32 else plan.precision
 
-    The rank-local part of the layer, shared by the production shard_map path
-    and the stacked single-device reference — both backends are available to
-    both paths, which is how backend-vs-backend consistency is tested.
-    """
-    if precision not in PRECISIONS:
-        raise ValueError(f"unknown precision {precision!r}; expected one of "
-                         f"{PRECISIONS}")
-    src = meta["edge_src"]
-    dst = meta["edge_dst"]
+
+# ---------------------------------------------------------------------------
+# Eq. 4a + 4b: one aggregate implementation per backend
+# ---------------------------------------------------------------------------
+
+def _agg_xla(params, x, e, graph: ShardedGraph, plan: NMPPlan):
+    src = graph["edge_src"]
+    dst = graph["edge_dst"]
     n_pad = x.shape[-2]
-
-    if backend == FUSED:
-        if "seg_perm" not in meta or "seg_src" not in meta:
-            raise ValueError(
-                "backend='fused' needs meta['seg_perm']/meta['seg_src']/"
-                "meta['seg_dst'] — attach the cached layout via "
-                "PartitionedGraphs.segment_layout / rank_static_inputs("
-                "seg_layout=...)")
-        from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
-
-        def one(xb, eb):
-            return fused_nmp_edge_agg(
-                xb, eb, params["edge"], meta["seg_perm"], meta["seg_src"],
-                meta["seg_dst"], meta["edge_mask"], meta["edge_inv_mult"],
-                block_n=block_n, interpret=interpret, precision=precision)
-
-        return _map_batched(one, x, e)
-
-    if backend != XLA:
-        raise ValueError(f"unknown NMP backend {backend!r}")
 
     # --- Eq. 4a: edge update (residual) ---
     xi = segment.gather(x, src)
     xj = segment.gather(x, dst)
     feats = jnp.concatenate([xi, xj, e], axis=-1)
-    e_new = e + nn.mlp(params["edge"], feats,
-                       precision=None if precision == FP32 else precision)
-    e_new = e_new * meta["edge_mask"][..., None]
+    e_new = e + nn.mlp(params["edge"], feats, precision=_mlp_precision(plan))
+    e_new = e_new * graph["edge_mask"][..., None]
 
     # --- Eq. 4b: local aggregation with inverse edge multiplicity ---
-    weighted = e_new * meta["edge_inv_mult"][..., None]
+    weighted = e_new * graph["edge_inv_mult"][..., None]
     if x.ndim == 3:
         agg = jax.vmap(lambda w: segment.segment_sum(w, dst, n_pad))(weighted)
     else:
@@ -160,78 +125,43 @@ def edge_update_aggregate(
     return e_new, agg
 
 
-def edge_update_aggregate_part(
-    params: nn.Params,
-    x: jnp.ndarray,            # [N_pad, H] or [B, N_pad, H]
-    e: jnp.ndarray,            # [E_pad, H] or [B, E_pad, H]
-    meta: Dict[str, jnp.ndarray],
-    part: str,                 # "bnd" | "int"
-    *,
-    backend: str = XLA,
-    interpret: bool = False,
-    block_n: int = 128,
-    precision: str = FP32,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Eq. 4a + 4b restricted to one side of the interior/boundary edge split.
+def _agg_fused(params, x, e, graph: ShardedGraph, plan: NMPPlan):
+    if "seg_perm" not in graph:
+        raise ValueError(
+            "backend='fused' needs the cached segment layout (seg_perm/"
+            "seg_src/seg_dst) on the graph — build it with the fused plan: "
+            "ShardedGraph.build(pg, coords, plan)")
+    from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
 
-    Returns (e_part, agg_part), both full-size ([.., E_pad, H] / [.., N_pad,
-    H]) but zero outside the side's edges / destination rows.  The two sides
-    partition the real edges, so ``e_bnd + e_int`` / ``agg_bnd + agg_int``
-    reproduce the unsplit ``edge_update_aggregate`` outputs; interior rows
-    are disjoint from the halo send/recv rows, which is what lets the
-    overlap schedule run the exchange on ``agg_bnd`` alone.
-    """
-    if part not in ("bnd", "int"):
-        raise ValueError(f"unknown edge split part {part!r}")
-    if precision not in PRECISIONS:
-        raise ValueError(f"unknown precision {precision!r}; expected one of "
-                         f"{PRECISIONS}")
-    n_pad = x.shape[-2]
+    def one(xb, eb):
+        return fused_nmp_edge_agg(
+            xb, eb, params["edge"], graph["seg_perm"], graph["seg_src"],
+            graph["seg_dst"], graph["edge_mask"], graph["edge_inv_mult"],
+            block_n=plan.block_n, interpret=plan.interpret,
+            precision=plan.precision)
 
-    if backend == FUSED:
-        if f"seg_perm_{part}" not in meta:
-            raise ValueError(
-                "schedule='overlap' with backend='fused' needs the per-side "
-                f"layout meta['seg_perm_{part}']/meta['seg_src_{part}']/"
-                f"meta['seg_dst_{part}'] — attach it via "
-                "PartitionedGraphs.device_arrays(seg_layout=..., "
-                "split=True) / rank_static_inputs(..., split=True)")
-        from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
+    return _map_batched(one, x, e)
 
-        def one(xb, eb):
-            # the per-side layout holds only this side's edges, so the full
-            # mask/inv-mult arrays select exactly the side's contributions
-            return fused_nmp_edge_agg(
-                xb, eb, params["edge"], meta[f"seg_perm_{part}"],
-                meta[f"seg_src_{part}"], meta[f"seg_dst_{part}"],
-                meta["edge_mask"], meta["edge_inv_mult"],
-                block_n=block_n, interpret=interpret, precision=precision)
 
-        return _map_batched(one, x, e)
-
-    if backend != XLA:
-        raise ValueError(f"unknown NMP backend {backend!r}")
-    if f"edge_{part}_idx" not in meta:
+def _agg_xla_part(params, x, e, graph: ShardedGraph, part: str, plan: NMPPlan):
+    if f"edge_{part}_idx" not in graph:
         raise ValueError(
             "schedule='overlap' needs the interior/boundary edge split "
-            f"(meta['edge_{part}_idx']) — attach it via "
-            "PartitionedGraphs.device_arrays(split=True) / "
-            "rank_static_inputs(..., split=True) / "
-            "prepare_gnn_meta(..., schedule='overlap')")
-
-    idx = meta[f"edge_{part}_idx"]          # [EP] compacted edge ids (0 pad)
-    valid = meta[f"edge_{part}_valid"]      # [EP]
-    src = meta["edge_src"][idx]
-    dst = meta["edge_dst"][idx]
-    mask = meta["edge_mask"][idx] * valid
-    inv = meta["edge_inv_mult"][idx] * valid
+            f"(edge_{part}_idx) on the graph — build it with the overlap "
+            "plan: ShardedGraph.build(pg, coords, plan)")
+    n_pad = x.shape[-2]
+    idx = graph[f"edge_{part}_idx"]         # [EP] compacted edge ids (0 pad)
+    valid = graph[f"edge_{part}_valid"]     # [EP]
+    src = graph["edge_src"][idx]
+    dst = graph["edge_dst"][idx]
+    mask = graph["edge_mask"][idx] * valid
+    inv = graph["edge_inv_mult"][idx] * valid
 
     def one(xb, eb):
         e_sub = eb[idx]
         feats = jnp.concatenate([xb[src], xb[dst], e_sub], axis=-1)
-        e_sub = (e_sub + nn.mlp(
-            params["edge"], feats,
-            precision=None if precision == FP32 else precision)) \
+        e_sub = (e_sub + nn.mlp(params["edge"], feats,
+                                precision=_mlp_precision(plan))) \
             * mask[..., None]
         agg = segment.segment_sum(e_sub * inv[..., None], dst, n_pad)
         e_full = jnp.zeros(eb.shape[:-1] + (e_sub.shape[-1],), e_sub.dtype)
@@ -241,80 +171,80 @@ def edge_update_aggregate_part(
     return _map_batched(one, x, e)
 
 
+def _agg_fused_part(params, x, e, graph: ShardedGraph, part: str, plan: NMPPlan):
+    if f"seg_perm_{part}" not in graph:
+        raise ValueError(
+            "schedule='overlap' with backend='fused' needs the per-side "
+            f"segment layout (seg_perm_{part}/seg_src_{part}/seg_dst_{part}) "
+            "on the graph — build it with the fused+overlap plan: "
+            "ShardedGraph.build(pg, coords, plan)")
+    from repro.kernels.segment_agg.ops import fused_nmp_edge_agg
+
+    def one(xb, eb):
+        # the per-side layout holds only this side's edges, so the full
+        # mask/inv-mult arrays select exactly the side's contributions
+        return fused_nmp_edge_agg(
+            xb, eb, params["edge"], graph[f"seg_perm_{part}"],
+            graph[f"seg_src_{part}"], graph[f"seg_dst_{part}"],
+            graph["edge_mask"], graph["edge_inv_mult"],
+            block_n=plan.block_n, interpret=plan.interpret,
+            precision=plan.precision)
+
+    return _map_batched(one, x, e)
+
+
+_AGGS = {XLA: _agg_xla, FUSED: _agg_fused}
+_AGGS_PART = {XLA: _agg_xla_part, FUSED: _agg_fused_part}
+
+
+def edge_update_aggregate(params, x, e, graph, plan: NMPPlan):
+    """Eq. 4a + 4b on one shard: returns (e', local aggregate a).
+
+    The rank-local part of the layer, shared by the production shard_map path
+    and the stacked single-device reference — both backends are available to
+    both paths, which is how backend-vs-backend consistency is tested.
+    """
+    graph = as_graph(graph)
+    if plan.backend not in _AGGS:
+        raise ValueError(f"unknown NMP backend {plan.backend!r}; "
+                         f"registered: {sorted(_AGGS)}")
+    return _AGGS[plan.backend](params, x, e, graph, plan)
+
+
+def edge_update_aggregate_part(params, x, e, graph, part: str, plan: NMPPlan):
+    """Eq. 4a + 4b restricted to one side of the interior/boundary edge split.
+
+    Returns (e_part, agg_part), both full-size ([.., E_pad, H] / [.., N_pad,
+    H]) but zero outside the side's edges / destination rows.  The two sides
+    partition the real edges, so ``e_bnd + e_int`` / ``agg_bnd + agg_int``
+    reproduce the unsplit ``edge_update_aggregate`` outputs; interior rows
+    are disjoint from the halo send/recv rows, which is what lets the
+    overlap schedule run the exchange on ``agg_bnd`` alone.
+    """
+    graph = as_graph(graph)
+    if part not in ("bnd", "int"):
+        raise ValueError(f"unknown edge split part {part!r}")
+    if plan.backend not in _AGGS_PART:
+        raise ValueError(f"unknown NMP backend {plan.backend!r}; "
+                         f"registered: {sorted(_AGGS_PART)}")
+    return _AGGS_PART[plan.backend](params, x, e, graph, part, plan)
+
+
 def node_update(params: nn.Params, x: jnp.ndarray, agg: jnp.ndarray,
-                meta: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+                graph) -> jnp.ndarray:
     """Eq. 4e: residual node MLP on [a_i*, x_i]."""
     x_new = x + nn.mlp(params["node"], jnp.concatenate([agg, x], axis=-1))
-    return x_new * meta["node_mask"][..., None]
+    return x_new * graph["node_mask"][..., None]
 
 
-def nmp_layer(
-    params: nn.Params,
-    x: jnp.ndarray,            # [N_pad, H] or [B, N_pad, H]
-    e: jnp.ndarray,            # [E_pad, H] or [B, E_pad, H]
-    meta: Dict[str, jnp.ndarray],
-    halo: HaloSpec,
-    sync_fn: Callable | None = None,
-    edge_parallel_axes: tuple = (),
-    backend: str = XLA,
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = BLOCKING,
-    precision: str = FP32,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """One consistent NMP layer. Returns (x', e').
+# ---------------------------------------------------------------------------
+# the (backend x schedule) layer implementations — registered once
+# ---------------------------------------------------------------------------
 
-    ``edge_parallel_axes``: second-level edge parallelism (beyond-paper,
-    EXPERIMENTS §Perf): this shard holds only a slice of the sub-graph's
-    edges (node set replicated across those mesh axes); the local aggregate
-    is psum'ed over them before the halo sync. Arithmetically identical to
-    the paper's layer — the aggregation sum is simply split one level more.
-
-    ``backend``/``interpret``/``block_n``/``precision`` select and configure
-    the Eq. 4a+4b implementation — see the module docstring (``precision=
-    "bf16"`` runs the edge-MLP matmuls with bf16 operands / fp32
-    accumulation; the fp32 default keeps the consistency tests bit-stable).
-
-    ``schedule`` picks the communication schedule:
-
-    * ``"blocking"`` — the paper's serial order: full Eq. 4a+4b, then the
-      halo exchange, then Eq. 4e.
-    * ``"overlap"``  — interior/boundary split: boundary edges (dst shared
-      with another rank) are processed first and their partial aggregate
-      enters the exchange immediately; interior edges — the bulk of the
-      graph for surface-to-volume partitions — have no data dependence on
-      the collective, so the compiler is free to run their Eq. 4a+4b under
-      the in-flight ppermute/all_to_all rounds.  Requires split metadata
-      (``PartitionedGraphs.device_arrays(split=True)``).  Arithmetically
-      identical to blocking: interior aggregates land only on rows the
-      exchange neither reads nor writes.
-    """
-    if schedule == OVERLAP:
-        part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
-                       precision=precision)
-        # boundary side first — the exchange consumes its aggregate
-        e_bnd, agg_bnd = edge_update_aggregate_part(
-            params, x, e, meta, "bnd", **part_kw)
-        if edge_parallel_axes:
-            agg_bnd = jax.lax.psum(agg_bnd.astype(e.dtype), edge_parallel_axes)
-        # --- Eq. 4c + 4d on the boundary rows only ---
-        if sync_fn is not None:
-            agg_sync = sync_fn(agg_bnd)
-        else:
-            agg_sync = halo_sync(agg_bnd, meta, halo, combine="sum")
-        # interior side: independent of the collective -> overlappable
-        e_int, agg_int = edge_update_aggregate_part(
-            params, x, e, meta, "int", **part_kw)
-        if edge_parallel_axes:
-            agg_int = jax.lax.psum(agg_int.astype(e.dtype), edge_parallel_axes)
-        agg = agg_sync + agg_int          # disjoint row support
-        return node_update(params, x, agg, meta), e_bnd + e_int
-    if schedule != BLOCKING:
-        raise ValueError(f"unknown NMP schedule {schedule!r}")
-
-    e_new, agg = edge_update_aggregate(
-        params, x, e, meta, backend=backend, interpret=interpret,
-        block_n=block_n, precision=precision)
+def _blocking_layer(agg_fn, params, x, e, graph, plan, halo, sync_fn,
+                    edge_parallel_axes):
+    """The paper's serial order: full Eq. 4a+4b, exchange, Eq. 4e."""
+    e_new, agg = agg_fn(params, x, e, graph, plan)
     if edge_parallel_axes:
         # combine partial aggregates in the activation dtype (halves wire
         # bytes when activations are bf16)
@@ -324,33 +254,74 @@ def nmp_layer(
     if sync_fn is not None:
         agg = sync_fn(agg)
     else:
-        agg = halo_sync(agg, meta, halo, combine="sum")
+        agg = halo_sync(agg, graph, halo, combine="sum")
 
     # --- Eq. 4e: node update (residual) ---
-    return node_update(params, x, agg, meta), e_new
+    return node_update(params, x, agg, graph), e_new
+
+
+def _overlap_layer(agg_part_fn, params, x, e, graph, plan, halo, sync_fn,
+                   edge_parallel_axes):
+    """Interior/boundary split: the exchange consumes only the boundary
+    partial aggregate; interior-edge compute has no data dependence on the
+    collective and overlaps the in-flight ppermute rounds."""
+    # boundary side first — the exchange consumes its aggregate
+    e_bnd, agg_bnd = agg_part_fn(params, x, e, graph, "bnd", plan)
+    if edge_parallel_axes:
+        agg_bnd = jax.lax.psum(agg_bnd.astype(e.dtype), edge_parallel_axes)
+    # --- Eq. 4c + 4d on the boundary rows only ---
+    if sync_fn is not None:
+        agg_sync = sync_fn(agg_bnd)
+    else:
+        agg_sync = halo_sync(agg_bnd, graph, halo, combine="sum")
+    # interior side: independent of the collective -> overlappable
+    e_int, agg_int = agg_part_fn(params, x, e, graph, "int", plan)
+    if edge_parallel_axes:
+        agg_int = jax.lax.psum(agg_int.astype(e.dtype), edge_parallel_axes)
+    agg = agg_sync + agg_int          # disjoint row support
+    return node_update(params, x, agg, graph), e_bnd + e_int
+
+
+for _backend, _agg in _AGGS.items():
+    register_nmp_impl(_backend, BLOCKING)(
+        functools.partial(_blocking_layer, _agg))
+for _backend, _agg_part in _AGGS_PART.items():
+    register_nmp_impl(_backend, OVERLAP)(
+        functools.partial(_overlap_layer, _agg_part))
+
+
+def nmp_layer(
+    params: nn.Params,
+    x: jnp.ndarray,            # [N_pad, H] or [B, N_pad, H]
+    e: jnp.ndarray,            # [E_pad, H] or [B, E_pad, H]
+    graph,                     # ShardedGraph (rank-local or stacked slice)
+    plan: NMPPlan,
+    halo: HaloSpec | None = None,
+    sync_fn: Callable | None = None,
+    edge_parallel_axes: tuple = (),
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One consistent NMP layer. Returns (x', e').
+
+    The implementation is resolved from the (backend, schedule) registry in
+    ``repro.core.graph_state`` — see the module docstring for the taxonomy.
+
+    ``halo`` defaults to ``plan.halo``; the multilevel V-cycle overrides it
+    per level.  ``edge_parallel_axes``: second-level edge parallelism
+    (beyond-paper, EXPERIMENTS §Perf): this shard holds only a slice of the
+    sub-graph's edges (node set replicated across those mesh axes); the
+    local aggregate is psum'ed over them before the halo sync —
+    arithmetically identical to the paper's layer, the aggregation sum is
+    simply split one level more.
+    """
+    graph = as_graph(graph)
+    impl = nmp_impl(plan)
+    halo = plan.halo if halo is None else halo
+    return impl(params, x, e, graph, plan, halo, sync_fn, edge_parallel_axes)
 
 
 # ---------------------------------------------------------------------------
 # multilevel (coarse-grid) message passing
 # ---------------------------------------------------------------------------
-
-def level_meta(meta: Dict[str, jnp.ndarray], level: int) -> Dict[str, jnp.ndarray]:
-    """Extract one level's sub-metadata from the flat multilevel dict.
-
-    Level 0 keys are unprefixed; coarse levels are prefixed ``lvl{l}_``
-    (see ``repro.core.coarsen.multilevel_static_inputs``).
-    """
-    if level == 0:
-        return {k: v for k, v in meta.items() if not k.startswith("lvl")}
-    prefix = f"lvl{level}_"
-    sub = {k[len(prefix):]: v for k, v in meta.items() if k.startswith(prefix)}
-    if not sub:
-        raise ValueError(
-            f"multilevel meta for level {level} missing — attach the "
-            "coarse-level arrays via repro.core.coarsen."
-            "multilevel_static_inputs / prepare_gnn_meta(hierarchy=...)")
-    return sub
-
 
 def _transfer(x: jnp.ndarray, src_idx: jnp.ndarray, dst_idx: jnp.ndarray,
               w: jnp.ndarray, n_out: int) -> jnp.ndarray:
@@ -360,42 +331,56 @@ def _transfer(x: jnp.ndarray, src_idx: jnp.ndarray, dst_idx: jnp.ndarray,
     return jax.vmap(one)(x) if x.ndim == 3 else one(x)
 
 
-def restrict_aggregate(x_fine: jnp.ndarray, tmeta: Dict[str, jnp.ndarray],
+def restrict_aggregate(x_fine: jnp.ndarray, coarse_graph,
                        n_coarse_pad: int) -> jnp.ndarray:
     """Rank-local restriction partial sum (fine -> coarse, weight 1/|children|).
 
-    Each restriction edge lives on exactly one rank (the fine endpoint's
-    primary), so this is a PARTIAL sum: the caller must complete it with
-    ``halo_sync(..., combine='sum')`` over the coarse level's halo plan —
-    the same synchronization the Eq. 4b edge aggregate gets.  Without the
-    halo-sum, coarse replica copies would hold zeros and the hierarchy
-    would break the 1-rank == R-rank guarantee.
+    ``coarse_graph`` is the coarse level's ShardedGraph slice, which carries
+    the transfer maps from the finer level.  Each restriction edge lives on
+    exactly one rank (the fine endpoint's primary), so this is a PARTIAL
+    sum: the caller must complete it with ``halo_sync(..., combine='sum')``
+    over the coarse level's halo plan — the same synchronization the Eq. 4b
+    edge aggregate gets.  Without the halo-sum, coarse replica copies would
+    hold zeros and the hierarchy would break the 1-rank == R-rank guarantee.
     """
-    return _transfer(x_fine, tmeta["t_fine"], tmeta["t_coarse"],
-                     tmeta["t_rw"], n_coarse_pad)
+    return _transfer(x_fine, coarse_graph["t_fine"], coarse_graph["t_coarse"],
+                     coarse_graph["t_rw"], n_coarse_pad)
 
 
-def prolong_aggregate(x_coarse: jnp.ndarray, tmeta: Dict[str, jnp.ndarray],
+def prolong_aggregate(x_coarse: jnp.ndarray, coarse_graph,
                       n_fine_pad: int) -> jnp.ndarray:
     """Rank-local prolongation partial sum (coarse -> fine, weight
     1/|parents|); completed by a halo-sum over the FINE level's plan."""
-    return _transfer(x_coarse, tmeta["t_coarse"], tmeta["t_fine"],
-                     tmeta["t_pw"], n_fine_pad)
+    return _transfer(x_coarse, coarse_graph["t_coarse"], coarse_graph["t_fine"],
+                     coarse_graph["t_pw"], n_fine_pad)
+
+
+def check_coarse_halos(plan: NMPPlan, n_levels: int,
+                       sync_fns: Sequence[Callable | None] | None = None):
+    """NEIGHBOR-mode hierarchies need one HaloSpec per coarse level: the
+    level-0 perms encode the FINE rank adjacency and cannot be reused."""
+    if plan.halo.mode != NEIGHBOR:
+        return
+    for lvl in range(1, n_levels):
+        covered = (lvl - 1 < len(plan.coarse_halos)
+                   or (sync_fns is not None and sync_fns[lvl] is not None))
+        if not covered:
+            raise ValueError(
+                "NEIGHBOR-mode multilevel exchange needs one HaloSpec "
+                f"per coarse level (level {lvl} has neither a "
+                f"coarse_halos entry — got {len(plan.coarse_halos)} for "
+                f"{n_levels - 1} coarse levels — nor a sync_fns "
+                "override): the level-0 perms encode the FINE rank "
+                "adjacency and cannot be reused — build the plan via "
+                "NMPPlan.build(hierarchy, mode, ...)")
 
 
 def multilevel_vcycle(
     coarse_params: Sequence[nn.Params],   # one {"edge_enc", "mp"} per coarse level
     h: jnp.ndarray,                       # [N_pad, H] or [B, N_pad, H] fine state
-    meta: Dict[str, jnp.ndarray],         # flat multilevel metadata (lvl{l}_ keys)
-    halo: HaloSpec,                       # level-0 halo
-    coarse_halos: Sequence[HaloSpec] = (),
+    graph,                                # fine-level ShardedGraph w/ coarse chain
+    plan: NMPPlan,
     sync_fns: Sequence[Callable | None] | None = None,
-    *,
-    backend: str = XLA,
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = BLOCKING,
-    precision: str = FP32,
 ) -> jnp.ndarray:
     """One consistent V-cycle over the coarsening hierarchy. Returns h'.
 
@@ -403,73 +388,54 @@ def multilevel_vcycle(
     (:func:`restrict_aggregate`), the partial sums are halo-summed over the
     coarse level's plan — the step that makes the hierarchy consistent —
     then ``coarse_params[l-1]["mp"]`` consistent NMP layers smooth at that
-    level (running through the SAME backend/schedule/precision machinery as
+    level (running through the SAME (backend, schedule) registry cell as
     the fine layers: fused layouts and interior/boundary splits come from
-    each level's own ``PartitionedGraphs``).  Up sweep: each level's state
-    is prolonged (:func:`prolong_aggregate`), halo-summed over the finer
-    level's plan, and residually added.
+    each level's own arrays).  Up sweep: each level's state is prolonged
+    (:func:`prolong_aggregate`), halo-summed over the finer level's plan,
+    and residually added.
 
-    ``coarse_halos[l-1]`` is level l's HaloSpec (each level has its own
-    ppermute rounds); with fewer entries than coarse levels the level-0
-    ``halo`` spec is reused — correct ONLY for the A2A and NONE modes, and
-    note the fallback inherits ``wire_dtype`` too (fine-level wire
-    compression then also applies to the coarse exchanges).  A NEIGHBOR-mode
-    ``halo`` with a missing coarse spec raises rather than routing that
-    level's exchange through the fine level's rank-adjacency perms (unless a
-    ``sync_fns`` entry overrides that level's exchange).  ``sync_fns``
-    optionally overrides the exchange per level (index l applies to level
-    l), mirroring ``nmp_layer(sync_fn=...)``.
+    Per-level halo specs come from ``plan`` (``plan.halos(n_levels)``); a
+    NEIGHBOR fine spec with a missing coarse entry raises rather than
+    routing that level's exchange through the fine level's rank-adjacency
+    perms (unless a ``sync_fns`` entry overrides that level's exchange —
+    index l applies to level l, mirroring ``nmp_layer(sync_fn=...)``).
+    Note a missing A2A/NONE coarse entry falls back to the fine spec,
+    inheriting its ``wire_dtype`` (fine-level wire compression then also
+    applies to the coarse exchanges).
     """
+    graph = as_graph(graph)
     n_levels = len(coarse_params) + 1
-    metas = [level_meta(meta, lvl) for lvl in range(n_levels)]
-    if halo.mode == NEIGHBOR:
-        for lvl in range(1, n_levels):
-            covered = (lvl - 1 < len(coarse_halos)
-                       or (sync_fns is not None and sync_fns[lvl] is not None))
-            if not covered:
-                raise ValueError(
-                    "NEIGHBOR-mode multilevel exchange needs one HaloSpec "
-                    f"per coarse level (level {lvl} has neither a "
-                    f"coarse_halos entry — got {len(coarse_halos)} for "
-                    f"{n_levels - 1} coarse levels — nor a sync_fns "
-                    "override): the level-0 perms encode the FINE rank "
-                    "adjacency and cannot be reused — build each level's "
-                    "spec via halo_spec_from_plan(hierarchy.levels[l].halo, "
-                    "...)")
-    halos = [halo] + [
-        coarse_halos[i] if i < len(coarse_halos) else halo
-        for i in range(n_levels - 1)
-    ]
+    graph.level(n_levels - 1)          # loud error if coarse levels missing
+    levels = graph.levels
+    check_coarse_halos(plan, n_levels, sync_fns)
+    halos = plan.halos(n_levels)
 
-    def sync(a, lvl, m):
+    def sync(a, lvl, g):
         if sync_fns is not None and sync_fns[lvl] is not None:
             return sync_fns[lvl](a)
-        return halo_sync(a, m, halos[lvl], combine="sum")
+        return halo_sync(a, g, halos[lvl], combine="sum")
 
-    layer_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
-                    schedule=schedule, precision=precision)
     states = [h]
     # --- down sweep: restrict, complete partial sums, smooth ---
     for lvl in range(1, n_levels):
-        m = metas[lvl]
-        n_pad_c = m["node_mask"].shape[-1]
-        c = restrict_aggregate(states[-1], m, n_pad_c)
-        c = sync(c, lvl, m) * m["node_mask"][..., None]
+        g = levels[lvl]
+        n_pad_c = g["node_mask"].shape[-1]
+        c = restrict_aggregate(states[-1], g, n_pad_c)
+        c = sync(c, lvl, g) * g["node_mask"][..., None]
         p = coarse_params[lvl - 1]
-        e = nn.mlp(p["edge_enc"], m["static_edge_feats"]) \
-            * m["edge_mask"][..., None]
+        e = nn.mlp(p["edge_enc"], g["static_edge_feats"]) \
+            * g["edge_mask"][..., None]
         if c.ndim == 3:
             e = jnp.broadcast_to(e[None], (c.shape[0],) + e.shape)
         for lp in p["mp"]:
-            c, e = nmp_layer(lp, c, e, m, halos[lvl],
-                             sync_fn=sync_fns[lvl] if sync_fns else None,
-                             **layer_kw)
+            c, e = nmp_layer(lp, c, e, g, plan, halo=halos[lvl],
+                             sync_fn=sync_fns[lvl] if sync_fns else None)
         states.append(c)
     # --- up sweep: prolong, complete partial sums, residual add ---
     for lvl in range(n_levels - 1, 0, -1):
-        mf = metas[lvl - 1]
-        n_pad_f = mf["node_mask"].shape[-1]
-        up = prolong_aggregate(states[lvl], metas[lvl], n_pad_f)
-        up = sync(up, lvl - 1, mf)
-        states[lvl - 1] = (states[lvl - 1] + up) * mf["node_mask"][..., None]
+        gf = levels[lvl - 1]
+        n_pad_f = gf["node_mask"].shape[-1]
+        up = prolong_aggregate(states[lvl], levels[lvl], n_pad_f)
+        up = sync(up, lvl - 1, gf)
+        states[lvl - 1] = (states[lvl - 1] + up) * gf["node_mask"][..., None]
     return states[0]

@@ -9,80 +9,66 @@ Layout (matches the paper's Frontier runs, adapted to a TPU mesh):
   * optional 'pod' axis — pure data parallelism across pods; only gradient
     all-reduce crosses the inter-pod links.
 
-Inputs per device: x, y_hat blocks [B_local, N_pad, F]; static metadata
-sharded over 'graph' (identical for all data replicas).
+Inputs per device: x, y_hat blocks [B_local, N_pad, F]; the static
+:class:`~repro.core.graph_state.ShardedGraph` is sharded over 'graph' via
+its own ``specs(graph_axis)`` (identical for all data replicas), and the
+execution policy — incl. the per-level halo specs — is one
+:class:`~repro.core.graph_state.NMPPlan`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.consistent_loss import consistent_mse
 from repro.core.gnn import GNNConfig, gnn_forward
-from repro.core.halo import HaloSpec
-
-
-def _meta_specs(meta: Dict[str, jnp.ndarray], graph_axis: str) -> Dict[str, P]:
-    """Static metadata is sharded over the graph axis (leading rank dim)."""
-    return {k: P(graph_axis, *(None,) * (v.ndim - 1)) for k, v in meta.items()}
+from repro.core.graph_state import NMPPlan, as_graph
 
 
 def make_gnn_step_fns(
     mesh: Mesh,
     cfg: GNNConfig,
-    halo: HaloSpec,
+    plan: NMPPlan,
     data_axes: Sequence[str] = ("data",),
     graph_axis: str = "graph",
     learning_rate: float = 1e-3,
-    coarse_halos: Sequence[HaloSpec] = (),
 ):
-    """Build jit'd (eval_step, loss_step, train_step) closed over mesh/halo.
+    """Build jit'd (eval_step, loss_step, grad_step, train_step) closed over
+    mesh + plan.
 
     train_step here is plain SGD for consistency experiments; the full
     training loop (AdamW etc.) lives in repro.train and reuses grad_step.
 
-    Multilevel models (``cfg.n_levels > 1``) additionally need
-    ``coarse_halos`` — one HaloSpec per coarse level, each built from that
-    level's own halo plan (``halo_spec_from_plan(hierarchy.levels[l].halo,
-    mode, axis=graph_axis)``) — and metadata carrying the ``lvl{l}_*``
-    arrays (``prepare_gnn_meta(hierarchy=...)``).
+    Multilevel models (``cfg.n_levels > 1``) need a plan whose
+    ``coarse_halos`` carry one HaloSpec per coarse level
+    (``NMPPlan.build(hierarchy, mode, ...)``) and a graph built with the
+    hierarchy (``ShardedGraph.build(pg, coords, plan, hierarchy=...)``).
     """
+    del cfg  # architecture is entirely encoded in the params pytree
     all_axes = tuple(data_axes) + (graph_axis,)
-    # NMP hot-loop backend + halo/compute schedule from the model config
-    # (see repro.core.consistent_mp)
-    backend_kw = dict(backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                      block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
-                      precision=cfg.mp_precision,
-                      coarse_halos=tuple(coarse_halos))
 
-    def shard_meta(meta):
-        """Strip the leading rank axis inside the shard."""
-        return {k: v[0] for k, v in meta.items()}
-
-    def forward_local(params, x, meta):
+    def forward_local(params, x, graph):
         # x arrives as [B_local, 1, N_pad, F] (graph axis sharded to size 1)
-        m = shard_meta(meta)
-        y = gnn_forward(params, x[:, 0], m["static_edge_feats"], m, halo,
-                        **backend_kw)
+        g = graph.rank_local()
+        y = gnn_forward(params, x[:, 0], g, plan)
         return y[:, None]
 
-    def loss_local(params, x, y_hat, meta):
-        m = shard_meta(meta)
+    def loss_local(params, x, y_hat, graph):
+        g = graph.rank_local()
         x, y_hat = x[:, 0], y_hat[:, 0]
-        y = gnn_forward(params, x, m["static_edge_feats"], m, halo,
-                        **backend_kw)
+        y = gnn_forward(params, x, g, plan)
         # consistent over the graph axis (Eq. 6), mean over data axes
-        loss = consistent_mse(y, y_hat, m["node_inv_mult"], axis_names=(graph_axis,))
+        loss = consistent_mse(y, y_hat, g["node_inv_mult"],
+                              axis_names=(graph_axis,))
         if data_axes:
             loss = jax.lax.pmean(loss, tuple(data_axes))
         return loss, y
 
-    def grad_local(params, x, y_hat, meta):
-        (loss, y), grads = jax.value_and_grad(loss_local, has_aux=True)(params, x, y_hat, meta)
+    def grad_local(params, x, y_hat, graph):
+        (loss, y), grads = jax.value_and_grad(loss_local, has_aux=True)(
+            params, x, y_hat, graph)
         # The local backward of the replicated loss computes, on device q,
         # d(sum over ALL devices of the replicated scalar)/d theta_q
         # = n_dev * dL/d theta_q  (theta paths local to q, incl. halo routes).
@@ -92,65 +78,60 @@ def make_gnn_step_fns(
 
     def _wrap(fn, out_specs, n_feature_args):
         def call(params, *args):
-            meta = args[-1]
+            graph = as_graph(args[-1])
             in_specs = (
                 P(),  # params replicated
-                *(P(tuple(data_axes), graph_axis, None, None) for _ in range(n_feature_args)),
-                _meta_specs(meta, graph_axis),
+                *(P(tuple(data_axes), graph_axis, None, None)
+                  for _ in range(n_feature_args)),
+                graph.specs(graph_axis),
             )
             return jax.shard_map(
-                functools.partial(fn),
-                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                 check_vma=False,
             )(params, *args)
         return jax.jit(call)
 
     eval_step = _wrap(forward_local, P(tuple(data_axes), graph_axis, None, None), 1)
-    loss_step = _wrap(lambda p, x, y, m: loss_local(p, x, y, m)[0], P(), 2)
+    loss_step = _wrap(lambda p, x, y, g: loss_local(p, x, y, g)[0], P(), 2)
 
-    def train_local(params, x, y_hat, meta):
-        loss, grads = grad_local(params, x, y_hat, meta)
+    def train_local(params, x, y_hat, graph):
+        loss, grads = grad_local(params, x, y_hat, graph)
         new_params = jax.tree.map(lambda p, g: p - learning_rate * g, params, grads)
         return loss, new_params
 
-    def train_call(params, x, y_hat, meta):
-        in_specs = (
-            P(),
-            P(tuple(data_axes), graph_axis, None, None),
-            P(tuple(data_axes), graph_axis, None, None),
-            _meta_specs(meta, graph_axis),
-        )
-        return jax.shard_map(
-            train_local, mesh=mesh,
-            in_specs=in_specs, out_specs=(P(), P()),
-            check_vma=False,
-        )(params, x, y_hat, meta)
+    def _wrap_pair(fn, donate=False):
+        def call(params, x, y_hat, graph):
+            graph = as_graph(graph)
+            in_specs = (
+                P(),
+                P(tuple(data_axes), graph_axis, None, None),
+                P(tuple(data_axes), graph_axis, None, None),
+                graph.specs(graph_axis),
+            )
+            return jax.shard_map(
+                fn, mesh=mesh,
+                in_specs=in_specs, out_specs=(P(), P()),
+                check_vma=False,
+            )(params, x, y_hat, graph)
+        return jax.jit(call, donate_argnums=(0,) if donate else ())
 
-    train_step = jax.jit(train_call, donate_argnums=(0,))
-
-    def grad_call(params, x, y_hat, meta):
-        in_specs = (
-            P(),
-            P(tuple(data_axes), graph_axis, None, None),
-            P(tuple(data_axes), graph_axis, None, None),
-            _meta_specs(meta, graph_axis),
-        )
-        return jax.shard_map(
-            grad_local, mesh=mesh,
-            in_specs=in_specs, out_specs=(P(), P()),
-            check_vma=False,
-        )(params, x, y_hat, meta)
-
-    grad_step = jax.jit(grad_call)
+    train_step = _wrap_pair(train_local, donate=True)
+    grad_step = _wrap_pair(grad_local)
 
     return eval_step, loss_step, grad_step, train_step
 
 
-def shard_inputs(mesh: Mesh, x, meta, data_axes=("data",), graph_axis="graph"):
+def shard_graph(mesh: Mesh, graph, graph_axis="graph"):
+    """Place the static ShardedGraph with its own shardings — once per run;
+    the graph is loop-invariant, so keep the result across steps."""
+    graph = as_graph(graph)
+    return jax.device_put(
+        graph,
+        jax.tree.map(lambda s: NamedSharding(mesh, s), graph.specs(graph_axis),
+                     is_leaf=lambda v: isinstance(v, P)))
+
+
+def shard_inputs(mesh: Mesh, x, graph, data_axes=("data",), graph_axis="graph"):
     """Place host arrays with the step-function shardings."""
     xs = jax.device_put(x, NamedSharding(mesh, P(tuple(data_axes), graph_axis, None, None)))
-    ms = {
-        k: jax.device_put(v, NamedSharding(mesh, P(graph_axis, *(None,) * (v.ndim - 1))))
-        for k, v in meta.items()
-    }
-    return xs, ms
+    return xs, shard_graph(mesh, graph, graph_axis)

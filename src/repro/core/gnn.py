@@ -7,18 +7,22 @@
 Configs: "small" (N_H=8, M=4, 2 MLP hidden layers, 3,979 params) and
 "large" (N_H=32, M=4, 5 MLP hidden layers, 91,459 params) with F_x=3
 (velocity), F_e=7 (relative velocity + distance vector + magnitude).
+
+``GNNConfig`` is pure architecture; the execution policy (backend,
+schedule, precision, halo specs, ...) lives in one
+:class:`~repro.core.graph_state.NMPPlan` and the static graph arrays in one
+:class:`~repro.core.graph_state.ShardedGraph`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
 from repro.core.consistent_mp import init_nmp_layer, multilevel_vcycle, nmp_layer
-from repro.core.halo import HaloSpec
+from repro.core.graph_state import NMPPlan, as_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,13 +34,6 @@ class GNNConfig:
     edge_in: int = 7             # F_e
     node_out: int = 3            # F_y
     name: str = "small"
-    # --- NMP hot-loop backend (see repro.core.consistent_mp) ---
-    mp_backend: str = "xla"      # "xla" | "fused" (Pallas kernel)
-    seg_block_n: int = 128       # node padding granularity (fused kernel)
-    seg_block_e: int = 128       # edge rows per fused-kernel tile
-    mp_interpret: bool = False   # run Pallas via interpreter (CPU CI)
-    mp_schedule: str = "blocking"  # "blocking" | "overlap" (halo/compute)
-    mp_precision: str = "fp32"   # "fp32" | "bf16" edge-MLP matmul precision
     # --- multilevel (coarse-grid) message passing (repro.core.coarsen) ---
     n_levels: int = 1            # 1 = flat NMP; >1 adds a consistent V-cycle
     coarse_mp_layers: int = 2    # NMP layers smoothing each coarse level
@@ -87,10 +84,10 @@ def init_coarse_levels(key, hidden: int, mlp_hidden_layers: int,
     return out
 
 
-def build_edge_inputs(x: jnp.ndarray, static_edge_feats: jnp.ndarray,
-                      meta: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def build_edge_inputs(x: jnp.ndarray, graph) -> jnp.ndarray:
     """Paper's 7-dim edge init: relative node features ++ distance vec ++ |dist|."""
-    src, dst = meta["edge_src"], meta["edge_dst"]
+    src, dst = graph["edge_src"], graph["edge_dst"]
+    static_edge_feats = graph["static_edge_feats"]
     rel = jnp.take(x, dst, axis=-2) - jnp.take(x, src, axis=-2)
     if x.ndim == 3 and static_edge_feats.ndim == 2:
         static_edge_feats = jnp.broadcast_to(
@@ -101,45 +98,29 @@ def build_edge_inputs(x: jnp.ndarray, static_edge_feats: jnp.ndarray,
 def gnn_forward(
     params: nn.Params,
     x: jnp.ndarray,                    # [N_pad, F_x] or [B, N_pad, F_x]
-    static_edge_feats: jnp.ndarray,    # [E_pad, F_e - F_x] (dist vec + mag)
-    meta: Dict[str, jnp.ndarray],
-    halo: HaloSpec,
-    *,
-    backend: str = "xla",
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = "blocking",
-    precision: str = "fp32",
-    coarse_halos: Sequence[HaloSpec] = (),
+    graph,                             # ShardedGraph (rank-local slice)
+    plan: NMPPlan,
 ) -> jnp.ndarray:
     """Full encode-process-decode forward on one shard. Returns [..., N_pad, F_y].
 
-    ``backend``/``interpret``/``block_n``/``schedule``/``precision`` select
-    the NMP 4a+4b implementation, the halo/compute schedule and the edge-MLP
-    matmul precision (see ``repro.core.consistent_mp``); usually taken from
-    ``GNNConfig``.
+    ``graph`` holds every static array (edge indices, masks, halo buffers,
+    static geometric edge features, fused layouts, interior/boundary split,
+    nested coarse levels); ``plan`` selects the NMP implementation and the
+    per-level halo specs.
 
     When the params carry coarse levels (``GNNConfig.n_levels > 1``), the M
     fine NMP layers act as the pre-smoother and a consistent multilevel
-    V-cycle runs before the decoder; ``meta`` must then hold the coarse-level
-    arrays (``prepare_gnn_meta(hierarchy=...)``) and ``coarse_halos`` one
-    HaloSpec per coarse level (each level has its own exchange plan).
+    V-cycle runs before the decoder; ``graph`` must then carry the coarse
+    chain (``ShardedGraph.build(pg, coords, plan, hierarchy=...)``).
     """
-    sub = meta
-    if "coarse" in params:
-        from repro.core.consistent_mp import level_meta
-        sub = level_meta(meta, 0)
-    e_in = build_edge_inputs(x, static_edge_feats, sub)
-    h = nn.mlp(params["node_enc"], x) * sub["node_mask"][..., None]
-    e = nn.mlp(params["edge_enc"], e_in) * sub["edge_mask"][..., None]
+    graph = as_graph(graph)
+    g0 = graph.levels[0]
+    e_in = build_edge_inputs(x, g0)
+    h = nn.mlp(params["node_enc"], x) * g0["node_mask"][..., None]
+    e = nn.mlp(params["edge_enc"], e_in) * g0["edge_mask"][..., None]
     for lp in params["mp"]:
-        h, e = nmp_layer(lp, h, e, sub, halo, backend=backend,
-                         interpret=interpret, block_n=block_n,
-                         schedule=schedule, precision=precision)
+        h, e = nmp_layer(lp, h, e, g0, plan)
     if "coarse" in params:
-        h = multilevel_vcycle(params["coarse"], h, meta, halo, coarse_halos,
-                              backend=backend, interpret=interpret,
-                              block_n=block_n, schedule=schedule,
-                              precision=precision)
-    y = nn.mlp(params["node_dec"], h) * sub["node_mask"][..., None]
+        h = multilevel_vcycle(params["coarse"], h, graph, plan)
+    y = nn.mlp(params["node_dec"], h) * g0["node_mask"][..., None]
     return y

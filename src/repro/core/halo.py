@@ -74,7 +74,7 @@ def _maybe_compress(buf: jnp.ndarray, spec: HaloSpec) -> Tuple[jnp.ndarray, jnp.
 
 def halo_sync(
     a: jnp.ndarray,
-    meta: dict,
+    graph,
     spec: HaloSpec,
     combine: str = "sum",
 ) -> jnp.ndarray:
@@ -82,9 +82,9 @@ def halo_sync(
 
     Args:
       a: local aggregates, [N_pad, F] or [B, N_pad, F] (per shard).
-      meta: per-shard halo arrays from ``PartitionedGraphs.device_arrays``
-        (leading rank axis already sliced away by shard_map), i.e.
-        a2a_send_idx [R, Bf], ..., nbr_send_idx [K, Bn], ...
+      graph: the rank-local ``ShardedGraph`` (leading rank axis already
+        sliced away by shard_map / ``graph.rank_local()``) carrying the halo
+        arrays a2a_send_idx [R, Bf], ..., nbr_send_idx [K, Bn], ...
       spec: HaloSpec (mode + static perms).
       combine: 'sum' (Eq. 4d) or 'max' (consistent softmax extension).
     Returns:
@@ -100,10 +100,10 @@ def halo_sync(
         return a[:, idx] if batched else a[idx]
 
     if spec.mode == A2A:
-        send_idx = meta["a2a_send_idx"]       # [R, Bf]
-        send_mask = meta["a2a_send_mask"]
-        recv_idx = meta["a2a_recv_idx"]
-        recv_mask = meta["a2a_recv_mask"]
+        send_idx = graph["a2a_send_idx"]      # [R, Bf]
+        send_mask = graph["a2a_send_mask"]
+        recv_idx = graph["a2a_recv_idx"]
+        recv_mask = graph["a2a_recv_mask"]
         buf = take(send_idx)                  # [(B,) R, Bf, F]
         m = send_mask[..., None]
         buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
@@ -125,10 +125,10 @@ def halo_sync(
     if spec.mode == NEIGHBOR and spec.rounds2d:
         out = a
         for k, hops in enumerate(spec.rounds2d):
-            send_idx = meta["nbr_send_idx"][k]
-            send_mask = meta["nbr_send_mask"][k]
-            recv_idx = meta["nbr_recv_idx"][k]
-            recv_mask = meta["nbr_recv_mask"][k]
+            send_idx = graph["nbr_send_idx"][k]
+            send_mask = graph["nbr_send_mask"][k]
+            recv_idx = graph["nbr_recv_idx"][k]
+            recv_mask = graph["nbr_recv_mask"][k]
             buf = take(send_idx)
             m = send_mask[..., None]
             buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
@@ -146,10 +146,10 @@ def halo_sync(
         for k, perm in enumerate(spec.perms):
             if not perm:
                 continue
-            send_idx = meta["nbr_send_idx"][k]     # [Bn]
-            send_mask = meta["nbr_send_mask"][k]
-            recv_idx = meta["nbr_recv_idx"][k]
-            recv_mask = meta["nbr_recv_mask"][k]
+            send_idx = graph["nbr_send_idx"][k]     # [Bn]
+            send_mask = graph["nbr_send_mask"][k]
+            recv_idx = graph["nbr_recv_idx"][k]
+            recv_mask = graph["nbr_recv_mask"][k]
             buf = take(send_idx)
             m = send_mask[..., None]
             buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
@@ -170,19 +170,19 @@ def halo_spec_from_plan(plan, mode: str, axis: str = "graph",
     return HaloSpec(mode=mode, axis=axis, perms=perms, wire_dtype=wire_dtype)
 
 
-def halo_sync_reference(a_stacked: jnp.ndarray, meta_stacked: dict, spec: HaloSpec,
+def halo_sync_reference(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
                         combine: str = "sum") -> jnp.ndarray:
-    """Single-device oracle for halo_sync over stacked [R, ...] arrays.
+    """Single-device oracle for halo_sync over a stacked [R, ...] graph.
 
     Emulates the A2A exchange with plain gathers (no collectives); used to run
     consistency tests fast on one device and as the vmap-style reference the
     shard_map path is checked against.
     """
     R = a_stacked.shape[0]
-    send_idx = meta_stacked["a2a_send_idx"]     # [R, R, Bf]
-    send_mask = meta_stacked["a2a_send_mask"]
-    recv_idx = meta_stacked["a2a_recv_idx"]
-    recv_mask = meta_stacked["a2a_recv_mask"]
+    send_idx = graph["a2a_send_idx"]            # [R, R, Bf]
+    send_mask = graph["a2a_send_mask"]
+    recv_idx = graph["a2a_recv_idx"]
+    recv_mask = graph["a2a_recv_mask"]
     neutral = 0.0 if combine == "sum" else _NEG
     out = a_stacked
     batched = a_stacked.ndim == 4               # [R, B, N, F]

@@ -232,7 +232,8 @@ class PartitionedGraphs:
         consume.
 
         ``split=True`` attaches the interior/boundary edge split
-        (:meth:`interior_split`) consumed by ``nmp_layer(schedule="overlap")``
+        (:meth:`interior_split`) consumed by the overlap-schedule NMP
+        implementations (``NMPPlan(schedule="overlap")``)
         — the compacted ``edge_{bnd,int}_idx``/``_valid`` index lists for the
         xla backend and, when ``seg_layout`` is also given, the per-side
         fused layouts ``seg_{perm,src,dst}_{bnd,int}``.
@@ -550,7 +551,8 @@ def build_2d_halo_rounds(graphs: List[RankGraph], grid: Tuple[int, int],
     routed as <=2 chained ppermute hops (uniform torus translation — no
     relay conflicts). Rank id = a * Gb + b, a over axes[0], b over axes[1].
 
-    Returns (rounds2d, nbr arrays [R, K, B]) to splice into a HaloPlan/meta.
+    Returns (rounds2d, nbr arrays [R, K, B]) to splice into a HaloPlan /
+    ``ShardedGraph.with_arrays``.
     """
     Ga, Gb = grid
     R = len(graphs)

@@ -4,58 +4,60 @@ Runs the R-rank partitioned model on ONE device by looping ranks in python
 and emulating the halo exchange with plain gathers (``halo_sync_reference``).
 This is the oracle used by tests and the Fig. 6 benchmarks; the production
 shard_map path must agree with it exactly (same arithmetic, real collectives).
+
+All entry points take the stacked :class:`~repro.core.graph_state.
+ShardedGraph` (leading rank axis intact — ``ShardedGraph.build``) and one
+:class:`~repro.core.graph_state.NMPPlan`; per-rank slices are produced with
+``graph.rank(r)``.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import nn as rnn
+from repro.core.consistent_mp import (
+    edge_update_aggregate, edge_update_aggregate_part, node_update,
+    prolong_aggregate, restrict_aggregate,
+)
 from repro.core.gnn import build_edge_inputs
-from repro.core.halo import HaloSpec, halo_sync_reference
-from repro.core.mesh_gen import edge_features as static_edge_features
-from repro.core.partition import PartitionedGraphs, gather_node_features
+from repro.core.graph_state import OVERLAP, NMPPlan, ShardedGraph, as_graph
+from repro.core.halo import halo_sync_reference
 
 
-def rank_static_inputs(pg: PartitionedGraphs, coords: np.ndarray,
-                       seg_layout: tuple | None = None,
-                       split: bool = False) -> Dict[str, jnp.ndarray]:
-    """Stacked per-rank static arrays: halo/edge metadata + edge geometry feats.
-
-    ``seg_layout=(block_n, block_e)`` additionally attaches the cached
-    compact gather/scatter index lists (``seg_perm``/``seg_src``/``seg_dst``)
-    for the fused NMP backend — the host-side sort runs once per partition
-    (memoized on ``pg``), not per step.
-
-    ``split=True`` attaches the interior/boundary edge split the overlap
-    schedule consumes (see ``PartitionedGraphs.interior_split``).
-    """
-    meta = {k: jnp.asarray(v)
-            for k, v in pg.device_arrays(seg_layout=seg_layout,
-                                         split=split).items()}
-    coords_r = gather_node_features(pg, coords)
-    ef = []
-    for r in range(pg.R):
-        e = np.stack([pg.edge_src[r], pg.edge_dst[r]], axis=-1)
-        ef.append(static_edge_features(coords_r[r], e) * pg.edge_mask[r][:, None])
-    meta["static_edge_feats"] = jnp.asarray(np.stack(ef).astype(np.float32))
-    return meta
+def _smooth_stacked(lp, h, e, g: ShardedGraph, plan: NMPPlan):
+    """One consistent NMP layer over the stacked ranks (reference halo)."""
+    R = h.shape[0]
+    ranks = [g.rank(r) for r in range(R)]
+    if plan.schedule == OVERLAP:
+        outs_b = [edge_update_aggregate_part(lp, h[r], e[r], ranks[r], "bnd",
+                                             plan) for r in range(R)]
+        outs_i = [edge_update_aggregate_part(lp, h[r], e[r], ranks[r], "int",
+                                             plan) for r in range(R)]
+        agg = jnp.stack([o[1] for o in outs_b])
+        if plan.halo.mode != "none":
+            agg = halo_sync_reference(agg, g, plan.halo, combine="sum")
+        agg = agg + jnp.stack([o[1] for o in outs_i])
+        e_new = jnp.stack([b[0] + i[0] for b, i in zip(outs_b, outs_i)])
+    else:
+        outs = [edge_update_aggregate(lp, h[r], e[r], ranks[r], plan)
+                for r in range(R)]
+        agg = jnp.stack([o[1] for o in outs])
+        if plan.halo.mode != "none":
+            agg = halo_sync_reference(agg, g, plan.halo, combine="sum")
+        e_new = jnp.stack([o[0] for o in outs])
+    h_new = jnp.stack([node_update(lp, h[r], agg[r], ranks[r])
+                       for r in range(R)])
+    return h_new, e_new
 
 
 def vcycle_stacked(
     coarse_params,
     h: jnp.ndarray,                  # [R, N_pad, H]
-    meta: Dict[str, jnp.ndarray],    # flat multilevel stacked metadata
-    halo: HaloSpec,
-    *,
-    backend: str = "xla",
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = "blocking",
-    precision: str = "fp32",
+    graph: ShardedGraph,             # fine level w/ nested coarse chain
+    plan: NMPPlan,
 ) -> jnp.ndarray:
     """Single-device oracle for ``consistent_mp.multilevel_vcycle``: ranks
     loop in python and every exchange — the restriction/prolongation
@@ -63,168 +65,85 @@ def vcycle_stacked(
     over each level's stacked A2A arrays.  The production shard_map V-cycle
     must agree with this exactly (tests/test_multilevel.py, values and
     gradients, both backends x both schedules)."""
-    from repro.core.consistent_mp import (
-        edge_update_aggregate, edge_update_aggregate_part, level_meta,
-        node_update, prolong_aggregate, restrict_aggregate)
-
+    graph = as_graph(graph)
     n_levels = len(coarse_params) + 1
-    metas = [level_meta(meta, lvl) for lvl in range(n_levels)]
+    graph.level(n_levels - 1)          # loud error if coarse levels missing
+    levels = graph.levels
     R = h.shape[0]
-    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
-                   precision=precision)
-
-    def smooth(lp, hl, el, m):
-        """One consistent NMP layer over the stacked ranks (reference halo)."""
-        if schedule == "overlap":
-            outs_b = [edge_update_aggregate_part(
-                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, "bnd",
-                **part_kw) for r in range(R)]
-            outs_i = [edge_update_aggregate_part(
-                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, "int",
-                **part_kw) for r in range(R)]
-            agg = jnp.stack([o[1] for o in outs_b])
-            if halo.mode != "none":
-                agg = halo_sync_reference(agg, m, halo, combine="sum")
-            agg = agg + jnp.stack([o[1] for o in outs_i])
-            e_new = jnp.stack([b[0] + i[0] for b, i in zip(outs_b, outs_i)])
-        else:
-            outs = [edge_update_aggregate(
-                lp, hl[r], el[r], {k: v[r] for k, v in m.items()}, **part_kw)
-                for r in range(R)]
-            agg = jnp.stack([o[1] for o in outs])
-            if halo.mode != "none":
-                agg = halo_sync_reference(agg, m, halo, combine="sum")
-            e_new = jnp.stack([o[0] for o in outs])
-        h_new = jnp.stack([
-            node_update(lp, hl[r], agg[r], {k: v[r] for k, v in m.items()})
-            for r in range(R)])
-        return h_new, e_new
 
     states = [h]
     for lvl in range(1, n_levels):
-        m = metas[lvl]
-        n_pad_c = m["node_mask"].shape[-1]
-        c = jnp.stack([restrict_aggregate(
-            states[-1][r], {k: v[r] for k, v in m.items()}, n_pad_c)
-            for r in range(R)])
-        if halo.mode != "none":
-            c = halo_sync_reference(c, m, halo, combine="sum")
-        c = c * m["node_mask"][..., None]
+        g = levels[lvl]
+        n_pad_c = g["node_mask"].shape[-1]
+        c = jnp.stack([restrict_aggregate(states[-1][r], g.rank(r), n_pad_c)
+                       for r in range(R)])
+        if plan.halo.mode != "none":
+            c = halo_sync_reference(c, g, plan.halo, combine="sum")
+        c = c * g["node_mask"][..., None]
         p = coarse_params[lvl - 1]
         e = jnp.stack([
-            rnn.mlp(p["edge_enc"], m["static_edge_feats"][r])
-            * m["edge_mask"][r][..., None] for r in range(R)])
+            rnn.mlp(p["edge_enc"], g["static_edge_feats"][r])
+            * g["edge_mask"][r][..., None] for r in range(R)])
         for lp in p["mp"]:
-            c, e = smooth(lp, c, e, m)
+            c, e = _smooth_stacked(lp, c, e, g, plan)
         states.append(c)
     for lvl in range(n_levels - 1, 0, -1):
-        mt = metas[lvl]
-        mf = metas[lvl - 1]
-        n_pad_f = mf["node_mask"].shape[-1]
-        up = jnp.stack([prolong_aggregate(
-            states[lvl][r], {k: v[r] for k, v in mt.items()}, n_pad_f)
-            for r in range(R)])
-        if halo.mode != "none":
-            up = halo_sync_reference(up, mf, halo, combine="sum")
-        states[lvl - 1] = (states[lvl - 1] + up) * mf["node_mask"][..., None]
+        gt = levels[lvl]
+        gf = levels[lvl - 1]
+        n_pad_f = gf["node_mask"].shape[-1]
+        up = jnp.stack([prolong_aggregate(states[lvl][r], gt.rank(r), n_pad_f)
+                        for r in range(R)])
+        if plan.halo.mode != "none":
+            up = halo_sync_reference(up, gf, plan.halo, combine="sum")
+        states[lvl - 1] = (states[lvl - 1] + up) * gf["node_mask"][..., None]
     return states[0]
 
 
 def gnn_forward_stacked(
     params: rnn.Params,
     x: jnp.ndarray,                  # [R, N_pad, F_x]
-    meta: Dict[str, jnp.ndarray],    # stacked arrays incl. static_edge_feats
-    halo: HaloSpec,
-    *,
-    backend: str = "xla",
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = "blocking",
-    precision: str = "fp32",
+    graph: ShardedGraph,             # stacked arrays incl. static_edge_feats
+    plan: NMPPlan,
 ) -> jnp.ndarray:
     """Paper GNN forward over all R ranks on one device (reference halo).
 
     The Eq. 4a+4b hot loop goes through the same ``edge_update_aggregate``
-    the production shard_map path uses, so ``backend="fused"`` exercises the
-    Pallas kernel under this single-device oracle too.  ``schedule="overlap"``
-    runs the interior/boundary split with the exchange restricted to the
-    boundary partial aggregate — the same dataflow the production overlap
-    path hides communication behind (``meta`` then needs the split arrays
-    from ``rank_static_inputs(..., split=True)``).  Params carrying coarse
-    levels run the multilevel V-cycle through :func:`vcycle_stacked` before
-    the decoder (``meta`` from
-    ``repro.core.coarsen.multilevel_static_inputs``).
+    the production shard_map path uses, so a fused plan exercises the Pallas
+    kernels under this single-device oracle too, and an overlap plan runs
+    the interior/boundary split with the exchange restricted to the boundary
+    partial aggregate — the same dataflow the production overlap path hides
+    communication behind.  Params carrying coarse levels run the multilevel
+    V-cycle through :func:`vcycle_stacked` before the decoder (``graph``
+    then needs the nested coarse chain from
+    ``ShardedGraph.build(..., hierarchy=...)``).
     """
-    from repro.core.consistent_mp import (
-        edge_update_aggregate, edge_update_aggregate_part, level_meta,
-        node_update)
-
-    full_meta = meta
-    if "coarse" in params:
-        meta = level_meta(meta, 0)
+    graph = as_graph(graph)
+    g0 = graph.levels[0]
     R = x.shape[0]
     hs, es = [], []
     for r in range(R):
-        meta_r = {k: v[r] for k, v in meta.items()}
-        e_in = build_edge_inputs(x[r], meta_r["static_edge_feats"], meta_r)
-        hs.append(rnn.mlp(params["node_enc"], x[r]) * meta_r["node_mask"][..., None])
-        es.append(rnn.mlp(params["edge_enc"], e_in) * meta_r["edge_mask"][..., None])
+        g_r = g0.rank(r)
+        e_in = build_edge_inputs(x[r], g_r)
+        hs.append(rnn.mlp(params["node_enc"], x[r]) * g_r["node_mask"][..., None])
+        es.append(rnn.mlp(params["edge_enc"], e_in) * g_r["edge_mask"][..., None])
     h, e = jnp.stack(hs), jnp.stack(es)
 
-    part_kw = dict(backend=backend, interpret=interpret, block_n=block_n,
-                   precision=precision)
     for lp in params["mp"]:
-        if schedule == "overlap":
-            e_bnd, agg_bnd, e_int, agg_int = [], [], [], []
-            for r in range(R):
-                meta_r = {k: v[r] for k, v in meta.items()}
-                eb, ab = edge_update_aggregate_part(
-                    lp, h[r], e[r], meta_r, "bnd", **part_kw)
-                ei, ai = edge_update_aggregate_part(
-                    lp, h[r], e[r], meta_r, "int", **part_kw)
-                e_bnd.append(eb)
-                agg_bnd.append(ab)
-                e_int.append(ei)
-                agg_int.append(ai)
-            agg = jnp.stack(agg_bnd)
-            if halo.mode != "none":
-                agg = halo_sync_reference(agg, meta, halo, combine="sum")
-            agg = agg + jnp.stack(agg_int)
-            new_e = [b + i for b, i in zip(e_bnd, e_int)]
-        elif schedule == "blocking":
-            new_e, aggs = [], []
-            for r in range(R):
-                meta_r = {k: v[r] for k, v in meta.items()}
-                er, agg_r = edge_update_aggregate(
-                    lp, h[r], e[r], meta_r, **part_kw)
-                aggs.append(agg_r)
-                new_e.append(er)
-            agg = jnp.stack(aggs)
-            if halo.mode != "none":
-                agg = halo_sync_reference(agg, meta, halo, combine="sum")
-        else:
-            raise ValueError(f"unknown NMP schedule {schedule!r}")
-        h = jnp.stack([
-            node_update(lp, h[r], agg[r], {k: v[r] for k, v in meta.items()})
-            for r in range(R)
-        ])
-        e = jnp.stack(new_e)
+        h, e = _smooth_stacked(lp, h, e, g0, plan)
 
     if "coarse" in params:
-        h = vcycle_stacked(params["coarse"], h, full_meta, halo,
-                           backend=backend, interpret=interpret,
-                           block_n=block_n, schedule=schedule,
-                           precision=precision)
-    return jnp.stack([rnn.mlp(params["node_dec"], h[r]) * meta["node_mask"][r][..., None]
-                      for r in range(R)])
+        h = vcycle_stacked(params["coarse"], h, graph, plan)
+    return jnp.stack([rnn.mlp(params["node_dec"], h[r])
+                      * g0["node_mask"][r][..., None] for r in range(R)])
 
 
 def consistent_loss_stacked(y: jnp.ndarray, y_hat: jnp.ndarray,
-                            meta: Dict[str, jnp.ndarray], fy: int) -> jnp.ndarray:
+                            graph, fy: int) -> jnp.ndarray:
     """Eq. 6 with the psum replaced by an explicit sum over the stacked ranks."""
     err2 = jnp.sum((y - y_hat) ** 2, axis=-1)          # [R, N_pad]
-    s = jnp.sum(err2 * meta["node_inv_mult"])
-    n_eff = jnp.sum(meta["node_inv_mult"])
+    inv = graph["node_inv_mult"]
+    s = jnp.sum(err2 * inv)
+    n_eff = jnp.sum(inv)
     return s / (n_eff * fy)
 
 
@@ -232,19 +151,43 @@ def loss_and_grad_stacked(
     params: rnn.Params,
     x: jnp.ndarray,
     y_hat: jnp.ndarray,
-    meta: Dict[str, jnp.ndarray],
-    halo: HaloSpec,
+    graph: ShardedGraph,
+    plan: NMPPlan,
     fy: int,
-    backend: str = "xla",
-    interpret: bool = False,
-    block_n: int = 128,
-    schedule: str = "blocking",
-    precision: str = "fp32",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, rnn.Params]:
+    graph = as_graph(graph)
+
     def f(p):
-        y = gnn_forward_stacked(p, x, meta, halo, backend=backend,
-                                interpret=interpret, block_n=block_n,
-                                schedule=schedule, precision=precision)
-        return consistent_loss_stacked(y, y_hat, meta, fy), y
+        y = gnn_forward_stacked(p, x, graph, plan)
+        return consistent_loss_stacked(y, y_hat, graph.levels[0], fy), y
     (loss, y), grads = jax.value_and_grad(f, has_aux=True)(params)
     return loss, y, grads
+
+
+def rollout_stacked(
+    params: rnn.Params,
+    x0: jnp.ndarray,                 # [R, N_pad, F]
+    targets: jnp.ndarray,            # [K, R, N_pad, F]
+    graph: ShardedGraph,
+    plan: NMPPlan,
+    fy: int,
+    noise: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device oracle for the K-step autoregressive rollout
+    (``repro.train.rollout``): the model is scanned over its OWN predictions,
+    each step's halo-consistent loss is accumulated, and optional pushforward
+    noise perturbs the step-1 input with gradients stopped through the
+    noised state.  Returns (mean per-step loss, predictions [K, R, N_pad, F]).
+    """
+    graph = as_graph(graph)
+    g0 = graph.levels[0]
+    x = x0
+    if noise is not None:
+        x = x + jax.lax.stop_gradient(noise)
+    losses, preds = [], []
+    for k in range(targets.shape[0]):
+        y = gnn_forward_stacked(params, x, graph, plan)
+        losses.append(consistent_loss_stacked(y, targets[k], g0, fy))
+        preds.append(y)
+        x = y                                   # scan over own prediction
+    return jnp.stack(losses).mean(), jnp.stack(preds)

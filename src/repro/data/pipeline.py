@@ -63,9 +63,22 @@ class PrefetchingLoader:
         return self
 
     def __next__(self):
-        if self._err is not None:
-            raise self._err
-        return self._q.get()
+        # Poll with a timeout and re-check the producer each lap: a plain
+        # blocking get() would hang forever when the producer thread dies
+        # (batch_fn raised) with the queue empty — the error is set AFTER
+        # the consumer already parked on the queue.  Queued batches drain
+        # before the error surfaces, so a mid-stream failure still delivers
+        # every batch produced ahead of it.
+        while True:
+            try:
+                return self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._err is not None:
+                    raise self._err
+                if not self._thread.is_alive():
+                    # producer exited cleanly (close() raced us): no more
+                    # items will ever arrive
+                    raise StopIteration
 
     def close(self):
         self._stop.set()
@@ -81,71 +94,25 @@ def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
     return fn
 
 
-def prepare_gnn_meta(pg, coords, *, backend: str = "xla",
-                     seg_block_n: int | None = 128,
-                     seg_block_e: int | None = 128,
-                     schedule: str = "blocking", hidden: int | None = None,
-                     hierarchy=None):
-    """Host-side static metadata prep for the GNN step functions.
-
-    Wraps ``rank_static_inputs`` and, for the fused NMP backend, attaches the
-    compact gather/scatter index layout (``seg_perm``/``seg_src``/``seg_dst``)
-    from the per-partition cache (``PartitionedGraphs.segment_layout``): the
-    O(E log E) sort runs once per partition here — never inside the per-step
-    data path.
-
-    Pass ``seg_block_n=None`` / ``seg_block_e=None`` to pick tile sizes from
-    the static autotune table (``repro.kernels.segment_agg.ops.
-    pick_block_sizes``, keyed on ``hidden``/dtype/backend and overridable
-    via the ``REPRO_SEG_BLOCKS`` env var).
-
-    ``schedule="overlap"`` additionally attaches the cached interior/boundary
-    edge split (and, for the fused backend, the per-side layouts) consumed
-    by ``nmp_layer(schedule="overlap")``.
-
-    ``hierarchy`` (a ``repro.core.coarsen.MultiLevelGraphs`` whose level 0
-    is ``pg``) switches to the multilevel layout: the same level-0 keys plus
-    ``lvl{l}_*`` coarse-level arrays and restriction/prolongation transfer
-    maps, with the per-level seg layouts / interior splits attached under
-    the same rules as level 0.
-    """
-    from repro.core.reference import rank_static_inputs
-    seg = None
-    if backend == "fused":
-        if seg_block_n is None or seg_block_e is None:
-            if hidden is None:
-                raise ValueError(
-                    "autotuned block sizes (seg_block_n/seg_block_e=None) "
-                    "need hidden= — the table is keyed on the model width")
-            from repro.kernels.segment_agg.ops import pick_block_sizes
-            auto_n, auto_e = pick_block_sizes(hidden)
-            seg = (seg_block_n or auto_n, seg_block_e or auto_e)
-        else:
-            seg = (seg_block_n, seg_block_e)
-    if hierarchy is not None:
-        if hierarchy.levels[0] is not pg:
-            raise ValueError("hierarchy.levels[0] must be the pg passed in "
-                             "(the fine partition the step fns shard over)")
-        # the hierarchy carries its build-time coords (coarse centroids are
-        # derived from them) — refuse a mismatched coords argument rather
-        # than silently using a different coordinate source per level
-        if coords is not None and coords is not hierarchy.coords[0] \
-                and not np.array_equal(coords, hierarchy.coords[0]):
-            raise ValueError(
-                "coords disagrees with hierarchy.coords[0]: the hierarchy's "
-                "build-time coordinates define every level's static edge "
-                "features — rebuild the hierarchy from the transformed mesh "
-                "instead of passing different coords here")
-        from repro.core.coarsen import multilevel_static_inputs
-        return multilevel_static_inputs(hierarchy, seg_layout=seg,
-                                        split=schedule == "overlap")
-    return rank_static_inputs(pg, coords, seg_layout=seg,
-                              split=schedule == "overlap")
+# Static graph metadata prep for the GNN step functions moved to
+# ``repro.core.graph_state.ShardedGraph.build(pg, coords, plan, hierarchy=)``
+# — the host-side layout/split passes stay memoized per partition there.
 
 
 def host_shard(batch, host_id: int, n_hosts: int):
-    """Slice a global batch to this host's addressable rows (multi-host IO)."""
+    """Slice a global batch to this host's addressable rows (multi-host IO).
+
+    The leading (batch) dim must divide evenly: silently dropping trailing
+    rows would desynchronize the hosts' step counts (and lose data), so an
+    uneven batch raises instead.
+    """
     def sl(x):
+        if x.shape[0] % n_hosts != 0:
+            raise ValueError(
+                f"batch dim {x.shape[0]} is not divisible by n_hosts="
+                f"{n_hosts}: host_shard would silently drop "
+                f"{x.shape[0] % n_hosts} trailing rows — pad or resize the "
+                "global batch to a multiple of the host count")
         per = x.shape[0] // n_hosts
         return x[host_id * per:(host_id + 1) * per]
     return jax.tree.map(sl, batch)

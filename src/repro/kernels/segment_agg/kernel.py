@@ -14,7 +14,8 @@ Two generations of kernels live here:
   block size (block_n is a tile constant, never the node count).
 
 * ``nmp_edge_mlp_agg_fwd`` / ``nmp_edge_mlp_agg_bwd`` — the production pair
-  behind ``consistent_mp.nmp_layer(backend="fused")``, rewritten around
+  behind the fused NMP registry cells (``NMPPlan(backend="fused")``),
+  rewritten around
   **scalar-prefetch DMA gathers**: per-tile src/dst node-id lists are
   prefetched into SMEM (``pltpu.PrefetchScalarGridSpec``) and drive
   dynamic-slice row copies of node features out of HBM/ANY memory into a

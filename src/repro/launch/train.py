@@ -5,9 +5,14 @@
         --halo neighbor --model small --ckpt /tmp/ckpt
 
 Uses every substrate layer: SEM mesh gen -> partitioner -> shard_map step
-with real halo collectives -> AdamW -> prefetching loader -> async
-checkpoints -> straggler monitor. On a real pod, remove the XLA_FLAGS
-override (jax.distributed.initialize picks up the topology).
+with real halo collectives -> AdamW -> async checkpoints -> straggler
+monitor. On a real pod, remove the XLA_FLAGS override
+(jax.distributed.initialize picks up the topology).
+
+``--rollout-steps K`` (K > 1) switches to autoregressive rollout training
+(repro.train.rollout): the model is scanned over its own predictions for K
+steps with a per-step halo-consistent loss; ``--pushforward-noise`` adds the
+stop-gradient step-1 perturbation that emulates inference-time drift.
 """
 import os
 if "XLA_FLAGS" not in os.environ:
@@ -17,7 +22,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import GNNConfig, box_mesh, partition_mesh
+from repro.core import GNNConfig, NMPPlan, box_mesh, partition_mesh
 from repro.launch.mesh import make_mesh
 from repro.train.loop import TrainConfig, train_consistent_gnn
 
@@ -55,7 +60,21 @@ def main():
                          "element grid 2x per axis — repro.core.coarsen)")
     ap.add_argument("--coarse-mp-layers", type=int, default=2,
                     help="NMP layers smoothing each coarse level")
+    ap.add_argument("--rollout-steps", type=int, default=1,
+                    help="K > 1 trains autoregressively: the model is "
+                         "scanned over its OWN predictions for K steps with "
+                         "a per-step halo-consistent loss "
+                         "(repro.train.rollout)")
+    ap.add_argument("--pushforward-noise", type=float, default=0.0,
+                    help="stddev of the stop-gradient pushforward noise "
+                         "added to the rollout's initial state (emulates "
+                         "inference-time drift; needs --rollout-steps > 1)")
     args = ap.parse_args()
+    if args.rollout_steps < 1:
+        ap.error("--rollout-steps must be >= 1")
+    if args.pushforward_noise and args.rollout_steps == 1:
+        ap.error("--pushforward-noise needs --rollout-steps > 1 (one-step "
+                 "training never feeds predictions back)")
 
     sem = box_mesh(tuple(args.elements), p=args.order)
     R = int(np.prod(args.ranks))
@@ -77,14 +96,14 @@ def main():
     mesh_dev = make_mesh((args.data_parallel, R), ("data", "graph"))
     print(f"mesh: {sem.n_elem} elems p={args.order} ({sem.n_nodes} nodes); "
           f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}; "
-          f"levels={args.levels}")
+          f"levels={args.levels}; rollout K={args.rollout_steps}")
 
+    policy = NMPPlan(backend=args.mp_backend, interpret=args.mp_interpret,
+                     schedule=args.mp_schedule, precision=args.mp_precision)
     tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
-                       halo_mode=args.halo, ckpt_dir=args.ckpt,
-                       mp_backend=args.mp_backend,
-                       mp_interpret=args.mp_interpret,
-                       mp_schedule=args.mp_schedule,
-                       mp_precision=args.mp_precision)
+                       halo_mode=args.halo, ckpt_dir=args.ckpt, plan=policy,
+                       rollout_steps=args.rollout_steps,
+                       pushforward_noise=args.pushforward_noise)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
                                 hierarchy=hierarchy)
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "

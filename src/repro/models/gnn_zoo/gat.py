@@ -49,9 +49,9 @@ def init_gat(key, cfg: GATConfig):
     return {"layers": layers}
 
 
-def _gat_layer(p, x, meta, halo: HaloSpec, concat_heads: bool):
-    src, dst = meta["edge_src"], meta["edge_dst"]
-    emask = meta["edge_mask"]
+def _gat_layer(p, x, graph, halo: HaloSpec, concat_heads: bool):
+    src, dst = graph["edge_src"], graph["edge_dst"]
+    emask = graph["edge_mask"]
     n_pad = x.shape[0]
     h = jnp.einsum("nd,dhk->nhk", x, p["w"])                   # [N, H, K]
     s_src = jnp.einsum("nhk,hk->nh", h, p["a_src"])
@@ -61,30 +61,30 @@ def _gat_layer(p, x, meta, halo: HaloSpec, concat_heads: bool):
 
     # --- consistent softmax: max-sync ---
     m_loc = segment.segment_max(scores, dst, n_pad)            # [N, H]
-    m_loc = jnp.where(meta["node_mask"][:, None] > 0, m_loc, -1e30)
-    m = halo_sync(m_loc, meta, halo, combine="max")
+    m_loc = jnp.where(graph["node_mask"][:, None] > 0, m_loc, -1e30)
+    m = halo_sync(m_loc, graph, halo, combine="max")
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
     expv = jnp.exp(scores - m_safe[dst]) * emask[:, None]
-    expv = expv * meta["edge_inv_mult"][:, None]               # d_ij scaling
+    expv = expv * graph["edge_inv_mult"][:, None]               # d_ij scaling
     # --- denominator sum-sync ---
-    denom = halo_sync(segment.segment_sum(expv, dst, n_pad), meta, halo, combine="sum")
+    denom = halo_sync(segment.segment_sum(expv, dst, n_pad), graph, halo, combine="sum")
     # --- weighted message aggregate, sum-sync ---
     msg = expv[..., None] * h[src]                              # [E, H, K]
     agg = segment.segment_sum(msg, dst, n_pad)
-    agg = halo_sync(agg.reshape(n_pad, -1), meta, halo, combine="sum") \
+    agg = halo_sync(agg.reshape(n_pad, -1), graph, halo, combine="sum") \
         .reshape(agg.shape)
     out = agg / jnp.maximum(denom, 1e-20)[..., None]
-    out = out * meta["node_mask"][:, None, None]
+    out = out * graph["node_mask"][:, None, None]
     if concat_heads:
         return out.reshape(n_pad, -1)
     return out.mean(axis=1)
 
 
-def gat_forward(params, x, meta, halo: HaloSpec, cfg: GATConfig):
+def gat_forward(params, x, graph, halo: HaloSpec, cfg: GATConfig):
     """x: [N_pad, in_dim] -> logits [N_pad, n_classes]."""
     for i, p in enumerate(params["layers"]):
         last = i == len(params["layers"]) - 1
-        x = _gat_layer(p, x, meta, halo, concat_heads=not last)
+        x = _gat_layer(p, x, graph, halo, concat_heads=not last)
         if not last:
             x = jax.nn.elu(x)
     return x

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro import nn
 from repro.core.consistent_mp import init_nmp_layer, nmp_layer
-from repro.core.halo import HaloSpec
+from repro.core.graph_state import NMPPlan, as_graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,11 +39,6 @@ class GraphCastConfig:
     act_dtype: object = jnp.float32  # bf16 halves activation carries
     edge_parallel_axes: tuple = ()   # 2nd-level edge sharding (psum combine)
     remat_segment: int = 1           # sqrt(L) checkpointing: layers per segment
-    mp_backend: str = "xla"         # NMP 4a+4b backend ("xla" | "fused")
-    seg_block_n: int = 128          # fused-kernel node padding granularity
-    mp_interpret: bool = False      # Pallas interpreter (CPU CI)
-    mp_schedule: str = "blocking"   # halo/compute schedule ("blocking" | "overlap")
-    mp_precision: str = "fp32"      # edge-MLP matmuls: "fp32" | "bf16" (fp32 accum)
     # --- multilevel (coarse-grid) processor (repro.core.coarsen) ---
     n_levels: int = 1               # >1 appends a consistent V-cycle after the scan
     coarse_mp_layers: int = 2       # NMP layers smoothing each coarse level
@@ -71,32 +66,27 @@ def init_graphcast(key, cfg: GraphCastConfig):
     return params
 
 
-def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
-                      cfg: GraphCastConfig, coarse_halos: tuple = ()):
+def graphcast_forward(params, x, edge_feats, graph, plan: NMPPlan,
+                      cfg: GraphCastConfig):
     """x: [N_pad, in_dim]; edge_feats: [E_pad, edge_in] -> [N_pad, out_dim].
 
-    With ``cfg.n_levels > 1`` the scanned processor acts as the fine
-    pre-smoother and the consistent multilevel V-cycle runs before the
-    decoder; ``meta`` must then carry the ``lvl{l}_*`` coarse arrays
-    (``prepare_gnn_meta(hierarchy=...)``) and ``coarse_halos`` one HaloSpec
-    per coarse level."""
-    lvl0 = meta
-    if "coarse" in params:
-        from repro.core.consistent_mp import level_meta
-        lvl0 = level_meta(meta, 0)
+    ``graph`` is the rank-local ShardedGraph; ``plan`` the NMP execution
+    policy (backend/schedule/precision + per-level halo specs).  With
+    ``cfg.n_levels > 1`` the scanned processor acts as the fine pre-smoother
+    and the consistent multilevel V-cycle runs before the decoder; ``graph``
+    must then carry the nested coarse chain
+    (``ShardedGraph.build(..., hierarchy=...)``)."""
+    graph = as_graph(graph)
+    lvl0 = graph.levels[0]
     h = nn.mlp(params["node_enc"], x) * lvl0["node_mask"][..., None]
     e = nn.mlp(params["edge_enc"], edge_feats) * lvl0["edge_mask"][..., None]
-    full_meta, meta = meta, lvl0
     h = h.astype(cfg.act_dtype)
     e = e.astype(cfg.act_dtype)
 
     def body(carry, p_l):
         hc, ec = carry
-        hn, en = nmp_layer(p_l, hc, ec, meta, halo,
-                           edge_parallel_axes=cfg.edge_parallel_axes,
-                           backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-                           block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
-                           precision=cfg.mp_precision)
+        hn, en = nmp_layer(p_l, hc, ec, lvl0, plan,
+                           edge_parallel_axes=cfg.edge_parallel_axes)
         return (hn.astype(cfg.act_dtype), en.astype(cfg.act_dtype)), None
 
     seg = cfg.remat_segment
@@ -121,12 +111,10 @@ def graphcast_forward(params, x, edge_feats, meta, halo: HaloSpec,
     if "coarse" in params:
         from repro.core.consistent_mp import multilevel_vcycle
         h = multilevel_vcycle(
-            params["coarse"], h.astype(jnp.float32), full_meta, halo,
-            coarse_halos, backend=cfg.mp_backend, interpret=cfg.mp_interpret,
-            block_n=cfg.seg_block_n, schedule=cfg.mp_schedule,
-            precision=cfg.mp_precision).astype(cfg.act_dtype)
+            params["coarse"], h.astype(jnp.float32), graph,
+            plan).astype(cfg.act_dtype)
     return nn.mlp(params["node_dec"], h.astype(jnp.float32)) \
-        * meta["node_mask"][..., None]
+        * lvl0["node_mask"][..., None]
 
 
 # ---------------------------------------------------------------------------

@@ -81,18 +81,18 @@ def init_mace(key, cfg: MACEConfig):
 
 
 def mace_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
-                 meta: Dict, halo: HaloSpec, cfg: MACEConfig) -> jnp.ndarray:
+                 graph: Dict, halo: HaloSpec, cfg: MACEConfig) -> jnp.ndarray:
     """species [N_pad], pos [N_pad, 3] -> site energies [N_pad]."""
-    src, dst = meta["edge_src"], meta["edge_dst"]
+    src, dst = graph["edge_src"], graph["edge_dst"]
     hid, sh_ir = cfg.hidden_irreps, cfg.sh_irreps
     scalars = ir.Irreps.scalars(cfg.hidden_mul)
 
     vec = pos[dst] - pos[src]
     r = jnp.linalg.norm(vec + 1e-12, axis=-1)
-    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * meta["edge_mask"][:, None]
+    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * graph["edge_mask"][:, None]
     sh = jnp.concatenate([ir.sh_l(vec, l) for l in range(cfg.l_max + 1)], axis=-1)
 
-    x = params["embed"][species] * meta["node_mask"][:, None]
+    x = params["embed"][species] * graph["node_mask"][:, None]
     x = x.astype(cfg.act_dtype)
     n_pad = x.shape[0]
     in_ir = scalars
@@ -104,11 +104,11 @@ def mace_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
             xs = ir.linear_irreps(p_l["lin_pre"], x, lin, lin)
             msg = ir.weighted_tensor_product(p_l["tp"], xs[src], sh.astype(x.dtype),
                                              rbf.astype(x.dtype), lin, sh_ir, hid)
-            msg = msg * (meta["edge_inv_mult"] * meta["edge_mask"])[:, None].astype(x.dtype)
+            msg = msg * (graph["edge_inv_mult"] * graph["edge_mask"])[:, None].astype(x.dtype)
             a = segment.segment_sum(msg, dst, n_pad)
             if cfg.edge_parallel_axes:
                 a = jax.lax.psum(a, cfg.edge_parallel_axes)
-            a = halo_sync(a, meta, halo, combine="sum")        # consistent-MP
+            a = halo_sync(a, graph, halo, combine="sum")        # consistent-MP
             m = ir.linear_irreps(p_l["lin_b1"], a, hid, hid)
             if "ctp2" in p_l:
                 b2 = ir.channel_tensor_product(p_l["ctp2"], a, a, hid, hid, hid)
@@ -117,7 +117,7 @@ def mace_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
                     b3 = ir.channel_tensor_product(p_l["ctp3"], b2, a, hid, hid, hid)
                     m = m + ir.linear_irreps(p_l["lin_b3"], b3, hid, hid)
             xn = ir.linear_irreps(p_l["lin_self"], x, lin, hid) + m
-            xn = ir.gate_irreps(xn, hid) * meta["node_mask"][:, None]
+            xn = ir.gate_irreps(xn, hid) * graph["node_mask"][:, None]
             e_l = ir.linear_irreps(p_l["readout"], xn, hid,
                                    ir.Irreps.scalars(1))[..., 0]
             return xn.astype(cfg.act_dtype), e_l.astype(jnp.float32)
@@ -128,4 +128,4 @@ def mace_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
             x, e_l = layer(p_l, x)
         e_site = e_site + e_l
         in_ir = hid
-    return e_site * meta["node_mask"]
+    return e_site * graph["node_mask"]

@@ -72,18 +72,18 @@ def init_nequip(key, cfg: NequIPConfig):
 
 
 def nequip_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
-                   meta: Dict, halo: HaloSpec, cfg: NequIPConfig) -> jnp.ndarray:
+                   graph: Dict, halo: HaloSpec, cfg: NequIPConfig) -> jnp.ndarray:
     """species [N_pad] int32, pos [N_pad, 3] -> per-node site energy [N_pad]."""
-    src, dst = meta["edge_src"], meta["edge_dst"]
+    src, dst = graph["edge_src"], graph["edge_dst"]
     hid, sh_ir = cfg.hidden_irreps, cfg.sh_irreps
     scalars = ir.Irreps.scalars(cfg.hidden_mul)
 
     vec = pos[dst] - pos[src]                                  # [E, 3]
     r = jnp.linalg.norm(vec + 1e-12, axis=-1)
-    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * meta["edge_mask"][:, None]
+    rbf = ir.bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * graph["edge_mask"][:, None]
     sh = jnp.concatenate([ir.sh_l(vec, l) for l in range(cfg.l_max + 1)], axis=-1)
 
-    x = params["embed"][species] * meta["node_mask"][:, None]  # scalar irreps
+    x = params["embed"][species] * graph["node_mask"][:, None]  # scalar irreps
     x = x.astype(cfg.act_dtype)
     n_pad = x.shape[0]
     in_ir = scalars
@@ -93,18 +93,18 @@ def nequip_forward(params, species: jnp.ndarray, pos: jnp.ndarray,
         def layer(p_l, x):
             msg = ir.weighted_tensor_product(p_l["tp"], x[src], sh.astype(x.dtype),
                                              rbf.astype(x.dtype), lin, sh_ir, hid)
-            msg = msg * (meta["edge_inv_mult"] * meta["edge_mask"])[:, None].astype(x.dtype)
+            msg = msg * (graph["edge_inv_mult"] * graph["edge_mask"])[:, None].astype(x.dtype)
             agg = segment.segment_sum(msg, dst, n_pad)
             if cfg.edge_parallel_axes:
                 agg = jax.lax.psum(agg, cfg.edge_parallel_axes)
-            agg = halo_sync(agg, meta, halo, combine="sum")    # consistent-MP
+            agg = halo_sync(agg, graph, halo, combine="sum")    # consistent-MP
             xn = ir.linear_irreps(p_l["lin_self"], x, lin, hid) \
                 + ir.linear_irreps(p_l["lin_agg"], agg, hid, hid)
             return (ir.gate_irreps(xn, hid)
-                    * meta["node_mask"][:, None]).astype(cfg.act_dtype)
+                    * graph["node_mask"][:, None]).astype(cfg.act_dtype)
 
         x = jax.checkpoint(layer)(p_l, x) if cfg.remat else layer(p_l, x)
         in_ir = hid
     x = x.astype(jnp.float32)
     e_site = ir.linear_irreps(params["readout"], x, hid, ir.Irreps.scalars(1))
-    return e_site[..., 0] * meta["node_mask"]
+    return e_site[..., 0] * graph["node_mask"]

@@ -4,6 +4,19 @@ Combines: the shard_map grad step (real halo collectives), AdamW, async
 checkpointing, fault-tolerant restart, straggler monitoring, and the
 consistent loss. Used by examples/train_cfd_gnn.py and the training-
 consistency benchmark.
+
+Two training modes, selected by ``TrainConfig.rollout_steps``:
+
+* 1 (default) — one-step prediction (the paper's Fig. 6 training);
+* K > 1       — autoregressive rollout training (``repro.train.rollout``):
+  the model is scanned over its own predictions for K steps, every step's
+  halo-consistent loss enters the objective, and
+  ``TrainConfig.pushforward_noise`` optionally perturbs the initial state
+  (stop-gradient pushforward trick) to emulate inference-time drift.
+
+Execution policy (backend/schedule/precision/...) is a single
+:class:`~repro.core.graph_state.NMPPlan` on the TrainConfig; the per-level
+halo specs are filled in from the partition at launch.
 """
 from __future__ import annotations
 
@@ -13,16 +26,17 @@ from typing import Optional
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import make_gnn_step_fns, shard_inputs
+from repro.core.distributed import make_gnn_step_fns, shard_graph
 from repro.core.gnn import GNNConfig, init_gnn
-from repro.core.halo import halo_spec_from_plan
+from repro.core.graph_state import NMPPlan, ShardedGraph
 from repro.core.mesh_gen import SEMMesh, taylor_green_velocity
 from repro.core.partition import PartitionedGraphs, gather_node_features
-from repro.data.pipeline import prepare_gnn_meta
 from repro.ckpt import checkpoint as ckpt
 from repro.runtime.straggler import StragglerMonitor
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+from repro.train.rollout import make_rollout_step_fns, make_tgv_rollout_batch_fn
 
 
 @dataclasses.dataclass
@@ -35,12 +49,12 @@ class TrainConfig:
     ckpt_every: int = 100
     log_every: int = 20
     seed: int = 0
-    # NMP hot-loop backend / schedule / precision overrides (None = keep the
-    # GNNConfig's choice); see repro.core.consistent_mp for the semantics
-    mp_backend: Optional[str] = None
-    mp_interpret: bool = False
-    mp_schedule: Optional[str] = None
-    mp_precision: Optional[str] = None
+    # NMP execution policy (halo specs are filled in from the partition by
+    # train_consistent_gnn); see repro.core.graph_state.NMPPlan
+    plan: NMPPlan = NMPPlan()
+    # --- autoregressive rollout training (repro.train.rollout) ---
+    rollout_steps: int = 1       # K > 1 scans the model over its predictions
+    pushforward_noise: float = 0.0  # stddev of the stop-grad step-1 noise
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -69,39 +83,28 @@ def train_consistent_gnn(
     ``hierarchy`` (``repro.core.coarsen.MultiLevelGraphs`` with ``pg`` as
     level 0) enables the consistent multilevel V-cycle when
     ``cfg.n_levels > 1``: each coarse level gets its own halo spec and its
-    static arrays ride along in the step metadata.
+    static arrays ride along as nested ShardedGraph levels.
     """
-    if tcfg.mp_backend is not None:
-        cfg = dataclasses.replace(cfg, mp_backend=tcfg.mp_backend,
-                                  mp_interpret=tcfg.mp_interpret)
-    if tcfg.mp_schedule is not None:
-        cfg = dataclasses.replace(cfg, mp_schedule=tcfg.mp_schedule)
-    if tcfg.mp_precision is not None:
-        cfg = dataclasses.replace(cfg, mp_precision=tcfg.mp_precision)
     if cfg.n_levels > 1 and hierarchy is None:
         raise ValueError("cfg.n_levels > 1 needs hierarchy= "
                          "(repro.core.coarsen.build_hierarchy)")
-    spec = halo_spec_from_plan(pg.halo, tcfg.halo_mode, axis="graph")
-    coarse_specs = ()
-    if hierarchy is not None and cfg.n_levels > 1:
-        coarse_specs = tuple(
-            halo_spec_from_plan(lvl.halo, tcfg.halo_mode, axis="graph")
-            for lvl in hierarchy.levels[1:])
+    # fill the per-level halo specs into the policy plan
+    plan = NMPPlan.build(
+        hierarchy if hierarchy is not None and cfg.n_levels > 1 else pg,
+        tcfg.halo_mode, axis="graph",
+        **{f.name: getattr(tcfg.plan, f.name)
+           for f in dataclasses.fields(NMPPlan)
+           if f.name not in ("halo", "coarse_halos")})
     # layout + interior/boundary split passes are cached on pg — one
     # host-side pass per partition, amortized over every training step
-    meta = prepare_gnn_meta(pg, sem_mesh.coords, backend=cfg.mp_backend,
-                            seg_block_n=cfg.seg_block_n,
-                            seg_block_e=cfg.seg_block_e,
-                            schedule=cfg.mp_schedule,
-                            hierarchy=hierarchy if cfg.n_levels > 1 else None)
-    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, spec,
-                                           coarse_halos=coarse_specs)
+    graph = ShardedGraph.build(
+        pg, sem_mesh.coords, plan,
+        hierarchy=hierarchy if cfg.n_levels > 1 else None)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
     params = init_gnn(jax.random.PRNGKey(tcfg.seed), cfg)
     opt_state = init_adamw(params, opt_cfg)
 
-    batch_fn = make_tgv_batch_fn(pg, sem_mesh, tcfg.batch)
     monitor = StragglerMonitor()
     saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
 
@@ -109,12 +112,35 @@ def train_consistent_gnn(
     def update(params, opt_state, loss, grads):
         return adamw_update(grads, opt_state, params, opt_cfg)
 
+    # the static graph is loop-invariant: place it once, not per step
+    gs = shard_graph(mesh_dev, graph)
+    feat_sh = NamedSharding(mesh_dev, P(("data",), "graph", None, None))
+    if tcfg.rollout_steps > 1:
+        _, rollout_grad = make_rollout_step_fns(
+            mesh_dev, cfg, plan, tcfg.rollout_steps)
+        batch_fn = make_tgv_rollout_batch_fn(
+            pg, sem_mesh, tcfg.batch, tcfg.rollout_steps,
+            noise_scale=tcfg.pushforward_noise, seed=tcfg.seed)
+        seq_sh = NamedSharding(mesh_dev, P(("data",), None, "graph", None, None))
+
+        def grad_for_step(params, step):
+            x0, targets, noise = batch_fn(step)
+            xs = jax.device_put(jnp.asarray(x0), feat_sh)
+            ts = jax.device_put(jnp.asarray(targets), seq_sh)
+            ns = jax.device_put(jnp.asarray(noise), feat_sh)
+            return rollout_grad(params, xs, ts, ns, gs)
+    else:
+        _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, plan)
+        batch_fn = make_tgv_batch_fn(pg, sem_mesh, tcfg.batch)
+
+        def grad_for_step(params, step):
+            xs = jax.device_put(jnp.asarray(batch_fn(step)), feat_sh)
+            return grad_step(params, xs, xs, gs)
+
     history = {"losses": []}
     for step in range(tcfg.n_steps):
-        x = jnp.asarray(batch_fn(step))
-        xs, ms = shard_inputs(mesh_dev, x, meta)
         monitor.start_step()
-        loss, grads = grad_step(params, xs, xs, ms)
+        loss, grads = grad_for_step(params, step)
         params, opt_state, _ = update(params, opt_state, loss, grads)
         monitor.end_step(step)
         history["losses"].append(float(loss))

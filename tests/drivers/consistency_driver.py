@@ -18,7 +18,6 @@ reproduce the same losses/grads bit-for-bit-ish).
 Exit code 0 = all assertions passed.
 """
 import argparse
-import dataclasses
 import os
 
 os.environ.setdefault(
@@ -31,14 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn,
-    partition_mesh, gather_node_features, taylor_green_velocity,
+    A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph,
+    box_mesh, init_gnn, partition_mesh, gather_node_features,
+    taylor_green_velocity,
 )
 from repro.core.distributed import make_gnn_step_fns, shard_inputs
-from repro.core.halo import halo_spec_from_plan
-from repro.core.reference import (
-    loss_and_grad_stacked, rank_static_inputs,
-)
+from repro.core.reference import loss_and_grad_stacked
 
 # (rank_grid, data_parallel) cases per forced host-device count
 CASES = {
@@ -51,17 +48,15 @@ CASES = {
 def run_case(mesh_dev, pg, sem_mesh, params, cfg, mode, batch=2,
              schedule="blocking", wire_dtype=None):
     """Run loss+grad through the shard_map path on a (data, graph) mesh."""
-    spec = halo_spec_from_plan(pg.halo, mode, axis="graph",
-                               wire_dtype=wire_dtype)
-    meta = rank_static_inputs(pg, sem_mesh.coords,
-                              split=schedule == "overlap")
+    plan = NMPPlan.build(pg, mode, axis="graph", wire_dtype=wire_dtype,
+                         schedule=schedule)
+    graph = ShardedGraph.build(pg, sem_mesh.coords, plan)
     x_global = gather_node_features(pg, taylor_green_velocity(sem_mesh.coords))
     # batch of identical snapshots (loss must be invariant to B here)
     x = np.broadcast_to(x_global[None], (batch,) + x_global.shape).copy()
-    run_cfg = dataclasses.replace(cfg, mp_schedule=schedule)
-    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, run_cfg, spec)
-    xs, ms = shard_inputs(mesh_dev, jnp.asarray(x), meta)
-    loss, grads = grad_step(params, xs, xs, ms)
+    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, plan)
+    xs, gs = shard_inputs(mesh_dev, jnp.asarray(x), graph)
+    loss, grads = grad_step(params, xs, xs, gs)
     return float(loss), jax.tree.map(np.asarray, grads)
 
 
@@ -78,12 +73,11 @@ def main():
 
     # ---- R=1 baseline (reference path, exact) ----
     pg1 = partition_mesh(sem_mesh, (1, 1, 1))
-    meta1 = rank_static_inputs(pg1, sem_mesh.coords,
-                               split=args.schedule == "overlap")
+    plan1 = NMPPlan(halo=HaloSpec(mode=NONE), schedule=args.schedule)
+    graph1 = ShardedGraph.build(pg1, sem_mesh.coords, plan1)
     x1 = jnp.asarray(gather_node_features(pg1, taylor_green_velocity(sem_mesh.coords)))
-    l1, _, g1 = loss_and_grad_stacked(params, x1, x1, meta1,
-                                      HaloSpec(mode=NONE), cfg.node_out,
-                                      schedule=args.schedule)
+    l1, _, g1 = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
+                                      cfg.node_out)
     l1 = float(l1)
     print(f"R=1 loss {l1:.8f} (schedule={args.schedule}, {n_dev} devices)")
 

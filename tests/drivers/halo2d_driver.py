@@ -1,6 +1,7 @@
-"""Two-level halo driver (subprocess): sub-graphs spread over BOTH mesh axes
-(a (2, n_dev/2) grid), halo exchange routed as chained ppermute hops.  Loss
-must equal the un-partitioned R=1 value (Eq. 2 across two mesh axes).
+"""Two-level (2-axis) halo driver (subprocess): sub-graphs spread over BOTH
+mesh axes (a (2, n_dev/2) grid), halo exchange routed as chained ppermute
+hops.  Loss must equal the un-partitioned R=1 value (Eq. 2 across two mesh
+axes).
 
 Respects an externally-forced device count (2, 4 or 8 — the CI
 consistency-matrix job); standalone invocations default to 4.  ``--schedule
@@ -17,13 +18,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import GNNConfig, HaloSpec, NONE, NEIGHBOR, box_mesh, init_gnn
+from repro.core import (
+    GNNConfig, HaloSpec, NEIGHBOR, NMPPlan, NONE, ShardedGraph, box_mesh,
+    init_gnn,
+)
 from repro.core.gnn import gnn_forward
 from repro.core.partition import (
     build_2d_halo_rounds, from_element_partition, pack, partition_elements,
     partition_mesh, gather_node_features,
 )
-from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
+from repro.core.reference import loss_and_grad_stacked
 from repro.core.mesh_gen import taylor_green_velocity
 from repro.launch.mesh import make_mesh
 
@@ -45,10 +49,11 @@ def main():
 
     # ---- R=1 reference ----
     pg1 = partition_mesh(sem, (1, 1, 1))
-    meta1 = rank_static_inputs(pg1, sem.coords)
+    plan1 = NMPPlan(halo=HaloSpec(mode=NONE))
+    graph1 = ShardedGraph.build(pg1, sem.coords, plan1)
     x1 = jnp.asarray(gather_node_features(pg1, vel))
-    l_ref, _, _ = loss_and_grad_stacked(params, x1, x1, meta1,
-                                        HaloSpec(mode=NONE), cfg.node_out)
+    l_ref, _, _ = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
+                                        cfg.node_out)
     l_ref = float(l_ref)
 
     # ---- (Ga, Gb) grid partition over ('data','model') ----
@@ -59,43 +64,44 @@ def main():
     rounds2d, nbr = build_2d_halo_rounds(graphs, (Ga, Gb), ("data", "model"))
     spec = HaloSpec(mode=NEIGHBOR, rounds2d=rounds2d)
 
-    # split=True attaches the interior/boundary edge split so the same meta
-    # also drives the overlap schedule below
-    meta = rank_static_inputs(pg, sem.coords, split=True)
-    for k, v in nbr.items():
-        meta[k] = jnp.asarray(v)
+    def plan_for(schedule):
+        return NMPPlan(halo=spec, schedule=schedule)
+
+    # an overlap-capable graph also serves the blocking schedule
+    graph = ShardedGraph.build(pg, sem.coords, plan_for("overlap"))
+    graph = graph.with_arrays(**{k: jnp.asarray(v) for k, v in nbr.items()})
     x = jnp.asarray(gather_node_features(pg, vel))
 
     # reshape rank axis -> (Ga, Gb) so each device owns one sub-graph
     def regrid(v):
         return v.reshape((Ga, Gb) + v.shape[1:])
 
-    meta_g = {k: regrid(v) for k, v in meta.items()}
+    graph_g = jax.tree.map(regrid, graph)
     x_g = regrid(x)
 
     mesh = make_mesh((Ga, Gb), ("data", "model"))
 
     def make_loss(schedule):
-        def local(params, xg, mg):
-            m = {k: v[0, 0] for k, v in mg.items()}
-            y = gnn_forward(params, xg[0, 0], m["static_edge_feats"], m, spec,
-                            schedule=schedule)
+        plan = plan_for(schedule)
+
+        def local(params, xg, gg):
+            g = jax.tree.map(lambda v: v[0, 0], gg)
+            y = gnn_forward(params, xg[0, 0], g, plan)
             err2 = jnp.sum((y - xg[0, 0]) ** 2, axis=-1)
-            s = jnp.sum(err2 * m["node_inv_mult"])
-            n = jnp.sum(m["node_inv_mult"])
+            s = jnp.sum(err2 * g["node_inv_mult"])
+            n = jnp.sum(g["node_inv_mult"])
             return (jax.lax.psum(s, ("data", "model"))
                     / (jax.lax.psum(n, ("data", "model")) * cfg.node_out))
         return local
 
-    meta_specs = {k: P("data", "model", *([None] * (v.ndim - 2)))
-                  for k, v in meta_g.items()}
+    graph_specs = graph_g.specs(("data", "model"))
 
     def run_loss(schedule, params_):
         return jax.shard_map(
             make_loss(schedule), mesh=mesh,
-            in_specs=(P(), P("data", "model", None, None), meta_specs),
+            in_specs=(P(), P("data", "model", None, None), graph_specs),
             out_specs=P(), check_vma=False,
-        )(params_, x_g, meta_g)
+        )(params_, x_g, graph_g)
 
     # one compile serves both the R=1 comparison and the schedule check
     l_b, g_b = jax.jit(jax.value_and_grad(lambda p: run_loss("blocking", p)))(params)
@@ -117,22 +123,22 @@ def main():
               f"(matches blocking, grads to fp32 tolerance)")
 
     # sanity: without the halo the 2x2 partition must deviate
-    spec_none = HaloSpec(mode=NONE)
+    plan_none = NMPPlan(halo=HaloSpec(mode=NONE))
 
-    def local_none(params, xg, mg):
-        m = {k: v[0, 0] for k, v in mg.items()}
-        y = gnn_forward(params, xg[0, 0], m["static_edge_feats"], m, spec_none)
+    def local_none(params, xg, gg):
+        g = jax.tree.map(lambda v: v[0, 0], gg)
+        y = gnn_forward(params, xg[0, 0], g, plan_none)
         err2 = jnp.sum((y - xg[0, 0]) ** 2, axis=-1)
-        s = jnp.sum(err2 * m["node_inv_mult"])
-        n = jnp.sum(m["node_inv_mult"])
+        s = jnp.sum(err2 * g["node_inv_mult"])
+        n = jnp.sum(g["node_inv_mult"])
         return (jax.lax.psum(s, ("data", "model"))
                 / (jax.lax.psum(n, ("data", "model")) * cfg.node_out))
 
     loss_none = float(jax.jit(jax.shard_map(
         local_none, mesh=mesh,
-        in_specs=(P(), P("data", "model", None, None), meta_specs),
+        in_specs=(P(), P("data", "model", None, None), graph_specs),
         out_specs=P(), check_vma=False,
-    ))(params, x_g, meta_g))
+    ))(params, x_g, graph_g))
     assert abs(loss_none - l_ref) > 1e-6, "inconsistent mode should deviate"
     print(f"without halo: {loss_none:.8f} (deviates, as expected)")
     print("HALO2D DRIVER PASS")

@@ -12,7 +12,6 @@ halo/compute schedules (``--schedule``); standalone invocations default to
 4 devices.  Exit code 0 = all assertions passed.
 """
 import argparse
-import dataclasses
 import os
 
 os.environ.setdefault(
@@ -23,12 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, box_mesh, build_hierarchy,
-    gather_node_features, init_gnn, taylor_green_velocity,
+    A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph,
+    box_mesh, build_hierarchy, gather_node_features, init_gnn,
+    taylor_green_velocity,
 )
-from repro.core.coarsen import multilevel_static_inputs
 from repro.core.distributed import make_gnn_step_fns, shard_inputs
-from repro.core.halo import halo_spec_from_plan
 from repro.core.reference import loss_and_grad_stacked
 from repro.launch.mesh import make_mesh
 
@@ -40,17 +38,13 @@ def run_case(sem, cfg, params, x_global, rank_grid, mode, schedule):
     R = int(np.prod(rank_grid))
     ml = build_hierarchy(sem, rank_grid, N_LEVELS)
     pg = ml.levels[0]
-    spec = halo_spec_from_plan(pg.halo, mode, axis="graph")
-    coarse = tuple(halo_spec_from_plan(lvl.halo, mode, axis="graph")
-                   for lvl in ml.levels[1:])
-    meta = multilevel_static_inputs(ml, split=schedule == "overlap")
+    plan = NMPPlan.build(ml, mode, axis="graph", schedule=schedule)
+    graph = ShardedGraph.build(pg, sem.coords, plan, hierarchy=ml)
     x = gather_node_features(pg, x_global)[None]          # [B=1, R, N_pad, F]
     mesh_dev = make_mesh((1, R), ("data", "graph"))
-    run_cfg = dataclasses.replace(cfg, mp_schedule=schedule)
-    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, run_cfg, spec,
-                                           coarse_halos=coarse)
-    xs, ms = shard_inputs(mesh_dev, jnp.asarray(x), meta)
-    loss, grads = grad_step(params, xs, xs, ms)
+    _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, plan)
+    xs, gs = shard_inputs(mesh_dev, jnp.asarray(x), graph)
+    loss, grads = grad_step(params, xs, xs, gs)
     return float(loss), jax.tree.map(np.asarray, grads)
 
 
@@ -70,11 +64,12 @@ def main():
 
     # ---- 1-rank oracle (stacked reference) ----
     ml1 = build_hierarchy(sem, (1, 1, 1), N_LEVELS)
-    meta1 = multilevel_static_inputs(ml1, split=args.schedule == "overlap")
+    plan1 = NMPPlan(halo=HaloSpec(mode=NONE), schedule=args.schedule)
+    graph1 = ShardedGraph.build(ml1.levels[0], sem.coords, plan1,
+                                hierarchy=ml1)
     x1 = jnp.asarray(gather_node_features(ml1.levels[0], x_global))
-    l1, _, g1 = loss_and_grad_stacked(
-        params, x1, x1, meta1, HaloSpec(mode=NONE), cfg.node_out,
-        schedule=args.schedule)
+    l1, _, g1 = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
+                                      cfg.node_out)
     l1 = float(l1)
     print(f"R=1 multilevel ({N_LEVELS} levels, {args.schedule}) loss {l1:.8f}")
 

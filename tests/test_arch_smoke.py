@@ -95,15 +95,17 @@ def test_gnn_arch_one_train_step(arch):
 
 def test_paper_gnn_smoke():
     from repro.configs import paper_gnn
-    from repro.core import box_mesh, init_gnn, partition_mesh, taylor_green_velocity
-    from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
+    from repro.core import (NMPPlan, ShardedGraph, box_mesh, init_gnn,
+                            partition_mesh, taylor_green_velocity)
+    from repro.core.reference import loss_and_grad_stacked
     cfg = paper_gnn.smoke_config()
     mesh = box_mesh((2, 2, 1), p=2)   # 3-D: velocity has node_in=3 components
     pg = partition_mesh(mesh, (2, 1, 1))
     params = init_gnn(jax.random.PRNGKey(0), cfg)
-    meta = rank_static_inputs(pg, mesh.coords)
+    plan = NMPPlan(halo=HaloSpec(mode=A2A))
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
     x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
-    loss, y, grads = loss_and_grad_stacked(params, x, x, meta, HaloSpec(mode=A2A),
+    loss, y, grads = loss_and_grad_stacked(params, x, x, graph, plan,
                                            cfg.node_out)
     assert np.isfinite(float(loss))
     assert np.isfinite(np.asarray(y)).all()

@@ -1,8 +1,9 @@
 """Consistency tests (Eqs. 2, 3, 6) — the paper's core claims.
 
-Fast single-device checks use the stacked reference evaluator; the real
-shard_map/collective path is exercised by the subprocess driver test at the
-bottom (needs 8 host devices, hence its own process).
+Fast single-device checks use the stacked reference evaluator on the
+ShardedGraph/NMPPlan API; the real shard_map/collective path is exercised
+by the subprocess driver test at the bottom (needs 8 host devices, hence
+its own process).
 """
 import os
 import subprocess
@@ -14,11 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NONE, GNNConfig, HaloSpec, box_mesh, init_gnn,
-    partition_mesh, partition_graph, gather_node_features, taylor_green_velocity,
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    init_gnn, partition_mesh, partition_graph, gather_node_features,
+    taylor_green_velocity,
 )
 from repro.core.halo import halo_sync_reference
-from repro.core.reference import loss_and_grad_stacked, rank_static_inputs
+from repro.core.reference import loss_and_grad_stacked
 from repro.core.partition import scatter_node_outputs
 
 
@@ -32,10 +34,11 @@ def small_case():
 
 
 def _eval(pg, mesh, params, cfg, x_global, mode):
-    meta = rank_static_inputs(pg, mesh.coords)
+    plan = NMPPlan(halo=HaloSpec(mode=mode))
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
     x = jnp.asarray(gather_node_features(pg, x_global))
-    spec = HaloSpec(mode=mode)
-    loss, y, grads = loss_and_grad_stacked(params, x, x, meta, spec, cfg.node_out)
+    loss, y, grads = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
     return float(loss), np.asarray(y), grads
 
 
@@ -104,10 +107,11 @@ def test_generic_edge_partition_consistency():
 
     def ev(R):
         pg = partition_graph(n, edges, R)
-        meta = rank_static_inputs(pg, coords)
+        plan = NMPPlan(halo=HaloSpec(mode=A2A if R > 1 else NONE))
+        graph = ShardedGraph.build(pg, coords, plan)
         x = jnp.asarray(gather_node_features(pg, x_global))
-        spec = HaloSpec(mode=A2A if R > 1 else NONE)
-        loss, y, _ = loss_and_grad_stacked(params, x, x, meta, spec, cfg.node_out)
+        loss, y, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
         return float(loss), scatter_node_outputs(pg, np.asarray(y))
 
     l1, y1 = ev(1)
@@ -121,11 +125,11 @@ def test_halo_sync_max_combine():
     """Max-combine sync: all coincident copies end with the global max."""
     mesh = box_mesh((2, 2), p=2)
     pg = partition_mesh(mesh, (2, 2))
-    meta = {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}
+    graph = ShardedGraph.build(pg, mesh.coords)
     rng = np.random.default_rng(0)
     a = rng.normal(size=(pg.R, pg.n_pad, 4)).astype(np.float32)
     a = a * pg.node_mask[..., None]
-    out = halo_sync_reference(jnp.asarray(a), meta, HaloSpec(mode=A2A), combine="max")
+    out = halo_sync_reference(jnp.asarray(a), graph, HaloSpec(mode=A2A), combine="max")
     out = np.asarray(out)
     # brute force: per global id, max over all copies
     best = {}
@@ -151,18 +155,19 @@ def test_fused_backend_matches_xla_values_and_grads(grid, mode):
     cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
     params = init_gnn(jax.random.PRNGKey(0), cfg)
     x_global = taylor_green_velocity(mesh.coords)
-    block_n, block_e = 16, 32
 
     pg = partition_mesh(mesh, grid)
-    meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e))
+    plan_f = NMPPlan(halo=HaloSpec(mode=mode), backend="fused",
+                     interpret=True, block_n=16, block_e=32)
+    plan_x = plan_f.replace(backend="xla")
+    # one fused-capable graph serves both backends
+    graph = ShardedGraph.build(pg, mesh.coords, plan_f)
     x = jnp.asarray(gather_node_features(pg, x_global))
-    spec = HaloSpec(mode=mode)
 
-    l_x, y_x, g_x = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, backend="xla")
-    l_f, y_f, g_f = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, backend="fused",
-        interpret=True, block_n=block_n)
+    l_x, y_x, g_x = loss_and_grad_stacked(params, x, x, graph, plan_x,
+                                          cfg.node_out)
+    l_f, y_f, g_f = loss_and_grad_stacked(params, x, x, graph, plan_f,
+                                          cfg.node_out)
 
     assert abs(float(l_f) - float(l_x)) < 1e-6 * max(1.0, abs(float(l_x)))
     np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_x),
@@ -182,11 +187,12 @@ def test_fused_backend_partition_invariance():
 
     def ev(grid, mode):
         pg = partition_mesh(mesh, grid)
-        meta = rank_static_inputs(pg, mesh.coords, seg_layout=(16, 32))
+        plan = NMPPlan(halo=HaloSpec(mode=mode), backend="fused",
+                       interpret=True, block_n=16, block_e=32)
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
         x = jnp.asarray(gather_node_features(pg, x_global))
-        loss, y, _ = loss_and_grad_stacked(
-            params, x, x, meta, HaloSpec(mode=mode), cfg.node_out,
-            backend="fused", interpret=True, block_n=16)
+        loss, y, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
         return float(loss), scatter_node_outputs(pg, np.asarray(y))
 
     l1, y1 = ev((1, 1, 1), NONE)
@@ -211,14 +217,15 @@ def test_overlap_schedule_matches_blocking(grid, mode):
     x_global = taylor_green_velocity(mesh.coords)
 
     pg = partition_mesh(mesh, grid)
-    meta = rank_static_inputs(pg, mesh.coords, split=True)
+    plan_o = NMPPlan(halo=HaloSpec(mode=mode), schedule="overlap")
+    plan_b = plan_o.replace(schedule="blocking")
+    graph = ShardedGraph.build(pg, mesh.coords, plan_o)
     x = jnp.asarray(gather_node_features(pg, x_global))
-    spec = HaloSpec(mode=mode)
 
-    l_b, y_b, g_b = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, schedule="blocking")
-    l_o, y_o, g_o = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, schedule="overlap")
+    l_b, y_b, g_b = loss_and_grad_stacked(params, x, x, graph, plan_b,
+                                          cfg.node_out)
+    l_o, y_o, g_o = loss_and_grad_stacked(params, x, x, graph, plan_o,
+                                          cfg.node_out)
 
     assert abs(float(l_o) - float(l_b)) < 1e-6 * max(1.0, abs(float(l_b)))
     np.testing.assert_allclose(np.asarray(y_o), np.asarray(y_b),
@@ -230,36 +237,36 @@ def test_overlap_schedule_matches_blocking(grid, mode):
     # as the un-partitioned reference
     if grid != (1, 1, 1):
         pg1 = partition_mesh(mesh, (1, 1, 1))
-        meta1 = rank_static_inputs(pg1, mesh.coords, split=True)
+        plan1 = NMPPlan(halo=HaloSpec(mode=NONE), schedule="overlap")
+        graph1 = ShardedGraph.build(pg1, mesh.coords, plan1)
         x1 = jnp.asarray(gather_node_features(pg1, x_global))
-        l1, _, _ = loss_and_grad_stacked(
-            params, x1, x1, meta1, HaloSpec(mode=NONE), cfg.node_out,
-            schedule="overlap")
+        l1, _, _ = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
+                                         cfg.node_out)
         assert abs(float(l_o) - float(l1)) < 2e-6 * max(1.0, abs(float(l1)))
 
 
 def test_overlap_schedule_matches_blocking_fused_backend():
     """The overlap schedule composes with the fused Pallas backend: each side
-    of the interior/boundary split runs through its own dst-aligned layout
+    of the interior/boundary split runs through its own compact layout
     (seg_perm_bnd / seg_perm_int) and still matches the blocking fused run
     for values and gradients (interpret mode on CPU)."""
     mesh = box_mesh((2, 2, 2), p=2)
     cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
     params = init_gnn(jax.random.PRNGKey(0), cfg)
     x_global = taylor_green_velocity(mesh.coords)
-    block_n, block_e = 16, 32
 
     pg = partition_mesh(mesh, (2, 2, 1))
-    meta = rank_static_inputs(pg, mesh.coords, seg_layout=(block_n, block_e),
-                              split=True)
+    plan_o = NMPPlan(halo=HaloSpec(mode=A2A), backend="fused",
+                     interpret=True, block_n=16, block_e=32,
+                     schedule="overlap")
+    plan_b = plan_o.replace(schedule="blocking")
+    graph = ShardedGraph.build(pg, mesh.coords, plan_o)
     x = jnp.asarray(gather_node_features(pg, x_global))
-    spec = HaloSpec(mode=A2A)
 
-    kw = dict(backend="fused", interpret=True, block_n=block_n)
-    l_b, y_b, g_b = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, schedule="blocking", **kw)
-    l_o, y_o, g_o = loss_and_grad_stacked(
-        params, x, x, meta, spec, cfg.node_out, schedule="overlap", **kw)
+    l_b, y_b, g_b = loss_and_grad_stacked(params, x, x, graph, plan_b,
+                                          cfg.node_out)
+    l_o, y_o, g_o = loss_and_grad_stacked(params, x, x, graph, plan_o,
+                                          cfg.node_out)
 
     assert abs(float(l_o) - float(l_b)) < 1e-6 * max(1.0, abs(float(l_b)))
     np.testing.assert_allclose(np.asarray(y_o), np.asarray(y_b),
@@ -269,17 +276,18 @@ def test_overlap_schedule_matches_blocking_fused_backend():
                                    rtol=2e-3, atol=2e-4)
 
 
-def test_overlap_schedule_requires_split_meta():
-    """Clear error when the split arrays are missing from meta."""
+def test_overlap_schedule_requires_split_arrays():
+    """Clear error when the split arrays are missing from the graph (built
+    with a blocking plan, evaluated with an overlap one)."""
     mesh = box_mesh((2, 2, 2), p=2)
     cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
     params = init_gnn(jax.random.PRNGKey(0), cfg)
     pg = partition_mesh(mesh, (2, 1, 1))
-    meta = rank_static_inputs(pg, mesh.coords)        # no split=True
+    graph = ShardedGraph.build(pg, mesh.coords)        # blocking-only arrays
     x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
+    plan = NMPPlan(halo=HaloSpec(mode=A2A), schedule="overlap")
     with pytest.raises(ValueError, match="split"):
-        loss_and_grad_stacked(params, x, x, meta, HaloSpec(mode=A2A),
-                              cfg.node_out, schedule="overlap")
+        loss_and_grad_stacked(params, x, x, graph, plan, cfg.node_out)
 
 
 def test_shard_map_collective_path_subprocess():

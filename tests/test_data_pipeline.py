@@ -1,5 +1,8 @@
 """Data pipeline: deterministic replay + prefetch ordering + host sharding."""
+import time
+
 import numpy as np
+import pytest
 
 from repro.data.pipeline import PrefetchingLoader, host_shard, token_batch_fn
 
@@ -38,7 +41,56 @@ def test_prefetching_loader_order_and_restart():
         loader2.close()
 
 
+def test_prefetching_loader_surfaces_producer_error_without_hanging():
+    """Regression: a batch_fn that raises used to kill the producer thread
+    while the consumer blocked forever on the empty queue — the error was
+    set AFTER the consumer parked on q.get().  __next__ must now surface
+    the exception promptly."""
+    def bad_fn(step: int):
+        raise RuntimeError(f"boom at step {step}")
+
+    loader = PrefetchingLoader(bad_fn, prefetch=2)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="boom at step"):
+            next(loader)
+        assert time.monotonic() - t0 < 10.0, "error took too long to surface"
+    finally:
+        loader.close()
+
+
+def test_prefetching_loader_error_after_good_batches():
+    """The failure mode mid-stream: N good batches, then the producer dies —
+    the queued batches drain normally, then the error surfaces (no hang)."""
+    def flaky_fn(step: int):
+        if step >= 2:
+            raise ValueError("stream ended")
+        return {"x": np.full((2,), step)}
+
+    loader = PrefetchingLoader(flaky_fn, prefetch=1)
+    try:
+        got = []
+        with pytest.raises(ValueError, match="stream ended"):
+            for _ in range(5):
+                s, b = next(loader)
+                got.append(s)
+        assert got == [0, 1]
+    finally:
+        loader.close()
+
+
 def test_host_shard():
     batch = {"x": np.arange(12).reshape(6, 2)}
     sh = host_shard(batch, host_id=1, n_hosts=3)
     np.testing.assert_array_equal(np.asarray(sh["x"]), batch["x"][2:4])
+    # every host covers the batch exactly once
+    parts = [host_shard(batch, h, 3)["x"] for h in range(3)]
+    np.testing.assert_array_equal(np.concatenate(parts), batch["x"])
+
+
+def test_host_shard_rejects_uneven_batch():
+    """Regression: an uneven batch used to silently drop trailing rows
+    (6 % 4 == 2 rows lost); it must raise instead."""
+    batch = {"x": np.arange(12).reshape(6, 2)}
+    with pytest.raises(ValueError, match="not divisible"):
+        host_shard(batch, host_id=0, n_hosts=4)

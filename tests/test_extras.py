@@ -5,10 +5,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ckpt
-from repro.core import A2A, GNNConfig, HaloSpec, box_mesh, init_gnn, partition_mesh
+from repro.core import (A2A, GNNConfig, HaloSpec, NMPPlan, ShardedGraph,
+                        box_mesh, init_gnn, partition_mesh)
 from repro.core.halo import halo_sync_reference
 from repro.core.partition import gather_node_features
-from repro.core.reference import gnn_forward_stacked, rank_static_inputs
+from repro.core.reference import gnn_forward_stacked
 from repro.core.consistent_loss import consistent_node_count, consistent_node_sum
 
 
@@ -37,12 +38,12 @@ def test_halo_wire_bf16_compression_close():
     """bf16 on-wire halo (beyond-paper) stays within bf16 tolerance of f32."""
     mesh = box_mesh((4, 2, 2), p=2)
     pg = partition_mesh(mesh, (2, 2, 1))
-    meta = {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}
+    graph = ShardedGraph.build(pg, mesh.coords)
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.normal(size=(pg.R, pg.n_pad, 8)).astype(np.float32))
     a = a * pg.node_mask[..., None]
-    full = halo_sync_reference(a, meta, HaloSpec(mode=A2A))
-    comp = halo_sync_reference(a, meta, HaloSpec(mode=A2A, wire_dtype=jnp.bfloat16))
+    full = halo_sync_reference(a, graph, HaloSpec(mode=A2A))
+    comp = halo_sync_reference(a, graph, HaloSpec(mode=A2A, wire_dtype=jnp.bfloat16))
     np.testing.assert_allclose(np.asarray(comp), np.asarray(full), rtol=2e-2, atol=2e-2)
     # and it actually changed something (quantization happened)
     assert float(jnp.abs(comp - full).max()) > 0
@@ -62,9 +63,10 @@ def test_elastic_checkpoint_restore_across_partitionings(tmp_path):
     outs = {}
     for grid in ((2, 2, 1), (2, 1, 1)):
         pg = partition_mesh(mesh, grid)
-        meta = rank_static_inputs(pg, mesh.coords)
+        plan = NMPPlan(halo=HaloSpec(mode=A2A))
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
         x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
-        y = gnn_forward_stacked(restored["params"], x, meta, HaloSpec(mode=A2A))
+        y = gnn_forward_stacked(restored["params"], x, graph, plan)
         outs[grid] = scatter_node_outputs(pg, np.asarray(y))
     np.testing.assert_allclose(outs[(2, 2, 1)], outs[(2, 1, 1)], rtol=3e-5, atol=2e-6)
 
@@ -95,9 +97,10 @@ def test_sampler_block_meta_runs_through_gnn():
     g = CSRGraph.from_edges(300, edges)
     rng = np.random.default_rng(1)
     block = sample_block(g, rng.choice(300, 8, replace=False), (4, 3), rng)
-    meta = {k: jnp.asarray(v) for k, v in block_meta(block).items()}
+    graph = ShardedGraph.from_arrays(
+        {k: jnp.asarray(v) for k, v in block_meta(block).items()})
     cfg = GATConfig(in_dim=5, hidden=4, heads=2, n_classes=3, n_layers=2)
     params = init_gat(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(rng.normal(size=(block.node_ids.shape[0], 5)).astype(np.float32))
-    out = gat_forward(params, x, meta, HaloSpec(mode=NONE), cfg)
+    out = gat_forward(params, x, graph, HaloSpec(mode=NONE), cfg)
     assert np.isfinite(np.asarray(out)).all()

@@ -4,6 +4,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph_state import NMPPlan, ShardedGraph
 from repro.core.halo import A2A, NONE, HaloSpec
 from repro.core.partition import partition_graph, gather_node_features
 from repro.graph.datasets import cora_like, molecules, batch_molecules, criteo_like
@@ -17,26 +18,28 @@ from repro.models.dlrm import DLRMConfig, dlrm_forward, init_dlrm
 from repro.sharding import split_tree
 
 
-def _single_rank_meta(n, edges):
-    """meta for an un-partitioned graph on one device."""
+def _single_rank_graph(n, edges):
+    """rank-local ShardedGraph for an un-partitioned graph on one device."""
     pg = partition_graph(n, edges, 1)
-    return {k: jnp.asarray(v[0]) for k, v in pg.device_arrays().items()}, pg
+    graph = ShardedGraph.from_arrays(
+        {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}).rank(0)
+    return graph, pg
 
 
 @pytest.fixture(scope="module")
 def tiny_graph():
     edges, feats, labels = cora_like(seed=0, n=80, m_und=240, d=16, n_classes=3)
-    meta, pg = _single_rank_meta(80, edges)
-    return meta, pg, feats, labels
+    graph, pg = _single_rank_graph(80, edges)
+    return graph, pg, feats, labels
 
 
 def test_gat_forward_and_consistency(tiny_graph):
-    meta, _, feats, labels = tiny_graph
+    graph, _, feats, labels = tiny_graph
     cfg = GATConfig(in_dim=16, hidden=4, heads=2, n_classes=3, n_layers=2)
     params = init_gat(jax.random.PRNGKey(0), cfg)
-    n_pad = meta["node_mask"].shape[0]
+    n_pad = graph["node_mask"].shape[0]
     x = jnp.zeros((n_pad, 16)).at[:80].set(feats)
-    out1 = gat_forward(params, x, meta, HaloSpec(mode=NONE), cfg)
+    out1 = gat_forward(params, x, graph, HaloSpec(mode=NONE), cfg)
     assert out1.shape == (n_pad, 3)
     assert np.isfinite(np.asarray(out1)).all()
 
@@ -44,7 +47,8 @@ def test_gat_forward_and_consistency(tiny_graph):
     # the consistent distributed softmax must match the un-partitioned run)
     edges, feats4, _ = cora_like(seed=0, n=80, m_und=240, d=16, n_classes=3)
     pg = partition_graph(80, edges, 4)
-    meta4 = {k: jnp.asarray(v) for k, v in pg.device_arrays().items()}
+    meta4 = ShardedGraph.from_arrays(
+        {k: jnp.asarray(v) for k, v in pg.device_arrays().items()})
     x4 = jnp.asarray(gather_node_features(pg, feats4))
     spec = HaloSpec(mode=A2A)
     outs = _gat_forward_stacked(params, x4, meta4, spec, cfg)
@@ -101,14 +105,15 @@ def _gat_layer_stacked(p, x, meta, spec, concat):
 
 
 def test_graphcast_forward(tiny_graph):
-    meta, pg, feats, labels = tiny_graph
+    graph, pg, feats, labels = tiny_graph
     cfg = GraphCastConfig(in_dim=16, hidden=32, n_layers=3, out_dim=4,
                           mlp_hidden_layers=1)
     params = init_graphcast(jax.random.PRNGKey(0), cfg)
-    n_pad = meta["node_mask"].shape[0]
+    n_pad = graph["node_mask"].shape[0]
     x = jnp.zeros((n_pad, 16)).at[:80].set(feats)
-    ef = jnp.ones((meta["edge_src"].shape[0], 4)) * meta["edge_mask"][:, None]
-    out = graphcast_forward(params, x, ef, meta, HaloSpec(mode=NONE), cfg)
+    ef = jnp.ones((graph["edge_src"].shape[0], 4)) * graph["edge_mask"][:, None]
+    out = graphcast_forward(params, x, ef, graph,
+                            NMPPlan(halo=HaloSpec(mode=NONE)), cfg)
     assert out.shape == (n_pad, 4)
     assert np.isfinite(np.asarray(out)).all()
 
@@ -118,21 +123,22 @@ def test_graphcast_multilevel_vcycle():
     consistent V-cycle; the coarse path contributes to the output and
     receives gradient."""
     from repro.core import HaloSpec as HS, box_mesh, build_hierarchy
-    from repro.core.coarsen import multilevel_static_inputs
 
     mesh = box_mesh((2, 2, 2), p=2)
     ml = build_hierarchy(mesh, (1, 1, 1), 2)
-    meta = {k: v[0] for k, v in multilevel_static_inputs(ml).items()}
+    plan = NMPPlan(halo=HS(mode=NONE))
+    graph = ShardedGraph.build(ml.levels[0], mesh.coords, plan,
+                               hierarchy=ml).rank(0)
     cfg = GraphCastConfig(in_dim=3, hidden=16, n_layers=2, out_dim=3,
                           mlp_hidden_layers=1, n_levels=2, coarse_mp_layers=1)
     params = init_graphcast(jax.random.PRNGKey(0), cfg)
     assert len(params["coarse"]) == 1
     x = jnp.asarray(np.random.default_rng(0).normal(
-        size=(meta["node_mask"].shape[0], 3)).astype(np.float32))
-    ef = meta["static_edge_feats"]
+        size=(graph["node_mask"].shape[0], 3)).astype(np.float32))
+    ef = graph["static_edge_feats"]
 
     def loss(p):
-        y = graphcast_forward(p, x, ef, meta, HS(mode=NONE), cfg)
+        y = graphcast_forward(p, x, ef, graph, plan, cfg)
         return jnp.sum(y ** 2)
 
     l, g = jax.value_and_grad(loss)(params)
@@ -142,8 +148,8 @@ def test_graphcast_multilevel_vcycle():
     assert coarse_g.max() > 0, "no gradient reached the coarse levels"
     # and the V-cycle changes the output vs the flat model
     flat = {k: v for k, v in params.items() if k != "coarse"}
-    y_ml = graphcast_forward(params, x, ef, meta, HS(mode=NONE), cfg)
-    y_flat = graphcast_forward(flat, x, ef, meta, HS(mode=NONE), cfg)
+    y_ml = graphcast_forward(params, x, ef, graph, plan, cfg)
+    y_flat = graphcast_forward(flat, x, ef, graph, plan, cfg)
     assert float(jnp.abs(y_ml - y_flat).max()) > 1e-5
 
 
@@ -166,6 +172,7 @@ def test_equivariant_models_invariance(model):
         meta[k] = jnp.zeros((1, 8), jnp.int32)
     for k in ("a2a_send_mask", "a2a_recv_mask"):
         meta[k] = jnp.zeros((1, 8), jnp.float32)
+    meta = ShardedGraph.from_arrays(meta)
 
     if model == "nequip":
         cfg = NequIPConfig(n_layers=2, hidden_mul=8, l_max=2, n_rbf=4,
@@ -202,7 +209,7 @@ def test_equivariant_forces(
     """Forces (-dE/dpos) rotate covariantly."""
     species, pos, edge_lists = molecules(batch=1, n_atoms=10, n_species=4, seed=2)
     sp, ps, meta_np = batch_molecules(species, pos, edge_lists, e_pad_per=48)
-    meta = {k: jnp.asarray(v) for k, v in meta_np.items()}
+    meta = ShardedGraph.from_arrays({k: jnp.asarray(v) for k, v in meta_np.items()})
     cfg = NequIPConfig(n_layers=2, hidden_mul=8, l_max=2, n_rbf=4, cutoff=3.0,
                        n_species=4)
     params = init_nequip(jax.random.PRNGKey(0), cfg)

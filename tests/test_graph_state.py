@@ -1,0 +1,164 @@
+"""ShardedGraph pytree semantics + NMPPlan staticness (the unified
+execution-state API introduced by the graph_state refactor).
+
+The load-bearing properties: the graph round-trips through
+``jax.tree.flatten/unflatten`` unchanged, rebuilding an identical graph or
+plan never retraces a jitted step (keys live in the hashable treedef,
+plans compare by value), and the retired raw-meta-dict path fails loudly
+with a ``TypeError`` instead of a shape error three layers down.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    A2A, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    build_hierarchy, init_gnn, partition_mesh, nmp_impl,
+    registered_nmp_impls,
+)
+from repro.core.gnn import gnn_forward
+from repro.core.graph_state import as_graph
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    mesh = box_mesh((2, 2, 2), p=2)
+    pg = partition_mesh(mesh, (2, 1, 1))
+    plan = NMPPlan(halo=HaloSpec(mode=A2A), schedule="overlap")
+    return ShardedGraph.build(pg, mesh.coords, plan), pg, mesh
+
+
+def test_flatten_unflatten_identity(small_graph):
+    graph, _, _ = small_graph
+    leaves, treedef = jax.tree.flatten(graph)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, ShardedGraph)
+    assert sorted(rebuilt.keys()) == sorted(graph.keys())
+    assert jax.tree.structure(rebuilt) == treedef
+    for k in graph.keys():
+        np.testing.assert_array_equal(np.asarray(rebuilt[k]),
+                                      np.asarray(graph[k]))
+    # leaves flow through tree.map and come back as a ShardedGraph
+    doubled = jax.tree.map(lambda v: v * 2, graph)
+    assert isinstance(doubled, ShardedGraph)
+    np.testing.assert_array_equal(np.asarray(doubled["edge_src"]),
+                                  2 * np.asarray(graph["edge_src"]))
+
+
+def test_multilevel_flatten_roundtrip():
+    mesh = box_mesh((2, 2, 2), p=2)
+    ml = build_hierarchy(mesh, (2, 1, 1), 2)
+    graph = ShardedGraph.build(ml.levels[0], mesh.coords, hierarchy=ml)
+    assert graph.n_levels == 2
+    assert "t_fine" in graph.levels[1]
+    leaves, treedef = jax.tree.flatten(graph)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt.n_levels == 2
+    np.testing.assert_array_equal(np.asarray(rebuilt.levels[1]["t_rw"]),
+                                  np.asarray(graph.levels[1]["t_rw"]))
+    # rank slicing strips the leading axis on EVERY level
+    r0 = graph.rank(0)
+    assert r0["node_mask"].ndim == graph["node_mask"].ndim - 1
+    assert r0.levels[1]["node_mask"].ndim == \
+        graph.levels[1]["node_mask"].ndim - 1
+
+
+def test_jit_does_not_retrace_across_rebuilds(small_graph):
+    """A rebuilt (structurally identical) graph + an equal fresh plan hit
+    the same jit cache entry: trace count stays 1."""
+    graph, pg, mesh = small_graph
+    traces = []
+
+    @jax.jit
+    def f(g):
+        traces.append(1)
+        return g["node_mask"].sum()
+
+    f(graph)
+    # a fresh object built from the same partition, plus a flatten round trip
+    graph2 = ShardedGraph.build(
+        pg, mesh.coords, NMPPlan(halo=HaloSpec(mode=A2A), schedule="overlap"))
+    f(graph2)
+    f(jax.tree.unflatten(jax.tree.structure(graph), jax.tree.leaves(graph)))
+    assert len(traces) == 1
+
+    # plans that differ only by identity (equal static fields) do not
+    # retrace when passed statically either
+    traces2 = []
+
+    def g_fn(graph, plan):
+        traces2.append(1)
+        return graph["node_mask"].sum() * (plan.block_n > 0)
+
+    g_jit = jax.jit(g_fn, static_argnums=(1,))
+    p1 = NMPPlan(halo=HaloSpec(mode=A2A), schedule="overlap", block_n=64)
+    p2 = NMPPlan(halo=HaloSpec(mode=A2A), schedule="overlap", block_n=64)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    g_jit(graph, p1)
+    g_jit(graph2, p2)
+    assert len(traces2) == 1
+    # ...while a plan differing in a static field DOES retrace (it selects
+    # different code)
+    g_jit(graph, p1.replace(block_n=128))
+    assert len(traces2) == 2
+
+
+def test_meta_dict_path_raises_typeerror(small_graph):
+    """Stale callers that still pass raw meta dicts fail loudly."""
+    graph, pg, mesh = small_graph
+    cfg = GNNConfig(hidden=8, n_mp_layers=1, mlp_hidden_layers=1)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((pg.n_pad, 3))
+    meta_dict = dict(graph.items())
+    plan = NMPPlan(halo=HaloSpec(mode=A2A))
+    with pytest.raises(TypeError, match="meta dicts are no longer accepted"):
+        gnn_forward(params, x, meta_dict, plan)
+    with pytest.raises(TypeError, match="ShardedGraph"):
+        as_graph([1, 2, 3])
+    # and a missing array names the fix, not a KeyError deep in XLA
+    blocking_graph = ShardedGraph.build(pg, mesh.coords)
+    with pytest.raises(KeyError, match="ShardedGraph.build"):
+        blocking_graph["seg_perm"]
+
+
+def test_specs_match_structure_and_axes(small_graph):
+    graph, _, _ = small_graph
+    specs = graph.specs("graph")
+    assert isinstance(specs, ShardedGraph)
+    assert jax.tree.structure(specs) == jax.tree.structure(graph)
+    s = specs["node_mask"]
+    assert isinstance(s, P) and s[0] == "graph"
+    # two-axis layout for two-level spatial grids
+    regrid = jax.tree.map(lambda v: v.reshape((2, 1) + v.shape[1:]), graph)
+    specs2 = regrid.specs(("data", "model"))
+    assert specs2["node_mask"][:2] == ("data", "model")
+
+
+def test_with_arrays_and_level_errors(small_graph):
+    graph, _, _ = small_graph
+    extra = graph.with_arrays(foo=jnp.zeros((2, 3)))
+    assert "foo" in extra and "foo" not in graph
+    assert extra.coarse is graph.coarse
+    with pytest.raises(ValueError, match="multilevel graph"):
+        graph.level(1)
+
+
+def test_autotune_blocks_from_table():
+    """The PR3 static block-size autotune stays reachable from the plan."""
+    from repro.kernels.segment_agg.ops import pick_block_sizes
+    plan = NMPPlan(backend="fused").autotune_blocks(16)
+    assert (plan.block_n, plan.block_e) == pick_block_sizes(16)
+    # other fields survive the replace
+    assert plan.backend == "fused"
+
+
+def test_nmp_registry_cells_and_unknown_plan():
+    assert registered_nmp_impls() == (
+        ("fused", "blocking"), ("fused", "overlap"),
+        ("xla", "blocking"), ("xla", "overlap"))
+    with pytest.raises(ValueError, match="no NMP implementation registered"):
+        nmp_impl(NMPPlan(backend="tpu-next"))
+    with pytest.raises(ValueError, match="precision"):
+        NMPPlan(precision="fp8")

@@ -18,10 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    A2A, NONE, GNNConfig, HaloSpec, box_mesh, build_hierarchy,
-    gather_node_features, init_gnn, taylor_green_velocity,
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    build_hierarchy, gather_node_features, init_gnn, taylor_green_velocity,
 )
-from repro.core.coarsen import multilevel_static_inputs
 from repro.core.partition import scatter_node_outputs
 from repro.core.reference import loss_and_grad_stacked
 
@@ -52,14 +51,13 @@ def _case(elements=(4, 4, 2), p=2, n_levels=3, seed=0):
 def _eval(mesh, cfg, params, x_global, grid, mode, *, backend="xla",
           schedule="blocking", n_levels=3):
     ml = _hierarchy(mesh.nelem_axes, mesh.p, grid, n_levels)
-    seg = (16, 32) if backend == "fused" else None
-    meta = multilevel_static_inputs(ml, seg_layout=seg,
-                                    split=schedule == "overlap")
+    plan = NMPPlan.build(ml, mode, backend=backend,
+                         interpret=backend == "fused", block_n=16, block_e=32,
+                         schedule=schedule)
+    graph = ShardedGraph.build(ml.levels[0], ml.coords[0], plan, hierarchy=ml)
     x = jnp.asarray(gather_node_features(ml.levels[0], x_global))
-    loss, y, grads = loss_and_grad_stacked(
-        params, x, x, meta, HaloSpec(mode=mode), cfg.node_out,
-        backend=backend, interpret=backend == "fused", block_n=16,
-        schedule=schedule)
+    loss, y, grads = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
     return float(loss), scatter_node_outputs(ml.levels[0], np.asarray(y)), grads
 
 
@@ -215,16 +213,15 @@ def test_restriction_without_halo_sum_deviates():
     assert abs(l4 - l1) > 1e-6
 
 
-def test_multilevel_requires_coarse_meta():
-    """Clear error when multilevel params meet single-level metadata."""
-    from repro.core.reference import rank_static_inputs
+def test_multilevel_requires_coarse_graph():
+    """Clear error when multilevel params meet a single-level graph."""
     mesh, cfg, params, x_global = _case()
     ml = build_hierarchy(mesh, (2, 2, 1), 3)
-    meta = rank_static_inputs(ml.levels[0], mesh.coords)   # level 0 only
+    plan = NMPPlan(halo=HaloSpec(mode=A2A))
+    graph = ShardedGraph.build(ml.levels[0], mesh.coords, plan)  # level 0 only
     x = jnp.asarray(gather_node_features(ml.levels[0], x_global))
-    with pytest.raises(ValueError, match="multilevel meta"):
-        loss_and_grad_stacked(params, x, x, meta, HaloSpec(mode=A2A),
-                              cfg.node_out)
+    with pytest.raises(ValueError, match="multilevel graph"):
+        loss_and_grad_stacked(params, x, x, graph, plan, cfg.node_out)
 
 
 def test_neighbor_mode_requires_per_level_halo_specs():
@@ -235,24 +232,24 @@ def test_neighbor_mode_requires_per_level_halo_specs():
     from repro.core.halo import halo_spec_from_plan
     mesh, cfg, params, _ = _case()
     ml = _hierarchy(mesh.nelem_axes, mesh.p, (2, 2, 1), 3)
-    meta = multilevel_static_inputs(ml)
     spec = halo_spec_from_plan(ml.levels[0].halo, NEIGHBOR)
+    plan = NMPPlan(halo=spec)                      # no coarse_halos entries
+    graph = ShardedGraph.build(ml.levels[0], ml.coords[0], plan, hierarchy=ml)
     h = jnp.zeros((ml.levels[0].n_pad, cfg.hidden))
-    meta0 = {k: v[0] for k, v in meta.items()}
     with pytest.raises(ValueError, match="one HaloSpec per coarse level"):
-        multilevel_vcycle(params["coarse"], h, meta0, spec, coarse_halos=())
+        multilevel_vcycle(params["coarse"], h, graph.rank(0), plan)
 
 
-def test_prepare_gnn_meta_hierarchy_coords_guard():
-    """prepare_gnn_meta refuses coords that disagree with the hierarchy's
+def test_graph_build_hierarchy_coords_guard():
+    """ShardedGraph.build refuses coords that disagree with the hierarchy's
     build-time coordinates (which define every level's edge features)."""
-    from repro.data.pipeline import prepare_gnn_meta
     mesh, _, _, _ = _case()
     ml = _hierarchy(mesh.nelem_axes, mesh.p, (2, 2, 1), 3)
-    meta = prepare_gnn_meta(ml.levels[0], mesh.coords, hierarchy=ml)
-    assert "lvl2_t_fine" in meta and "lvl1_node_mask" in meta
+    graph = ShardedGraph.build(ml.levels[0], mesh.coords, hierarchy=ml)
+    assert graph.n_levels == 3
+    assert "t_fine" in graph.levels[2] and "node_mask" in graph.levels[1]
     with pytest.raises(ValueError, match="hierarchy.coords"):
-        prepare_gnn_meta(ml.levels[0], mesh.coords + 1.0, hierarchy=ml)
+        ShardedGraph.build(ml.levels[0], mesh.coords + 1.0, hierarchy=ml)
 
 
 def test_deeper_level_than_blocks_degenerates_gracefully():
@@ -275,11 +272,11 @@ def test_vcycle_changes_the_output():
     mesh, cfg, params, x_global = _case()
     flat = {k: v for k, v in params.items() if k != "coarse"}
     ml = build_hierarchy(mesh, (1, 1, 1), 3)
-    meta = multilevel_static_inputs(ml)
+    plan = NMPPlan(halo=HaloSpec(mode=NONE))
+    graph = ShardedGraph.build(ml.levels[0], ml.coords[0], plan, hierarchy=ml)
     x = jnp.asarray(gather_node_features(ml.levels[0], x_global))
-    spec = HaloSpec(mode=NONE)
-    _, y_ml, _ = loss_and_grad_stacked(params, x, x, meta, spec, cfg.node_out)
-    _, y_flat, _ = loss_and_grad_stacked(flat, x, x, meta, spec, cfg.node_out)
+    _, y_ml, _ = loss_and_grad_stacked(params, x, x, graph, plan, cfg.node_out)
+    _, y_flat, _ = loss_and_grad_stacked(flat, x, x, graph, plan, cfg.node_out)
     assert float(jnp.abs(jnp.asarray(y_ml) - jnp.asarray(y_flat)).max()) > 1e-4
 
 

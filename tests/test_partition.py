@@ -241,9 +241,9 @@ def test_zero_boundary_partition_fused_layout_and_consistency():
     while the "int" side reproduces the unsplit layout's edge set."""
     import jax
     import jax.numpy as jnp
+    from repro.core import NMPPlan, ShardedGraph
     from repro.core.consistent_mp import (
         edge_update_aggregate, edge_update_aggregate_part, init_nmp_layer)
-    from repro.core.reference import rank_static_inputs
 
     m = box_mesh((2, 2, 2), p=2)
     pg = partition_mesh(m, (1, 1, 1))
@@ -254,8 +254,9 @@ def test_zero_boundary_partition_fused_layout_and_consistency():
         np.sort(lay_i["perm"][lay_i["perm"] >= 0]),
         np.nonzero(pg.edge_mask[0] > 0)[0])
 
-    meta = rank_static_inputs(pg, m.coords, seg_layout=(16, 32), split=True)
-    meta_r = {k: v[0] for k, v in meta.items()}
+    plan = NMPPlan(backend="fused", interpret=True, block_n=16, block_e=32,
+                   schedule="overlap")
+    graph_r = ShardedGraph.build(pg, m.coords, plan).rank(0)
     rng = np.random.default_rng(0)
     params = init_nmp_layer(jax.random.PRNGKey(0), 8, 2)
     x = jnp.asarray(rng.normal(size=(pg.n_pad, 8)), jnp.float32)
@@ -263,9 +264,7 @@ def test_zero_boundary_partition_fused_layout_and_consistency():
 
     def run(part):
         def f(p, x, e):
-            eo, ao = edge_update_aggregate_part(
-                p, x, e, meta_r, part, backend="fused", interpret=True,
-                block_n=16)
+            eo, ao = edge_update_aggregate_part(p, x, e, graph_r, part, plan)
             return eo, ao
         (eo, ao), vjp = jax.vjp(lambda p, x, e: f(p, x, e), params, x, e)
         g = vjp((jnp.ones_like(eo), jnp.ones_like(ao)))
@@ -276,8 +275,7 @@ def test_zero_boundary_partition_fused_layout_and_consistency():
     assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g_b))
     # int side alone == unsplit fused result
     e_i, a_i, _ = run("int")
-    e_all, a_all = edge_update_aggregate(
-        params, x, e, meta_r, backend="fused", interpret=True, block_n=16)
+    e_all, a_all = edge_update_aggregate(params, x, e, graph_r, plan)
     np.testing.assert_allclose(np.asarray(e_i), np.asarray(e_all),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(np.asarray(a_i), np.asarray(a_all),

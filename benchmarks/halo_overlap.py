@@ -70,10 +70,18 @@ def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
         y_o = f_o(params, x)
         err = float(jnp.abs(y_b - y_o).max())
         assert err < 1e-4, f"overlap deviates from blocking: {err}"
+        timings = {"blocking": _time(f_b, params, x),
+                   "overlap": _time(f_o, params, x)}
+        # schedule="auto": the measured tuner's pick for this (graph, R) —
+        # the gate checks it matches (or beats) the best fixed schedule
+        auto = (NMPPlan(halo=spec, schedule="auto")
+                .autotune(graph, hidden=cfg.hidden).schedule)
         cases.append(dict(
             ranks=pg.R, grid=list(grid),
-            blocking_us=_time(f_b, params, x),
-            overlap_us=_time(f_o, params, x),
+            blocking_us=timings["blocking"],
+            overlap_us=timings["overlap"],
+            auto_schedule=auto,
+            auto_us=timings[auto],
             interior_frac=pg.interior_split()["interior_frac"],
             max_abs_err=err,
         ))
@@ -89,6 +97,9 @@ def run(verbose: bool = True, overlap_payload: dict | None = None):
                      f"int_frac={c['interior_frac']:.3f}"))
         rows.append((f"nmp_overlap_R{c['ranks']}", c["overlap_us"],
                      f"err={c['max_abs_err']:.1e}"))
+        if "auto_schedule" in c:
+            rows.append((f"nmp_auto_R{c['ranks']}", c["auto_us"],
+                         f"picked={c['auto_schedule']}"))
     if verbose:
         for r in rows:
             print(f"{r[0]}: {r[1]:.0f} us  ({r[2]})")

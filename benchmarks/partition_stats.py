@@ -1,9 +1,26 @@
-"""Paper Table II: per-rank sub-graph statistics vs number of ranks.
+"""Partition quality: paper Table II stats + block-vs-spectral comparison.
 
-Partitions a cubic p=5 SEM mesh (scaled to fit host memory) and reports
-(min, max, avg) of local nodes, halo nodes, and neighbor counts — the halo
-fraction and bounded neighbor count are the properties the paper's N-A2A
-relies on.
+Two parts:
+
+* ``partition_sweep()`` — the ``BENCH_partition.json`` payload: block vs
+  spectral decompositions of a *stretched* SEM mesh (the case block
+  decompositions handle worst) across a rank-count grid, reporting the
+  structural quality metrics from ``repro.core.partition_quality`` (halo
+  volume, edge cut, boundary fraction, imbalance) plus a consistency check
+  per method x rank-count cell: ``max_abs_err`` is the max disagreement
+  between coincident copies of any node in the stacked forward — EXACTLY
+  0.0, because the oracle's halo sum is canonically rank-ordered (Eq. 2's
+  partition invariance, bitwise) — and ``loss_dev_vs_1rank`` compares the
+  consistent loss against the un-partitioned run (fp32 ulp tolerance).
+  Partition choice is a pure performance knob under the paper's Eq. 2/3
+  guarantee.  The metrics are topological (no timing), so
+  ``scripts/bench_gate.py`` gates them strictly: spectral must cut halo
+  volume vs block at >= 4 ranks and every cell must report
+  ``max_abs_err == 0.0``.
+
+* ``run()`` — the paper's Table II printer (per-rank sub-graph statistics
+  on a cubic mesh) plus a summary of the sweep payload, for the CSV rows
+  ``benchmarks/run.py`` prints.
 """
 from __future__ import annotations
 
@@ -12,10 +29,83 @@ import time
 import numpy as np
 
 from repro.core import box_mesh
-from repro.core.partition import from_element_partition, partition_elements, build_halo_plan
+from repro.core.partition import (
+    build_halo_plan, from_element_partition, partition_elements,
+)
+
+#: balanced rank grids a user would pick for the block method
+BLOCK_GRIDS = {2: (2, 1, 1), 4: (2, 2, 1), 8: (2, 2, 2)}
 
 
-def run(verbose: bool = True):
+def partition_sweep(elements=(16, 2, 2), order=2, lengths=(8.0, 1.0, 1.0),
+                    rank_counts=(2, 4, 8)) -> dict:
+    """Block vs spectral partition quality on a stretched mesh + consistency."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph,
+        gather_node_features, init_gnn, partition_mesh, partition_quality,
+        taylor_green_velocity,
+    )
+    from repro.core.mesh_gen import mesh_graph_edges
+    from repro.core.reference import gnn_forward_stacked, loss_and_grad_stacked
+
+    mesh = box_mesh(elements, p=order, lengths=lengths)
+    cfg = GNNConfig.small()
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x_global = taylor_green_velocity(mesh.coords)
+
+    def eval_of(pg, mode):
+        plan = NMPPlan(halo=HaloSpec(mode=mode))
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
+        x = jnp.asarray(gather_node_features(pg, x_global))
+        y = np.asarray(gnn_forward_stacked(params, x, graph, plan))
+        loss, _, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
+        return float(loss), y
+
+    def copy_spread(pg, y):
+        """Max disagreement between coincident copies of any global node."""
+        mx = np.full((pg.n_global, y.shape[-1]), -np.inf)
+        mn = np.full((pg.n_global, y.shape[-1]), np.inf)
+        gids = np.asarray(pg.global_ids)
+        nm = np.asarray(pg.node_mask)
+        for r in range(pg.R):
+            m = nm[r] > 0
+            np.maximum.at(mx, gids[r][m], y[r][m])
+            np.minimum.at(mn, gids[r][m], y[r][m])
+        return float((mx - mn).max())
+
+    loss_1, _ = eval_of(partition_mesh(mesh, (1, 1, 1)), NONE)
+
+    cases = []
+    for R in rank_counts:
+        grid = BLOCK_GRIDS[R]
+        methods = {}
+        for method in ("block", "spectral"):
+            t0 = time.perf_counter()
+            pg = partition_mesh(mesh, grid, method=method)
+            build_us = (time.perf_counter() - t0) * 1e6
+            q = partition_quality(pg)
+            loss, y = eval_of(pg, A2A)
+            err = copy_spread(pg, y)
+            assert err == 0.0, (
+                f"{method} @ R={R}: coincident copies disagree by {err} — "
+                f"partition choice must be consistency-neutral (Eq. 2)")
+            loss_dev = abs(loss - loss_1)
+            assert loss_dev < 2e-6 * max(1.0, abs(loss_1)), (method, R, loss_dev)
+            methods[method] = dict(q, build_us=build_us, max_abs_err=err,
+                                   loss_dev_vs_1rank=loss_dev)
+        cases.append(dict(ranks=R, block_grid=list(grid), methods=methods))
+
+    return dict(backend=jax.default_backend(), elements=list(elements),
+                order=order, lengths=list(lengths), n_nodes=mesh.n_nodes,
+                n_edges=int(len(mesh_graph_edges(mesh))), loss_1rank=loss_1,
+                cases=cases)
+
+
+def run(verbose: bool = True, payload: dict | None = None):
     rows = []
     mesh = box_mesh((8, 8, 8), p=3)
     if verbose:
@@ -44,8 +134,24 @@ def run(verbose: bool = True):
         rows.append((f"tableII_R{R}", us,
                      f"nodes_avg={int(np.mean(nodes))};halo_avg={int(np.mean(halos))};"
                      f"nbr_avg={np.mean(nbrs):.1f};halo_pct={frac:.1f}"))
+
+    if payload is not None:
+        if verbose:
+            print(f"\nstretched mesh {payload['elements']} p={payload['order']} "
+                  f"({payload['n_nodes']} nodes): block vs spectral")
+        for c in payload["cases"]:
+            for method, q in c["methods"].items():
+                if verbose:
+                    print(f"  R={c['ranks']} {method:9s} halo_volume="
+                          f"{q['halo_volume']:>5} edge_cut={q['edge_cut']:>5} "
+                          f"imbalance={q['imbalance']:.2f} "
+                          f"err={q['max_abs_err']:.1e}")
+                rows.append((
+                    f"partition_{method}_R{c['ranks']}", q["build_us"],
+                    f"halo_volume={q['halo_volume']};edge_cut={q['edge_cut']};"
+                    f"imbalance={q['imbalance']:.3f}"))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(payload=partition_sweep())

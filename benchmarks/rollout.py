@@ -54,6 +54,12 @@ def rollout_sweep(ks=KS, elements=(4, 4, 2), order=2, grid=(2, 2, 1)) -> dict:
     setups = {s: (setup(grid, A2A if R > 1 else NONE, s),
                   setup((1, 1, 1), NONE, s))
               for s in ("blocking", "overlap")}
+    # schedule="auto": the measured tuner's pick for this (graph, R); each
+    # K row copies the picked schedule's timings under "auto" so the gate
+    # can check auto matches-or-beats the best fixed schedule at every K
+    (_, _, graph_o, _), _ = setups["overlap"]
+    auto_plan = setups["overlap"][0][1].replace(schedule="auto")
+    auto_schedule = auto_plan.autotune(graph_o, hidden=cfg.hidden).schedule
     cases = []
     for k in ks:
         tg = [taylor_green_velocity(mesh.coords, t=(i + 1) * DT)
@@ -83,10 +89,12 @@ def rollout_sweep(ks=KS, elements=(4, 4, 2), order=2, grid=(2, 2, 1)) -> dict:
                 us_per_node_step=us / (mesh.n_nodes * k),
                 loss_dev_vs_1rank=err,
             )
+        row["schedules"]["auto"] = dict(row["schedules"][auto_schedule],
+                                        picked=auto_schedule)
         cases.append(row)
     return dict(backend=jax.default_backend(), elements=list(elements),
                 order=order, grid=list(grid), n_nodes=mesh.n_nodes,
-                ranks=R, cases=cases)
+                ranks=R, auto_schedule=auto_schedule, cases=cases)
 
 
 def run(verbose: bool = True, payload: dict | None = None):

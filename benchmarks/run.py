@@ -3,10 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_segment_agg.json`` (xla/fused NMP hot-loop timings + optional graph
 size sweep + per-SHA ``history`` trajectory), ``BENCH_halo_overlap.json``
-(blocking-vs-overlap NMP schedule timings per rank count), and
-``BENCH_rollout.json`` (us/node/step vs autoregressive rollout depth K,
-both schedules, consistency-asserted) so future PRs have a perf trajectory
-to regress against (see ``scripts/bench_gate.py``).
+(blocking-vs-overlap NMP schedule timings per rank count, plus the
+measured ``auto`` pick), ``BENCH_rollout.json`` (us/node/step vs
+autoregressive rollout depth K, both schedules, consistency-asserted), and
+``BENCH_partition.json`` (block-vs-spectral partition quality on a
+stretched mesh, bitwise copy-agreement asserted) so future PRs have a perf
+trajectory to regress against (see ``scripts/bench_gate.py``).
 Run:
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -90,6 +92,14 @@ def write_rollout_json(path: str = "BENCH_rollout.json") -> dict:
     return _write_json(path, rollout_sweep())
 
 
+def write_partition_json(path: str = "BENCH_partition.json") -> dict:
+    """Collect the block-vs-spectral partition quality sweep (stretched
+    mesh, with its built-in bitwise copy-agreement assertions) and persist
+    it."""
+    from benchmarks.partition_stats import partition_sweep
+    return _write_json(path, partition_sweep())
+
+
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench,
@@ -98,6 +108,7 @@ def main() -> None:
     overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
     multilevel_payload = write_multilevel_json()  # reused by multilevel.run
     rollout_payload = write_rollout_json()        # reused by rollout.run
+    partition_payload = write_partition_json()    # reused by partition_stats.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
@@ -117,6 +128,8 @@ def main() -> None:
             kw = dict(payload=multilevel_payload)
         elif mod is rollout:
             kw = dict(payload=rollout_payload)
+        elif mod is partition_stats:
+            kw = dict(payload=partition_payload)
         all_rows += mod.run(verbose=True, **kw)
     fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
@@ -135,7 +148,14 @@ def main() -> None:
     longest = rollout_payload["cases"][-1]
     print(f"wrote BENCH_rollout.json (K up to {longest['k']}, "
           f"{longest['schedules']['blocking']['us_per_node_step']:.3f} "
-          f"us/node/step blocking, consistency-asserted)")
+          f"us/node/step blocking, auto->"
+          f"{rollout_payload['auto_schedule']}, consistency-asserted)")
+    worst_case = max(partition_payload["cases"], key=lambda c: c["ranks"])
+    hv_b = worst_case["methods"]["block"]["halo_volume"]
+    hv_s = worst_case["methods"]["spectral"]["halo_volume"]
+    print(f"wrote BENCH_partition.json (R up to {worst_case['ranks']}: "
+          f"halo volume block {hv_b} vs spectral {hv_s}, "
+          f"copy agreement exact)")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

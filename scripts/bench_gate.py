@@ -7,15 +7,23 @@ and — when ``--halo-out``/``--halo-baseline`` ask for it —
 count); with baseline files provided, fails on regressions beyond
 ``--max-regression``:
 
-* segment-agg: fused-path wall time vs the baseline's.  Interpreter-mode
-  runs (no TPU attached) record their timing under ``fused_interpret_us``
-  (``fused_us`` exists only for compiled runs) and are never gated —
-  interpreted-Pallas timings are not comparable to compiled ones (and
-  comparing them against the compiled XLA path is meaningless, so no
-  xla-vs-fused check either).
+* segment-agg: fused-path wall time vs the baseline's when both runs have
+  compiled ``fused_us``.  Interpreter-mode runs (no TPU attached) record
+  their timing under ``fused_interpret_us`` instead; absolute interpreted
+  timings are not comparable to compiled ones, so those runs are gated
+  LOOSELY on the interpret/xla *ratio* vs the baseline's ratio (2x
+  headroom on top of ``--max-regression``, because machine load alone
+  drifts the ratio ~1.6x) — a structural blow-up in the fused path still
+  shows up there.
 * halo overlap: the overlap/blocking *ratio* per rank count vs the
   baseline's ratio.  Both schedules compile on any host, and the ratio
   normalizes hardware differences away, so this gate also runs on CPU CI.
+* partition quality (``--partition-out``): structural, baseline-free.
+  Every method x rank-count cell must report bitwise copy agreement
+  (``max_abs_err == 0.0``) and the spectral partitioner must strictly beat
+  the block partitioner's halo volume at >= 4 ranks on the stretched mesh
+  — these are topological properties, not timings, so the gate is strict
+  and runs identically on any host.
 
 Usage:
     PYTHONPATH=src python scripts/bench_gate.py
@@ -37,23 +45,46 @@ for p in (_REPO, os.path.join(_REPO, "src")):
 
 
 def gate_segment_agg(payload: dict, base: dict, max_regression: float) -> bool:
-    """True iff the fused segment-agg path did not regress. Skips (passes)
-    unless both runs have a compiled ``fused_us`` timing — interpreter runs
-    only carry ``fused_interpret_us``, which is not comparable to compiled
-    numbers (nor to the compiled ``xla_us``, so no fused-vs-xla ratio check
-    in that mode either)."""
-    if "fused_us" not in payload or "fused_us" not in base:
-        print("segment-agg gate skipped: interpreter-mode timings "
-              "(fused_interpret_us) are not comparable to compiled runs")
+    """True iff the fused segment-agg path did not regress.
+
+    Compiled runs gate ``fused_us`` strictly against the baseline's wall
+    time.  Interpreter-mode runs (CPU CI, no TPU attached) only carry
+    ``fused_interpret_us``; absolute interpreted timings are meaningless,
+    but a blow-up in the interpret/xla *ratio* still means the fused code
+    path got structurally slower (e.g. an accidental extra pass).  The
+    ratio is only loosely host-normalized — the compiled xla path speeds
+    up more on an idle core than the interpreter loop does, drifting the
+    ratio ~1.6x with machine load alone — so the limit gets 2x headroom
+    on top of the fractional allowance: it catches 3x+ structural
+    regressions without flaking on runner weather."""
+    if "fused_us" in payload and "fused_us" in base:
+        limit = base["fused_us"] * (1.0 + max_regression)
+        if payload["fused_us"] > limit:
+            print(f"REGRESSION: fused {payload['fused_us']:.0f} us > "
+                  f"{limit:.0f} us (baseline {base['fused_us']:.0f} us "
+                  f"+{max_regression:.0%})")
+            return False
+        print(f"segment-agg gate ok: fused {payload['fused_us']:.0f} us "
+              f"(baseline {base['fused_us']:.0f} us)")
         return True
-    limit = base["fused_us"] * (1.0 + max_regression)
-    if payload["fused_us"] > limit:
-        print(f"REGRESSION: fused {payload['fused_us']:.0f} us > "
-              f"{limit:.0f} us (baseline {base['fused_us']:.0f} us "
-              f"+{max_regression:.0%})")
+    have = ("fused_interpret_us" in payload and "xla_us" in payload
+            and payload["xla_us"] > 0)
+    have_base = ("fused_interpret_us" in base and "xla_us" in base
+                 and base["xla_us"] > 0)
+    if not (have and have_base):
+        print("segment-agg gate skipped: no comparable fused timings "
+              "(need fused_us in both runs, or fused_interpret_us + xla_us)")
+        return True
+    ratio = payload["fused_interpret_us"] / payload["xla_us"]
+    ratio_base = base["fused_interpret_us"] / base["xla_us"]
+    limit = ratio_base * 2.0 * (1.0 + max_regression)
+    if ratio > limit:
+        print(f"REGRESSION: fused interpret/xla ratio {ratio:.1f} > "
+              f"{limit:.1f} (baseline {ratio_base:.1f} x2 "
+              f"+{max_regression:.0%}, loose interpret-mode gate)")
         return False
-    print(f"segment-agg gate ok: fused {payload['fused_us']:.0f} us "
-          f"(baseline {base['fused_us']:.0f} us)")
+    print(f"segment-agg interpret gate ok: interpret/xla ratio {ratio:.1f} "
+          f"(limit {limit:.1f}, baseline {ratio_base:.1f})")
     return True
 
 
@@ -95,6 +126,38 @@ def gate_halo_overlap(payload: dict, base: dict, max_regression: float) -> bool:
     return True
 
 
+def gate_partition(payload: dict) -> bool:
+    """True iff the partition-quality sweep holds its structural invariants:
+    bitwise copy agreement in every method x rank-count cell (partitioning
+    is consistency-neutral under Eq. 2), and spectral halo volume strictly
+    below block's at >= 4 ranks (the stretched mesh is the case block
+    grids handle worst — if spectral stops winning there, the partitioner
+    regressed).  No baseline needed: both properties are topological."""
+    ok = True
+    for c in payload["cases"]:
+        ranks = c["ranks"]
+        for method, q in c["methods"].items():
+            if q["max_abs_err"] != 0.0:
+                print(f"REGRESSION: partition {method} @ R={ranks} has "
+                      f"copy disagreement {q['max_abs_err']:g} (want 0.0)")
+                ok = False
+        hv_b = c["methods"]["block"]["halo_volume"]
+        hv_s = c["methods"]["spectral"]["halo_volume"]
+        if ranks >= 4 and hv_s >= hv_b:
+            print(f"REGRESSION: spectral halo volume {hv_s} >= block "
+                  f"{hv_b} at R={ranks} (spectral must win on the "
+                  f"stretched mesh at >= 4 ranks)")
+            ok = False
+    if ok:
+        summary = "; ".join(
+            f"R={c['ranks']} block={c['methods']['block']['halo_volume']} "
+            f"spectral={c['methods']['spectral']['halo_volume']}"
+            for c in payload["cases"])
+        print(f"partition gate ok: copy agreement exact, halo volume "
+              f"{summary}")
+    return ok
+
+
 def _load(path: str | None) -> dict | None:
     if not path or not os.path.exists(path):
         return None
@@ -122,6 +185,13 @@ def main() -> int:
                          "schedules); the sweep only runs when given. Its "
                          "1-rank-vs-partitioned consistency assertions are "
                          "the gate — timings are recorded, not gated")
+    ap.add_argument("--partition-out", default=None,
+                    help="where to write BENCH_partition.json (block vs "
+                         "spectral partition quality on a stretched mesh); "
+                         "the sweep only runs when given.  Gated strictly "
+                         "and baseline-free: every cell must report "
+                         "max_abs_err == 0.0 and spectral must beat block's "
+                         "halo volume at >= 4 ranks")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_segment_agg.json to gate against")
     ap.add_argument("--halo-baseline", default=None,
@@ -167,6 +237,11 @@ def main() -> int:
         from benchmarks.run import write_rollout_json
         ro_payload = write_rollout_json(args.rollout_out)
         print(json.dumps(ro_payload, indent=2, sort_keys=True))
+    if args.partition_out:
+        from benchmarks.run import write_partition_json
+        part_payload = write_partition_json(args.partition_out)
+        print(json.dumps(part_payload, indent=2, sort_keys=True))
+        ok &= gate_partition(part_payload)
     return 0 if ok else 1
 
 

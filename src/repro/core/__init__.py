@@ -8,8 +8,12 @@ from repro.core.graph_state import (
 from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync
 from repro.core.consistent_loss import consistent_mse, consistent_node_count, consistent_node_sum
 from repro.core.consistent_mp import (
-    BLOCKING, OVERLAP, init_nmp_layer, multilevel_vcycle, nmp_layer,
-    prolong_aggregate, restrict_aggregate,
+    BLOCKING, OVERLAP, autotune_schedule, init_nmp_layer, interior_frac,
+    multilevel_vcycle, nmp_layer, prolong_aggregate, restrict_aggregate,
+)
+from repro.core.graph_state import AUTO
+from repro.core.partition_quality import (
+    mesh_node2part, partition_quality, spectral_node2part,
 )
 from repro.core.mesh_gen import SEMMesh, box_mesh, gll_points, mesh_graph_edges, taylor_green_velocity
 from repro.core.partition import (

@@ -180,7 +180,8 @@ def _pack_transfer(pairs: np.ndarray, owner: np.ndarray,
 
 
 def build_hierarchy(mesh: SEMMesh, rank_grid: Sequence[int], n_levels: int,
-                    cluster: int = 2, pad_to: int = 8) -> MultiLevelGraphs:
+                    cluster: int = 2, pad_to: int = 8,
+                    node2part: np.ndarray = None) -> MultiLevelGraphs:
     """Build the consistent multilevel hierarchy for an element partition.
 
     Level 0 reuses the paper's element partitioner; level 1 collapses each
@@ -190,12 +191,28 @@ def build_hierarchy(mesh: SEMMesh, rank_grid: Sequence[int], n_levels: int,
     member — rank-grid/cluster misalignment then genuinely splits a block's
     children across ranks, which is the case the halo-summed restriction
     exists for.
+
+    ``node2part`` (e.g. from ``repro.core.partition_quality``) overrides the
+    block element decomposition: level 0 becomes the vertex-cut edge
+    partition of the mesh graph, and each element centroid lives on the
+    majority rank of its GLL nodes — the transfer/halo machinery is
+    partition-agnostic, so everything downstream is unchanged.
     """
     if n_levels < 1:
         raise ValueError("n_levels must be >= 1")
     R = int(np.prod(rank_grid))
-    e2r = partition_elements(mesh, rank_grid)
-    graphs0 = from_element_partition(mesh, e2r, R)
+    if node2part is None:
+        e2r = partition_elements(mesh, rank_grid)
+        graphs0 = from_element_partition(mesh, e2r, R)
+    else:
+        node2part = np.asarray(node2part, dtype=np.int64)
+        graphs0 = from_edge_partition(
+            mesh.n_nodes, undirected_to_directed(mesh_graph_edges(mesh)), R,
+            node2part=node2part)
+        # centroid rank = majority rank over the element's GLL nodes
+        e2r = np.array([
+            np.bincount(node2part[mesh.elem_nodes[el]], minlength=R).argmax()
+            for el in range(mesh.n_elem)], dtype=np.int64)
     pg0 = pack(graphs0, mesh.n_nodes, pad_to=pad_to)
 
     levels = [pg0]

@@ -57,6 +57,7 @@ from __future__ import annotations
 import functools
 from typing import Callable, Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -72,7 +73,7 @@ __all__ = [
     "XLA", "FUSED", "BLOCKING", "OVERLAP", "FP32", "BF16", "PRECISIONS",
     "init_nmp_layer", "edge_update_aggregate", "edge_update_aggregate_part",
     "node_update", "nmp_layer", "multilevel_vcycle", "restrict_aggregate",
-    "prolong_aggregate",
+    "prolong_aggregate", "autotune_schedule", "interior_frac",
 ]
 
 
@@ -439,3 +440,101 @@ def multilevel_vcycle(
         up = sync(up, lvl - 1, gf)
         states[lvl - 1] = (states[lvl - 1] + up) * gf["node_mask"][..., None]
     return states[0]
+
+
+# ---------------------------------------------------------------------------
+# measured schedule autotuning (NMPPlan.autotune / schedule="auto")
+# ---------------------------------------------------------------------------
+
+# (graph-hash, R, backend, precision, interpret, halo mode, measured?) ->
+# winning schedule, for the process lifetime.  One measurement per distinct
+# (graph, rank-count, policy) — the same memoize-the-expensive-probe shape
+# as the fused kernels' block-size autotune table.
+_SCHEDULE_CACHE: dict = {}
+
+
+def _graph_schedule_key(g0: dict) -> tuple:
+    import hashlib
+    h = hashlib.sha1()
+    for k in ("edge_src", "edge_dst", "node_mask"):
+        a = np.asarray(g0[k])
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return (h.hexdigest(),)
+
+
+def _measure_best_schedule(plan: NMPPlan, g0: dict, hidden: int,
+                           iters: int) -> str:
+    """Time one jitted stacked NMP layer per schedule; return the winner.
+
+    Uses the stacked single-device evaluator (``reference._smooth_stacked``)
+    — the same proxy ``benchmarks/halo_overlap.py`` reports — with random
+    params/features at the model's hidden width, min-of-``iters`` timing.
+    """
+    import time as _time
+    from repro.core.reference import _smooth_stacked
+
+    R, n_pad = np.asarray(g0["node_mask"]).shape
+    e_pad = np.asarray(g0["edge_mask"]).shape[-1]
+    params = init_nmp_layer(jax.random.PRNGKey(0), hidden, 2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(R, n_pad, hidden)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(R, e_pad, hidden)), jnp.float32)
+
+    best, best_t = BLOCKING, float("inf")
+    for sched in (BLOCKING, OVERLAP):
+        cand = plan.replace(schedule=sched)
+        fn = jax.jit(lambda p, xx, ee, _c=cand:
+                     _smooth_stacked(p, xx, ee, g0, _c))
+        jax.block_until_ready(fn(params, x, e))        # compile + warm
+        t = float("inf")
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(params, x, e))
+            t = min(t, _time.perf_counter() - t0)
+        if t < best_t:
+            best, best_t = sched, t
+    return best
+
+
+def interior_frac(g0: dict) -> float:
+    """Fraction of real edges in the interior side of the split (edges whose
+    aggregate rows the halo exchange never touches)."""
+    if "edge_int_valid" not in g0:
+        raise ValueError("graph has no interior/boundary split — build it "
+                         "with a plan whose schedule is 'overlap' or 'auto'")
+    n_int = float(np.asarray(g0["edge_int_valid"]).sum())
+    n_bnd = float(np.asarray(g0["edge_bnd_valid"]).sum())
+    return n_int / max(n_int + n_bnd, 1.0)
+
+
+def autotune_schedule(plan: NMPPlan, graph, measure: bool | None = None,
+                      hidden: int = 8, iters: int = 20) -> NMPPlan:
+    """Resolve ``schedule="auto"`` against a stacked graph (see
+    :meth:`NMPPlan.autotune`, the public entry point)."""
+    graph = as_graph(graph)
+    g0 = graph.levels[0]
+    nm = np.asarray(g0["node_mask"])
+    if nm.ndim != 2:
+        raise ValueError("autotune needs the stacked graph (leading rank "
+                         f"axis); got node_mask of ndim {nm.ndim}")
+    R = nm.shape[0]
+    if R <= 1 or plan.halo.mode == "none":
+        # no exchange to hide -> blocking trivially optimal
+        return plan.replace(schedule=BLOCKING)
+    if measure is None:
+        import os
+        measure = os.environ.get("REPRO_SCHEDULE_AUTOTUNE", "1") != "0"
+    key = (_graph_schedule_key(g0), R, plan.backend, plan.precision,
+           plan.interpret, plan.halo.mode, bool(measure), hidden)
+    sched = _SCHEDULE_CACHE.get(key)
+    if sched is None:
+        if measure:
+            sched = _measure_best_schedule(plan, g0, hidden, iters)
+        else:
+            # structural fallback: once the exchange-independent share of
+            # the edge work drops under half, there is not enough interior
+            # compute to pay blocking's serialization
+            sched = OVERLAP if interior_frac(g0) < 0.5 else BLOCKING
+        _SCHEDULE_CACHE[key] = sched
+    return plan.replace(schedule=sched)

@@ -50,6 +50,8 @@ XLA = "xla"
 FUSED = "fused"
 BLOCKING = "blocking"
 OVERLAP = "overlap"
+AUTO = "auto"                    # resolved to blocking|overlap by autotune()
+SCHEDULES = (BLOCKING, OVERLAP, AUTO)
 FP32 = "fp32"
 BF16 = "bf16"
 PRECISIONS = (FP32, BF16)
@@ -83,6 +85,9 @@ class NMPPlan:
         if self.precision not in PRECISIONS:
             raise ValueError(f"unknown precision {self.precision!r}; "
                              f"expected one of {PRECISIONS}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             f"expected one of {SCHEDULES}")
         object.__setattr__(self, "coarse_halos", tuple(self.coarse_halos))
 
     def replace(self, **kw) -> "NMPPlan":
@@ -96,8 +101,12 @@ class NMPPlan:
 
     @property
     def wants_split(self) -> bool:
-        """Whether the graph must carry the interior/boundary edge split."""
-        return self.schedule == OVERLAP
+        """Whether the graph must carry the interior/boundary edge split.
+
+        ``auto`` also wants it: the graph must support whichever schedule
+        the tuner picks (blocking simply ignores the split arrays).
+        """
+        return self.schedule in (OVERLAP, AUTO)
 
     def halos(self, n_levels: int) -> Tuple[HaloSpec, ...]:
         """Per-level exchange specs for an ``n_levels``-deep hierarchy.
@@ -139,6 +148,28 @@ class NMPPlan:
         bn, be = pick_block_sizes(hidden, dtype)
         return self.replace(block_n=bn, block_e=be)
 
+    def autotune(self, graph, measure: bool | None = None,
+                 hidden: int = 8, iters: int = 20) -> "NMPPlan":
+        """Resolve ``schedule="auto"`` by measuring blocking vs overlap.
+
+        Times one jitted stacked NMP layer per candidate schedule on
+        ``graph`` (a stacked :class:`ShardedGraph` — the same proxy
+        ``benchmarks/halo_overlap.py`` reports) and returns a plan with the
+        measured winner, cached per (graph-hash, rank-count, policy) for
+        the process lifetime so repeated builds pay nothing.  ``hidden``
+        should match the model width (compute/communication balance moves
+        the crossover).  With ``measure=False`` — or env var
+        ``REPRO_SCHEDULE_AUTOTUNE=0`` — falls back to the structural
+        ``interior_frac`` heuristic (< 0.5 interior work -> overlap).
+        Plans with a fixed schedule are returned unchanged.  Mirrors
+        :meth:`autotune_blocks`.
+        """
+        if self.schedule != AUTO:
+            return self
+        from repro.core.consistent_mp import autotune_schedule
+        return autotune_schedule(self, graph, measure=measure,
+                                 hidden=hidden, iters=iters)
+
 
 _NMP_IMPLS: Dict[Tuple[str, str], Callable] = {}
 
@@ -165,6 +196,11 @@ def nmp_impl(plan: NMPPlan) -> Callable:
     try:
         return _NMP_IMPLS[(plan.backend, plan.schedule)]
     except KeyError:
+        if plan.schedule == AUTO:
+            raise ValueError(
+                "schedule='auto' must be resolved before layer dispatch: "
+                "call plan.autotune(graph) after ShardedGraph.build (the "
+                "training loop does this for you)") from None
         known = sorted(_NMP_IMPLS)
         raise ValueError(
             f"no NMP implementation registered for backend={plan.backend!r}, "

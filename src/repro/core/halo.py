@@ -177,6 +177,15 @@ def halo_sync_reference(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
     Emulates the A2A exchange with plain gathers (no collectives); used to run
     consistency tests fast on one device and as the vmap-style reference the
     shard_map path is checked against.
+
+    The synchronization sums contributions in CANONICAL ascending-rank order
+    (own partial spliced in at its rank position, zero base), so every
+    coincident copy of a node evaluates the identical floating-point
+    expression: copy agreement is bitwise-exact for ANY copy multiplicity,
+    which ``BENCH_partition.json`` asserts as ``max_abs_err == 0.0``.  (The
+    production ``halo_sync`` seeds the scatter-add with the local aggregate
+    instead — same math, own-first grouping — so 3+-way copies may differ
+    from this oracle in the last ulp; tests compare with tolerances.)
     """
     R = a_stacked.shape[0]
     send_idx = graph["a2a_send_idx"]            # [R, R, Bf]
@@ -184,10 +193,18 @@ def halo_sync_reference(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
     recv_idx = graph["a2a_recv_idx"]
     recv_mask = graph["a2a_recv_mask"]
     neutral = 0.0 if combine == "sum" else _NEG
-    out = a_stacked
+    out = (jnp.zeros_like(a_stacked) if combine == "sum"
+           else jnp.full_like(a_stacked, _NEG))
     batched = a_stacked.ndim == 4               # [R, B, N, F]
     for r in range(R):
         for s in range(R):
+            if s == r:
+                # own partial, at its canonical rank position (full rows:
+                # 0 + x is exact, so un-shared rows pass through bitwise)
+                new_r = (out[r] + a_stacked[r] if combine == "sum"
+                         else jnp.maximum(out[r], a_stacked[r]))
+                out = out.at[r].set(new_r)
+                continue
             # buffer sent by rank s to rank r
             idx_s = send_idx[s, r]
             m_s = send_mask[s, r][..., None]

@@ -615,15 +615,53 @@ def build_2d_halo_rounds(graphs: List[RankGraph], grid: Tuple[int, int],
 # convenience front doors
 # ---------------------------------------------------------------------------
 
-def partition_mesh(mesh: SEMMesh, rank_grid: Sequence[int], pad_to: int = 8) -> PartitionedGraphs:
+def partition_mesh(mesh: SEMMesh, rank_grid: Sequence[int], pad_to: int = 8,
+                   method: str = "block") -> PartitionedGraphs:
+    """Partition an SEM mesh onto ``prod(rank_grid)`` ranks.
+
+    ``method="block"`` is the NekRS-style element-block decomposition along
+    the rank grid (d_ij > 1 coincident GLL copies); ``method="spectral"``
+    runs recursive spectral bisection + KL refinement on the mesh graph
+    (``repro.core.partition_quality``) and builds a vertex-cut edge
+    partition (d_ij == 1).  Consistency (Eqs. 2, 3) holds either way — the
+    choice only moves halo volume and balance.
+    """
     R = int(np.prod(rank_grid))
-    e2r = partition_elements(mesh, rank_grid)
-    return pack(from_element_partition(mesh, e2r, R), mesh.n_nodes, pad_to=pad_to)
+    if method == "block":
+        e2r = partition_elements(mesh, rank_grid)
+        return pack(from_element_partition(mesh, e2r, R), mesh.n_nodes,
+                    pad_to=pad_to)
+    if method == "spectral":
+        from repro.core.mesh_gen import mesh_graph_edges
+        from repro.core.partition_quality import mesh_node2part
+        node2part = mesh_node2part(mesh, R)
+        directed = undirected_to_directed(mesh_graph_edges(mesh))
+        return pack(from_edge_partition(mesh.n_nodes, directed, R,
+                                        node2part=node2part),
+                    mesh.n_nodes, pad_to=pad_to)
+    raise ValueError(f"unknown partition method {method!r} "
+                     "(expected 'block' or 'spectral')")
 
 
 def partition_graph(n_nodes: int, directed_edges: np.ndarray, R: int,
-                    pad_to: int = 8, assign: str = "dst") -> PartitionedGraphs:
-    return pack(from_edge_partition(n_nodes, directed_edges, R, assign=assign),
+                    pad_to: int = 8, assign: str = "dst",
+                    method: str = "block",
+                    node2part: np.ndarray = None) -> PartitionedGraphs:
+    """Partition an arbitrary directed graph onto R ranks.
+
+    ``node2part`` (any [N] int array, ranks may even be empty) wins over
+    ``method``; otherwise ``method="block"`` keeps the contiguous index
+    split and ``method="spectral"`` computes a node2part with
+    :func:`repro.core.partition_quality.spectral_node2part`.
+    """
+    if node2part is None and method == "spectral":
+        from repro.core.partition_quality import spectral_node2part
+        node2part = spectral_node2part(n_nodes, directed_edges, R)
+    elif node2part is None and method != "block":
+        raise ValueError(f"unknown partition method {method!r} "
+                         "(expected 'block' or 'spectral')")
+    return pack(from_edge_partition(n_nodes, directed_edges, R,
+                                    node2part=node2part, assign=assign),
                 n_nodes, pad_to=pad_to)
 
 

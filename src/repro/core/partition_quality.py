@@ -1,0 +1,290 @@
+"""Graph-aware partitioning + partition quality metrics (dependency-free).
+
+The paper's consistency guarantee (Eqs. 2, 3) makes the partition a pure
+performance knob: ANY ``node2part`` fed to
+:func:`repro.core.partition.from_edge_partition` yields bitwise-identical
+training, so the only thing a better partitioner changes is how much halo
+traffic and replica padding each rank carries.  The block (NekRS-style)
+decomposition in :func:`repro.core.partition.partition_elements` is optimal
+for isotropic boxes but maximizes halo volume on stretched or unstructured
+meshes; this module provides the classic alternative — recursive spectral
+bisection with greedy Kernighan–Lin boundary refinement — implemented with
+nothing but numpy (no scipy/metis: power iteration recovers the Fiedler
+vector).
+
+Entry points
+------------
+* :func:`spectral_node2part` — node -> part for an arbitrary graph.
+* :func:`mesh_node2part` — same, from an ``SEMMesh`` (uses the mesh graph).
+* :func:`partition_quality` — halo volume / edge cut / boundary fraction /
+  imbalance for a built :class:`~repro.core.partition.PartitionedGraphs`,
+  the numbers reported in ``BENCH_partition.json``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "spectral_node2part",
+    "mesh_node2part",
+    "partition_quality",
+]
+
+
+# --------------------------------------------------------------------------
+# graph helpers
+# --------------------------------------------------------------------------
+
+def _undirected_unique(edges: np.ndarray, n_nodes: int) -> np.ndarray:
+    """Canonicalize an edge list: [m, 2] unique undirected pairs, no loops."""
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if e.size == 0:
+        return e.reshape(0, 2)
+    if e.min() < 0 or e.max() >= n_nodes:
+        raise ValueError(f"edge endpoints outside [0, {n_nodes})")
+    e = e[e[:, 0] != e[:, 1]]
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    return np.unique(np.stack([lo, hi], axis=1), axis=0)
+
+
+def _csr(n: int, und: np.ndarray):
+    """Symmetric adjacency in CSR form (ptr, nbr) from undirected edges."""
+    src = np.concatenate([und[:, 0], und[:, 1]])
+    dst = np.concatenate([und[:, 1], und[:, 0]])
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src, minlength=n), out=ptr[1:])
+    return ptr, dst
+
+
+def _fiedler_vector(n: int, und: np.ndarray, rng: np.random.Generator,
+                    iters: int = 1000) -> np.ndarray:
+    """Approximate Fiedler vector (2nd-smallest Laplacian eigenvector).
+
+    Power iteration on the shifted operator ``M = c I - L`` (c = 2 * max
+    degree, a Gershgorin bound, so M is PSD and L's smallest eigenvalues
+    become M's largest), deflating the constant vector — L's trivial
+    kernel — every step.  O(E) per iteration via bincount scatter-adds;
+    stops early once the iterate stabilizes (anisotropic meshes have small
+    spectral gaps, so the cap must be generous — ``iters`` bounds it).
+    """
+    v = rng.standard_normal(n)
+    v -= v.mean()
+    if und.size == 0:
+        return v
+    src = np.concatenate([und[:, 0], und[:, 1]])
+    dst = np.concatenate([und[:, 1], und[:, 0]])
+    deg = np.bincount(src, minlength=n).astype(np.float64)
+    c = 2.0 * max(float(deg.max()), 1.0)
+    v /= np.linalg.norm(v)
+    prev = v
+    for it in range(iters):
+        av = np.bincount(src, weights=v[dst], minlength=n)
+        v = (c - deg) * v + av            # M v = c v - (deg * v - A v)
+        v -= v.mean()                     # deflate the constant eigenvector
+        norm = np.linalg.norm(v)
+        if norm < 1e-30:                  # degenerate start: re-seed
+            v = rng.standard_normal(n)
+            v -= v.mean()
+            v /= np.linalg.norm(v)
+            continue
+        v /= norm
+        if it % 10 == 9:
+            # sign-aligned change between checkpoints
+            if min(np.abs(v - prev).max(), np.abs(v + prev).max()) < 1e-9:
+                break
+            prev = v
+    return v
+
+
+def _kl_refine(n: int, und: np.ndarray, left: np.ndarray, target_left: int,
+               balance_tol: float, passes: int) -> np.ndarray:
+    """Greedy Kernighan–Lin boundary refinement of a bisection.
+
+    Repeatedly moves positive-gain boundary nodes across the cut (gain =
+    external minus internal degree, recomputed at move time so earlier
+    moves in the same pass are accounted for), subject to a balance slack
+    of ``max(1, balance_tol * n)`` nodes around the target split.
+    """
+    left = left.copy()
+    if und.size == 0 or n <= 2:
+        return left
+    ptr, nbr = _csr(n, und)
+    slack = max(1, int(balance_tol * n))
+    src = np.concatenate([und[:, 0], und[:, 1]])
+    dst = np.concatenate([und[:, 1], und[:, 0]])
+    for _ in range(passes):
+        cross = left[src] != left[dst]
+        gain0 = (np.bincount(src[cross], minlength=n)
+                 - np.bincount(src[~cross], minlength=n))
+        cand = np.nonzero(gain0 > 0)[0]
+        if cand.size == 0:
+            break
+        cand = cand[np.argsort(-gain0[cand], kind="stable")]
+        n_left = int(left.sum())
+        moved = 0
+        for i in cand:
+            if left[i]:
+                if n_left - 1 < target_left - slack:
+                    continue
+            elif n_left + 1 > target_left + slack:
+                continue
+            nb = nbr[ptr[i]:ptr[i + 1]]
+            g = int((left[nb] != left[i]).sum()) - int((left[nb] == left[i]).sum())
+            if g <= 0:
+                continue
+            left[i] = not left[i]
+            n_left += 1 if left[i] else -1
+            moved += 1
+        if moved == 0:
+            break
+    return left
+
+
+def _bisect(nodes: np.ndarray, und: np.ndarray, part_lo: int, k: int,
+            out: np.ndarray, rng: np.random.Generator, balance_tol: float,
+            power_iters: int, kl_passes: int) -> None:
+    """Recursively split ``nodes`` (global ids) into parts [lo, lo+k)."""
+    if k == 1 or nodes.size == 0:
+        out[nodes] = part_lo
+        return
+    k_left = k // 2
+    k_right = k - k_left
+    n = nodes.size
+    # node budget proportional to the sub-part counts (handles odd k)
+    n_left = min(max(int(round(n * k_left / k)), 0), n)
+    v = _fiedler_vector(n, und, rng, power_iters)
+    order = np.argsort(v, kind="stable")
+    left = np.zeros(n, dtype=bool)
+    left[order[:n_left]] = True
+    left = _kl_refine(n, und, left, n_left, balance_tol, kl_passes)
+    for side, lo, kk in ((left, part_lo, k_left),
+                         (~left, part_lo + k_left, k_right)):
+        sub = np.nonzero(side)[0]
+        lut = np.full(n, -1, dtype=np.int64)
+        lut[sub] = np.arange(sub.size)
+        if und.size:
+            keep = side[und[:, 0]] & side[und[:, 1]]
+            sub_edges = lut[und[keep]]
+        else:
+            sub_edges = und
+        _bisect(nodes[sub], sub_edges, lo, kk, out, rng, balance_tol,
+                power_iters, kl_passes)
+
+
+# --------------------------------------------------------------------------
+# public partitioners
+# --------------------------------------------------------------------------
+
+def spectral_node2part(
+    n_nodes: int,
+    edges: np.ndarray,
+    n_parts: int,
+    *,
+    balance_tol: float = 0.05,
+    power_iters: int = 1000,
+    kl_passes: int = 4,
+    seed: int = 0,
+) -> np.ndarray:
+    """Recursive spectral bisection + KL refinement -> ``node2part`` [N].
+
+    ``edges`` is any [m, 2] edge list (directed or undirected; it is
+    symmetrized and deduplicated).  Handles non-power-of-two ``n_parts`` by
+    splitting part budgets floor/ceil at every level.  Deterministic for a
+    fixed ``seed``.  The result plugs straight into
+    :func:`repro.core.partition.from_edge_partition` — consistency is
+    guaranteed by construction, so this only moves performance.
+    """
+    if n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    out = np.zeros(n_nodes, dtype=np.int64)
+    if n_parts == 1 or n_nodes == 0:
+        return out
+    und = _undirected_unique(edges, n_nodes)
+    rng = np.random.default_rng(seed)
+    _bisect(np.arange(n_nodes, dtype=np.int64), und, 0, int(n_parts), out,
+            rng, balance_tol, power_iters, kl_passes)
+    return out
+
+
+def mesh_node2part(mesh, n_parts: int, **kwargs) -> np.ndarray:
+    """Spectral ``node2part`` for an ``SEMMesh`` (GLL-node mesh graph)."""
+    from repro.core.mesh_gen import mesh_graph_edges
+    return spectral_node2part(mesh.n_nodes, mesh_graph_edges(mesh), n_parts,
+                              **kwargs)
+
+
+# --------------------------------------------------------------------------
+# quality metrics
+# --------------------------------------------------------------------------
+
+def partition_quality(pg) -> dict:
+    """Structural quality metrics for a built ``PartitionedGraphs``.
+
+    Returns (all plain python numbers):
+      * ``halo_volume``       — total replica count: sum over ranks of real
+        (non-padding) nodes, minus ``n_global``.  This is exactly the number
+        of node copies the halo exchange must fill every layer.
+      * ``replication``       — mean copies per global node (>= 1.0).
+      * ``edge_cut``          — undirected global edges whose endpoints'
+        primary (lowest-holding) ranks differ.
+      * ``boundary_frac_mean`` / ``boundary_frac_max`` — per-rank fraction
+        of real nodes that are shared (``node_inv_mult < 1``), averaged /
+        maxed over non-empty ranks.
+      * ``imbalance``         — max over ranks of real nodes, divided by the
+        ideal ``n_global / R`` (1.0 = perfectly balanced).
+    """
+    R = pg.R
+    node_mask = np.asarray(pg.node_mask)
+    inv_mult = np.asarray(pg.node_inv_mult)
+    gids = np.asarray(pg.global_ids)
+    n_global = int(pg.n_global)
+
+    real = node_mask.sum(axis=1).astype(np.int64)          # [R]
+    total_copies = int(real.sum())
+    halo_volume = total_copies - n_global
+
+    shared = ((node_mask > 0) & (inv_mult < 1.0)).sum(axis=1)
+    nonempty = real > 0
+    frac = np.zeros(R, dtype=np.float64)
+    frac[nonempty] = shared[nonempty] / real[nonempty]
+
+    # primary rank = lowest rank holding each global node (matches the
+    # "first holder owns" convention used by coarsen._primary_ranks)
+    primary = np.full(n_global, -1, dtype=np.int64)
+    for r in range(R - 1, -1, -1):
+        m = node_mask[r] > 0
+        primary[gids[r][m]] = r
+
+    # unique undirected global edges across all ranks
+    e_src = np.asarray(pg.edge_src)
+    e_dst = np.asarray(pg.edge_dst)
+    e_mask = np.asarray(pg.edge_mask)
+    pairs = []
+    for r in range(R):
+        m = e_mask[r] > 0
+        if not m.any():
+            continue
+        gs = gids[r][e_src[r][m]]
+        gd = gids[r][e_dst[r][m]]
+        pairs.append(np.stack([np.minimum(gs, gd), np.maximum(gs, gd)], 1))
+    if pairs:
+        und = np.unique(np.concatenate(pairs, axis=0), axis=0)
+        und = und[und[:, 0] != und[:, 1]]
+        edge_cut = int((primary[und[:, 0]] != primary[und[:, 1]]).sum())
+    else:
+        edge_cut = 0
+
+    ideal = max(n_global / max(R, 1), 1.0)
+    return {
+        "halo_volume": int(halo_volume),
+        "replication": float(total_copies / max(n_global, 1)),
+        "edge_cut": edge_cut,
+        "boundary_frac_mean": float(frac[nonempty].mean()) if nonempty.any() else 0.0,
+        "boundary_frac_max": float(frac.max()) if R else 0.0,
+        "imbalance": float(real.max() / ideal) if R else 1.0,
+        "max_rank_nodes": int(real.max()) if R else 0,
+        "empty_ranks": int((~nonempty).sum()),
+    }

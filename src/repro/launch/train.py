@@ -44,9 +44,18 @@ def main():
     ap.add_argument("--mp-interpret", action="store_true",
                     help="run the fused kernels via the Pallas interpreter")
     ap.add_argument("--mp-schedule", default="blocking",
-                    choices=["blocking", "overlap"],
+                    choices=["blocking", "overlap", "auto"],
                     help="halo/compute schedule (overlap hides the exchange "
-                         "behind interior-edge work)")
+                         "behind interior-edge work; auto measures both on "
+                         "this graph x rank count and commits to the winner)")
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"],
+                    help="mesh decomposition: block = NekRS-style element "
+                         "blocks along --ranks; spectral = recursive "
+                         "spectral bisection + KL refinement "
+                         "(repro.core.partition_quality) — lower halo "
+                         "volume on stretched/unstructured meshes, "
+                         "identical results either way")
     ap.add_argument("--mp-precision", default="fp32",
                     choices=["fp32", "bf16"],
                     help="edge-MLP matmul precision: bf16 runs the matmuls "
@@ -87,16 +96,22 @@ def main():
         cfg = dataclasses.replace(cfg, n_levels=args.levels,
                                   coarse_mp_layers=args.coarse_mp_layers,
                                   coarse_edge_in=sem.dim + 1)
-        hierarchy = build_hierarchy(sem, tuple(args.ranks), args.levels)
+        node2part = None
+        if args.partitioner == "spectral":
+            from repro.core.partition_quality import mesh_node2part
+            node2part = mesh_node2part(sem, R)
+        hierarchy = build_hierarchy(sem, tuple(args.ranks), args.levels,
+                                    node2part=node2part)
         pg = hierarchy.levels[0]
         sizes = " -> ".join(str(s) for s in hierarchy.level_sizes())
         print(f"multilevel hierarchy: {sizes} nodes per level")
     else:
-        pg = partition_mesh(sem, tuple(args.ranks))
+        pg = partition_mesh(sem, tuple(args.ranks), method=args.partitioner)
     mesh_dev = make_mesh((args.data_parallel, R), ("data", "graph"))
     print(f"mesh: {sem.n_elem} elems p={args.order} ({sem.n_nodes} nodes); "
           f"R={R} sub-graphs x DP={args.data_parallel}; halo={args.halo}; "
-          f"levels={args.levels}; rollout K={args.rollout_steps}")
+          f"partitioner={args.partitioner}; levels={args.levels}; "
+          f"rollout K={args.rollout_steps}")
 
     policy = NMPPlan(backend=args.mp_backend, interpret=args.mp_interpret,
                      schedule=args.mp_schedule, precision=args.mp_precision)
@@ -106,6 +121,8 @@ def main():
                        pushforward_noise=args.pushforward_noise)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
                                 hierarchy=hierarchy)
+    if args.mp_schedule == "auto":
+        print(f"schedule auto -> {hist['schedule']}")
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")
 

@@ -50,11 +50,19 @@ class TrainConfig:
     log_every: int = 20
     seed: int = 0
     # NMP execution policy (halo specs are filled in from the partition by
-    # train_consistent_gnn); see repro.core.graph_state.NMPPlan
+    # train_consistent_gnn; schedule="auto" is resolved against the built
+    # graph via NMPPlan.autotune); see repro.core.graph_state.NMPPlan
     plan: NMPPlan = NMPPlan()
     # --- autoregressive rollout training (repro.train.rollout) ---
     rollout_steps: int = 1       # K > 1 scans the model over its predictions
     pushforward_noise: float = 0.0  # stddev of the stop-grad step-1 noise
+    # curriculum: per-stage K values, e.g. (1, 2, 4) splits n_steps into
+    # three even stages of increasing rollout depth (overrides
+    # rollout_steps); step fns are built once per distinct K
+    rollout_curriculum: tuple = ()
+    # anneal pushforward noise linearly from pushforward_noise to this
+    # value over the run (None = constant)
+    pushforward_noise_final: Optional[float] = None
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -100,6 +108,9 @@ def train_consistent_gnn(
     graph = ShardedGraph.build(
         pg, sem_mesh.coords, plan,
         hierarchy=hierarchy if cfg.n_levels > 1 else None)
+    # schedule="auto": measure blocking vs overlap on this (graph, R) once
+    # and commit to the winner (no-op for fixed schedules)
+    plan = plan.autotune(graph, hidden=cfg.hidden)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
     params = init_gnn(jax.random.PRNGKey(tcfg.seed), cfg)
@@ -115,15 +126,34 @@ def train_consistent_gnn(
     # the static graph is loop-invariant: place it once, not per step
     gs = shard_graph(mesh_dev, graph)
     feat_sh = NamedSharding(mesh_dev, P(("data",), "graph", None, None))
-    if tcfg.rollout_steps > 1:
-        _, rollout_grad = make_rollout_step_fns(
-            mesh_dev, cfg, plan, tcfg.rollout_steps)
-        batch_fn = make_tgv_rollout_batch_fn(
-            pg, sem_mesh, tcfg.batch, tcfg.rollout_steps,
-            noise_scale=tcfg.pushforward_noise, seed=tcfg.seed)
+    stages = tuple(tcfg.rollout_curriculum)
+    if stages or tcfg.rollout_steps > 1:
+        # rollout path; a curriculum splits n_steps into even stages of
+        # increasing K (the 1 -> 2 -> 4 schedule of the pushforward line of
+        # work), with step fns / batch fns built once per distinct K
+        stages = stages or (tcfg.rollout_steps,)
+        stage_len = max(1, -(-tcfg.n_steps // len(stages)))
+        noise_scale = tcfg.pushforward_noise
+        if tcfg.pushforward_noise_final is not None:
+            n0 = tcfg.pushforward_noise
+            n1 = tcfg.pushforward_noise_final
+            denom = max(tcfg.n_steps - 1, 1)
+            noise_scale = lambda s: n0 + (n1 - n0) * (s / denom)  # noqa: E731
         seq_sh = NamedSharding(mesh_dev, P(("data",), None, "graph", None, None))
+        fns_by_k = {}
+
+        def k_for_step(step: int) -> int:
+            return stages[min(step // stage_len, len(stages) - 1)]
 
         def grad_for_step(params, step):
+            k = k_for_step(step)
+            if k not in fns_by_k:
+                _, rollout_grad = make_rollout_step_fns(mesh_dev, cfg, plan, k)
+                bf = make_tgv_rollout_batch_fn(
+                    pg, sem_mesh, tcfg.batch, k,
+                    noise_scale=noise_scale, seed=tcfg.seed)
+                fns_by_k[k] = (rollout_grad, bf)
+            rollout_grad, batch_fn = fns_by_k[k]
             x0, targets, noise = batch_fn(step)
             xs = jax.device_put(jnp.asarray(x0), feat_sh)
             ts = jax.device_put(jnp.asarray(targets), seq_sh)
@@ -133,17 +163,21 @@ def train_consistent_gnn(
         _, _, grad_step, _ = make_gnn_step_fns(mesh_dev, cfg, plan)
         batch_fn = make_tgv_batch_fn(pg, sem_mesh, tcfg.batch)
 
+        def k_for_step(step: int) -> int:
+            return 1
+
         def grad_for_step(params, step):
             xs = jax.device_put(jnp.asarray(batch_fn(step)), feat_sh)
             return grad_step(params, xs, xs, gs)
 
-    history = {"losses": []}
+    history = {"losses": [], "rollout_k": [], "schedule": plan.schedule}
     for step in range(tcfg.n_steps):
         monitor.start_step()
         loss, grads = grad_for_step(params, step)
         params, opt_state, _ = update(params, opt_state, loss, grads)
         monitor.end_step(step)
         history["losses"].append(float(loss))
+        history["rollout_k"].append(k_for_step(step))
         if saver and (step % tcfg.ckpt_every == 0 or step == tcfg.n_steps - 1):
             saver.save(step, {"params": params, "opt": opt_state})
     if saver:

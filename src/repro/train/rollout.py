@@ -131,7 +131,7 @@ def make_rollout_step_fns(
 
 def make_tgv_rollout_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh,
                               batch: int, rollout_steps: int,
-                              dt: float = 0.05, noise_scale: float = 0.0,
+                              dt: float = 0.05, noise_scale=0.0,
                               seed: int = 0):
     """Deterministic Taylor-Green rollout batches keyed by step (replayable).
 
@@ -140,8 +140,12 @@ def make_tgv_rollout_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh,
     noise is drawn on the GLOBAL node field (then gathered per rank), so
     coincident copies receive identical perturbations — a per-copy draw
     would break the 1-rank == R-rank guarantee by construction.
+
+    ``noise_scale`` is a float or a ``step -> float`` callable (annealing
+    schedules, see ``TrainConfig.pushforward_noise_final``).
     """
     def batch_fn(step: int):
+        scale = noise_scale(step) if callable(noise_scale) else noise_scale
         x0s, tgts, noises = [], [], []
         for b in range(batch):
             t = (step * batch + b) * dt % 2.0
@@ -156,7 +160,7 @@ def make_tgv_rollout_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh,
                 np.uint64(seed) + np.uint64(step * batch + b))
             nz = rng.normal(size=(mesh_sem.coords.shape[0],
                                   x0s[-1].shape[-1])).astype(np.float32)
-            noises.append(noise_scale * gather_node_features(pg, nz))
+            noises.append(scale * gather_node_features(pg, nz))
         return (np.stack(x0s), np.stack(tgts),
                 np.stack(noises).astype(np.float32))
     return batch_fn

@@ -13,7 +13,10 @@ Respects an externally-forced ``XLA_FLAGS=--xla_force_host_platform_
 device_count={2,4,8}`` (the CI consistency-matrix job) and scales the rank
 grids to the device count; standalone invocations default to 8 devices.
 ``--schedule`` selects the halo/compute schedule (the overlap schedule must
-reproduce the same losses/grads bit-for-bit-ish).
+reproduce the same losses/grads bit-for-bit-ish); ``--partitioner`` selects
+how the mesh is decomposed (block element grids vs spectral bisection) —
+partitioning is a pure performance knob under Eq. 2/3, so every assertion
+must hold identically for either method.
 
 Exit code 0 = all assertions passed.
 """
@@ -64,6 +67,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedule", default="blocking",
                     choices=["blocking", "overlap"])
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"])
     args = ap.parse_args()
     n_dev = len(jax.devices())
     assert n_dev in CASES, f"need 2, 4 or 8 host devices, got {n_dev}"
@@ -79,12 +84,13 @@ def main():
     l1, _, g1 = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
                                       cfg.node_out)
     l1 = float(l1)
-    print(f"R=1 loss {l1:.8f} (schedule={args.schedule}, {n_dev} devices)")
+    print(f"R=1 loss {l1:.8f} (schedule={args.schedule}, "
+          f"partitioner={args.partitioner}, {n_dev} devices)")
 
     results = {}
     for rank_grid, data_sz in CASES[n_dev]:
         R = int(np.prod(rank_grid))
-        pg = partition_mesh(sem_mesh, rank_grid)
+        pg = partition_mesh(sem_mesh, rank_grid, method=args.partitioner)
         mesh_dev = jax.make_mesh((data_sz, R), ("data", "graph"))
         for mode in (A2A, NEIGHBOR, NONE):
             loss, grads = run_case(mesh_dev, pg, sem_mesh, params, cfg, mode,
@@ -113,7 +119,7 @@ def main():
     # bitwise identical (the compression actually engaged) ----
     rank_grid, data_sz = CASES[n_dev][-1]
     R = int(np.prod(rank_grid))
-    pg = partition_mesh(sem_mesh, rank_grid)
+    pg = partition_mesh(sem_mesh, rank_grid, method=args.partitioner)
     mesh_dev = jax.make_mesh((data_sz, R), ("data", "graph"))
     l_comp, _ = run_case(mesh_dev, pg, sem_mesh, params, cfg, NEIGHBOR,
                          batch=data_sz, schedule=args.schedule,

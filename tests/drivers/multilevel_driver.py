@@ -8,8 +8,11 @@ parameter gradients against the single-device stacked reference.
 Adapts to however many host devices the caller forces: the CI
 ``consistency-matrix`` job runs it under
 ``XLA_FLAGS=--xla_force_host_platform_device_count={2,4}`` for both
-halo/compute schedules (``--schedule``); standalone invocations default to
-4 devices.  Exit code 0 = all assertions passed.
+halo/compute schedules (``--schedule``); ``--partitioner spectral`` routes
+the level-0 decomposition (and the majority-vote element ownership the
+coarse levels derive from it) through spectral bisection instead of block
+element grids.  Standalone invocations default to 4 devices.  Exit code
+0 = all assertions passed.
 """
 import argparse
 import os
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 from repro.core import (
     A2A, NEIGHBOR, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph,
     box_mesh, build_hierarchy, gather_node_features, init_gnn,
-    taylor_green_velocity,
+    mesh_node2part, taylor_green_velocity,
 )
 from repro.core.distributed import make_gnn_step_fns, shard_inputs
 from repro.core.reference import loss_and_grad_stacked
@@ -34,9 +37,12 @@ N_LEVELS = 3
 GRIDS = {2: [(2, 1, 1)], 4: [(4, 1, 1), (2, 2, 1)], 8: [(4, 2, 1)]}
 
 
-def run_case(sem, cfg, params, x_global, rank_grid, mode, schedule):
+def run_case(sem, cfg, params, x_global, rank_grid, mode, schedule,
+             partitioner="block"):
     R = int(np.prod(rank_grid))
-    ml = build_hierarchy(sem, rank_grid, N_LEVELS)
+    node2part = (mesh_node2part(sem, R) if partitioner == "spectral"
+                 else None)
+    ml = build_hierarchy(sem, rank_grid, N_LEVELS, node2part=node2part)
     pg = ml.levels[0]
     plan = NMPPlan.build(ml, mode, axis="graph", schedule=schedule)
     graph = ShardedGraph.build(pg, sem.coords, plan, hierarchy=ml)
@@ -52,6 +58,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedule", default="blocking",
                     choices=["blocking", "overlap"])
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"])
     args = ap.parse_args()
     n_dev = len(jax.devices())
     assert n_dev in GRIDS, f"need 2, 4 or 8 host devices, got {n_dev}"
@@ -71,13 +79,14 @@ def main():
     l1, _, g1 = loss_and_grad_stacked(params, x1, x1, graph1, plan1,
                                       cfg.node_out)
     l1 = float(l1)
-    print(f"R=1 multilevel ({N_LEVELS} levels, {args.schedule}) loss {l1:.8f}")
+    print(f"R=1 multilevel ({N_LEVELS} levels, {args.schedule}, "
+          f"{args.partitioner}) loss {l1:.8f}")
 
     for rank_grid in GRIDS[n_dev]:
         R = int(np.prod(rank_grid))
         for mode in (A2A, NEIGHBOR):
             loss, grads = run_case(sem, cfg, params, x_global, rank_grid,
-                                   mode, args.schedule)
+                                   mode, args.schedule, args.partitioner)
             dev = abs(loss - l1)
             print(f"R={R} grid={rank_grid} mode={mode:9s} "
                   f"loss={loss:.8f} dev={dev:.2e}")
@@ -90,7 +99,7 @@ def main():
     # without any exchange the partitioned V-cycle must deviate (the
     # restriction halo-sum is load-bearing)
     loss_none, _ = run_case(sem, cfg, params, x_global, GRIDS[n_dev][0],
-                            NONE, args.schedule)
+                            NONE, args.schedule, args.partitioner)
     assert abs(loss_none - l1) > 1e-6, "inconsistent multilevel should deviate"
     print(f"halo none deviates as expected: {loss_none:.8f}")
     print("MULTILEVEL DRIVER PASS")

@@ -6,7 +6,8 @@ production shard_map path — K chained halo-consistent forwards inside one
 asserts 1-rank == R-rank for the rollout loss, the per-step predictions and
 the parameter gradients against the single-device stacked reference
 (``repro.core.reference.rollout_stacked``), for the schedule selected with
-``--schedule``.
+``--schedule`` and the mesh decomposition selected with ``--partitioner``
+(block grids or spectral bisection — either must be consistency-neutral).
 
 Adapts to the forced host-device count ({2,4,8} — the CI
 consistency-matrix job); standalone invocations default to 4 devices.
@@ -60,6 +61,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedule", default="blocking",
                     choices=["blocking", "overlap"])
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"])
     args = ap.parse_args()
     n_dev = len(jax.devices())
     assert n_dev in GRIDS, f"need 2, 4 or 8 host devices, got {n_dev}"
@@ -80,11 +83,12 @@ def main():
     preds1_g = np.stack([scatter_node_outputs(pg1, np.asarray(preds1[k]))
                          for k in range(K)])
     print(f"R=1 K={K} rollout loss {l1:.8f} "
-          f"(schedule={args.schedule}, {n_dev} devices)")
+          f"(schedule={args.schedule}, partitioner={args.partitioner}, "
+          f"{n_dev} devices)")
 
     for rank_grid in GRIDS[n_dev]:
         R = int(np.prod(rank_grid))
-        pg = partition_mesh(sem, rank_grid)
+        pg = partition_mesh(sem, rank_grid, method=args.partitioner)
         for mode in (A2A, NEIGHBOR):
             plan = NMPPlan.build(pg, mode, axis="graph",
                                  schedule=args.schedule)
@@ -116,7 +120,7 @@ def main():
     # the halo's necessity)
     rank_grid = GRIDS[n_dev][0]
     R = int(np.prod(rank_grid))
-    pg = partition_mesh(sem, rank_grid)
+    pg = partition_mesh(sem, rank_grid, method=args.partitioner)
     plan_none = NMPPlan(halo=HaloSpec(mode=NONE), schedule=args.schedule)
     graph = ShardedGraph.build(pg, sem.coords, plan_none)
     x0, tgts = _sequences(pg, sem)

@@ -42,24 +42,29 @@ def _eval(pg, mesh, params, cfg, x_global, mode):
     return float(loss), np.asarray(y), grads
 
 
-def test_eq2_forward_partition_invariance(small_case):
+@pytest.mark.parametrize("method", ["block", "spectral"])
+def test_eq2_forward_partition_invariance(small_case, method):
+    """Eq. 2 holds for both partitioners — how the mesh is decomposed
+    (block element grids vs spectral bisection vertex cuts) is a pure
+    performance knob."""
     mesh, cfg, params, x_global = small_case
     pg1 = partition_mesh(mesh, (1, 1, 1))
     l1, y1, _ = _eval(pg1, mesh, params, cfg, x_global, NONE)
     y1g = scatter_node_outputs(pg1, y1)
     for grid in ((2, 1, 1), (2, 2, 1), (2, 2, 2)):
-        pg = partition_mesh(mesh, grid)
+        pg = partition_mesh(mesh, grid, method=method)
         l, y, _ = _eval(pg, mesh, params, cfg, x_global, A2A)
         yg = scatter_node_outputs(pg, y)
         np.testing.assert_allclose(yg, y1g, rtol=3e-5, atol=2e-6)
         assert abs(l - l1) < 1e-6
 
 
-def test_eq3_gradient_partition_invariance(small_case):
+@pytest.mark.parametrize("method", ["block", "spectral"])
+def test_eq3_gradient_partition_invariance(small_case, method):
     mesh, cfg, params, x_global = small_case
     pg1 = partition_mesh(mesh, (1, 1, 1))
     _, _, g1 = _eval(pg1, mesh, params, cfg, x_global, NONE)
-    pg = partition_mesh(mesh, (2, 2, 1))
+    pg = partition_mesh(mesh, (2, 2, 1), method=method)
     _, _, g4 = _eval(pg, mesh, params, cfg, x_global, A2A)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-3, atol=2e-6)

@@ -1,0 +1,247 @@
+"""Graph-aware partitioning + schedule autotuning (PR 6).
+
+Three groups:
+
+* spectral partitioner properties — determinism, balance, part coverage,
+  and the headline structural win: on a stretched mesh the spectral
+  bisection cuts halo volume vs the block element grid at >= 4 ranks;
+* partition-choice neutrality (Eq. 2/3) — arbitrary ``node2part`` maps
+  (random, heavily imbalanced, with an empty rank) pushed through
+  ``from_edge_partition`` reproduce the 1-rank loss, node outputs and
+  parameter gradients under BOTH halo/compute schedules;
+* ``schedule="auto"`` resolution — R=1 shortcut, structural heuristic
+  fallback, per-(graph, policy) caching of the measured winner, and the
+  actionable error when an unresolved auto plan reaches layer dispatch.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
+    gather_node_features, init_gnn, interior_frac, mesh_node2part,
+    partition_graph, partition_mesh, partition_quality, spectral_node2part,
+)
+from repro.core import consistent_mp
+from repro.core.graph_state import nmp_impl
+from repro.core.mesh_gen import mesh_graph_edges
+from repro.core.partition import scatter_node_outputs
+from repro.core.reference import loss_and_grad_stacked
+
+
+# ---------------------------------------------------------------------------
+# spectral partitioner properties
+# ---------------------------------------------------------------------------
+
+def _stretched_mesh():
+    return box_mesh((8, 2, 2), p=2, lengths=(4.0, 1.0, 1.0))
+
+
+def test_spectral_balance_and_coverage():
+    mesh = _stretched_mesh()
+    edges = mesh_graph_edges(mesh)
+    for R in (2, 3, 4, 8):
+        n2p = spectral_node2part(mesh.n_nodes, edges, R)
+        assert n2p.shape == (mesh.n_nodes,)
+        sizes = np.bincount(n2p, minlength=R)
+        assert (sizes > 0).all(), f"empty part at R={R}: {sizes}"
+        # recursive bisection splits each budget floor/ceil, so every part
+        # stays within the balance slack of the ideal share
+        ideal = mesh.n_nodes / R
+        assert sizes.max() <= np.ceil(ideal * (1 + 0.05)) + R
+
+
+def test_spectral_determinism():
+    mesh = _stretched_mesh()
+    edges = mesh_graph_edges(mesh)
+    a = spectral_node2part(mesh.n_nodes, edges, 4, seed=0)
+    b = spectral_node2part(mesh.n_nodes, edges, 4, seed=0)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_spectral_beats_block_halo_volume_on_stretched_mesh():
+    """The bench-gate criterion, as a test: at >= 4 ranks on an anisotropic
+    mesh, spectral bisection finds the short cuts the fixed block grid
+    can't, strictly reducing halo volume (total replica count)."""
+    mesh = box_mesh((16, 2, 2), p=2, lengths=(8.0, 1.0, 1.0))
+    for grid in ((2, 2, 1), (2, 2, 2)):
+        q_b = partition_quality(partition_mesh(mesh, grid))
+        q_s = partition_quality(partition_mesh(mesh, grid, method="spectral"))
+        assert q_s["halo_volume"] < q_b["halo_volume"], (grid, q_b, q_s)
+        assert q_s["empty_ranks"] == 0
+        # imbalance counts halo replicas on top of the balanced primary
+        # ownership, so it sits above the 5% bisection slack
+        assert q_s["imbalance"] < 1.8
+
+
+def test_partition_quality_1rank_degenerate():
+    mesh = box_mesh((2, 2, 2), p=2)
+    q = partition_quality(partition_mesh(mesh, (1, 1, 1)))
+    assert q["halo_volume"] == 0
+    assert q["edge_cut"] == 0
+    assert q["replication"] == 1.0
+    assert q["imbalance"] == 1.0
+    assert q["boundary_frac_max"] == 0.0
+
+
+def test_partition_mesh_rejects_unknown_method():
+    mesh = box_mesh((2, 2, 2), p=2)
+    with pytest.raises(ValueError, match="method"):
+        partition_mesh(mesh, (2, 1, 1), method="metis")
+
+
+# ---------------------------------------------------------------------------
+# partition-choice neutrality: arbitrary node2part maps satisfy Eq. 2/3
+# ---------------------------------------------------------------------------
+
+def _random_graph(seed=0, n=60):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(300, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2,
+                    node_in=3, edge_in=7)
+    params = init_gnn(jax.random.PRNGKey(3), cfg)
+    x_global = rng.normal(size=(n, 3)).astype(np.float32)
+    coords = rng.normal(size=(n, 3)).astype(np.float32)
+    return n, edges, cfg, params, x_global, coords
+
+
+def _eval_n2p(n, edges, cfg, params, x_global, coords, node2part, R,
+              schedule):
+    pg = partition_graph(n, edges, R, node2part=node2part)
+    plan = NMPPlan(halo=HaloSpec(mode=A2A if R > 1 else NONE),
+                   schedule=schedule)
+    graph = ShardedGraph.build(pg, coords, plan)
+    x = jnp.asarray(gather_node_features(pg, x_global))
+    loss, y, grads = loss_and_grad_stacked(params, x, x, graph, plan,
+                                           cfg.node_out)
+    return float(loss), scatter_node_outputs(pg, np.asarray(y)), grads
+
+
+@pytest.mark.parametrize("schedule", ["blocking", "overlap"])
+@pytest.mark.parametrize("kind", ["random", "imbalanced", "empty_rank"])
+def test_arbitrary_node2part_is_consistency_neutral(kind, schedule):
+    """Eq. 2/3 hold for ANY node->part map, however bad: values and grads
+    match the 1-rank run whether the map is random, 90/10 imbalanced, or
+    leaves a rank with no nodes at all."""
+    n, edges, cfg, params, x_global, coords = _random_graph()
+    rng = np.random.default_rng(42)
+    R = 4
+    if kind == "random":
+        node2part = rng.integers(0, R, size=n)
+    elif kind == "imbalanced":
+        node2part = np.where(rng.random(n) < 0.9, 0,
+                             rng.integers(1, R, size=n))
+    else:  # one rank owns nothing
+        node2part = rng.integers(0, R - 1, size=n)
+    l1, y1, g1 = _eval_n2p(n, edges, cfg, params, x_global, coords,
+                           None, 1, schedule)
+    lr, yr, gr = _eval_n2p(n, edges, cfg, params, x_global, coords,
+                           node2part, R, schedule)
+    assert abs(lr - l1) < 2e-6 * max(1.0, abs(l1)), (kind, schedule)
+    np.testing.assert_allclose(yr, y1, rtol=3e-5, atol=2e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=2e-6,
+                                   err_msg=f"{kind}/{schedule}")
+
+
+def test_spectral_node2part_on_generic_graph():
+    """partition_graph(method='spectral') wires the spectral map through the
+    generic vertex-cut path and stays consistency-neutral."""
+    n, edges, cfg, params, x_global, coords = _random_graph(seed=1)
+    l1, y1, _ = _eval_n2p(n, edges, cfg, params, x_global, coords,
+                          None, 1, "blocking")
+    pg = partition_graph(n, edges, 3, method="spectral")
+    plan = NMPPlan(halo=HaloSpec(mode=A2A))
+    graph = ShardedGraph.build(pg, coords, plan)
+    x = jnp.asarray(gather_node_features(pg, x_global))
+    loss, y, _ = loss_and_grad_stacked(params, x, x, graph, plan,
+                                       cfg.node_out)
+    assert abs(float(loss) - l1) < 2e-6 * max(1.0, abs(l1))
+    np.testing.assert_allclose(scatter_node_outputs(pg, np.asarray(y)), y1,
+                               rtol=3e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# schedule="auto" resolution
+# ---------------------------------------------------------------------------
+
+def _auto_case(grid=(2, 2, 1)):
+    mesh = box_mesh((4, 2, 2), p=2)
+    pg = partition_mesh(mesh, grid)
+    plan = NMPPlan(halo=HaloSpec(mode=NONE if pg.R == 1 else A2A),
+                   schedule="auto")
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
+    return plan, graph
+
+
+def test_autotune_r1_shortcut():
+    plan, graph = _auto_case((1, 1, 1))
+    assert plan.autotune(graph).schedule == "blocking"
+
+
+def test_autotune_fixed_schedule_is_noop():
+    plan, graph = _auto_case()
+    fixed = plan.replace(schedule="overlap")
+    assert fixed.autotune(graph) is fixed
+
+
+def test_autotune_heuristic_fallback_matches_interior_frac():
+    plan, graph = _auto_case()
+    picked = plan.autotune(graph, measure=False).schedule
+    frac = interior_frac(graph.levels[0])
+    want = "overlap" if frac < 0.5 else "blocking"
+    assert picked == want
+
+
+def test_autotune_measured_pick_is_cached(monkeypatch):
+    """The expensive timing probe runs once per (graph, policy): a second
+    autotune on the same graph is a pure cache hit."""
+    plan, graph = _auto_case()
+    calls = []
+
+    def fake_measure(plan, g0, hidden, iters):
+        calls.append(1)
+        return "overlap"
+
+    monkeypatch.setattr(consistent_mp, "_measure_best_schedule", fake_measure)
+    monkeypatch.setattr(consistent_mp, "_SCHEDULE_CACHE", {})
+    p1 = plan.autotune(graph, measure=True)
+    p2 = plan.autotune(graph, measure=True)
+    assert p1.schedule == p2.schedule == "overlap"
+    assert len(calls) == 1
+
+
+def test_autotune_env_var_disables_measurement(monkeypatch):
+    plan, graph = _auto_case()
+
+    def boom(*a, **kw):
+        raise AssertionError("measurement ran despite REPRO_SCHEDULE_AUTOTUNE=0")
+
+    monkeypatch.setattr(consistent_mp, "_measure_best_schedule", boom)
+    monkeypatch.setattr(consistent_mp, "_SCHEDULE_CACHE", {})
+    monkeypatch.setenv("REPRO_SCHEDULE_AUTOTUNE", "0")
+    picked = plan.autotune(graph).schedule
+    assert picked in ("blocking", "overlap")
+
+
+def test_unresolved_auto_plan_errors_at_dispatch():
+    plan = NMPPlan(halo=HaloSpec(mode=A2A), schedule="auto")
+    with pytest.raises(ValueError, match="autotune"):
+        nmp_impl(plan)
+
+
+def test_mesh_node2part_matches_partition_mesh_spectral():
+    """partition_mesh(method='spectral') and the explicit mesh_node2part +
+    node2part path produce the same decomposition (the multilevel driver
+    relies on this equivalence)."""
+    mesh = box_mesh((4, 2, 2), p=2)
+    pg_a = partition_mesh(mesh, (2, 2, 1), method="spectral")
+    n2p = mesh_node2part(mesh, 4)
+    edges = mesh_graph_edges(mesh)
+    pg_b = partition_graph(mesh.n_nodes, np.concatenate(
+        [edges, edges[:, ::-1]]), 4, node2part=n2p)
+    assert partition_quality(pg_a)["halo_volume"] == \
+        partition_quality(pg_b)["halo_volume"]

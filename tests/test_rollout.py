@@ -173,3 +173,24 @@ def test_rollout_shard_map_collective_path_subprocess():
     assert res.returncode == 0, \
         f"driver failed:\n{res.stdout[-3000:]}\n{res.stderr[-3000:]}"
     assert "ROLLOUT DRIVER PASS" in res.stdout
+
+
+def test_rollout_curriculum_and_noise_annealing():
+    """TrainConfig.rollout_curriculum splits the run into even stages of
+    increasing K (1 -> 2 here) and pushforward_noise_final anneals the
+    stop-grad noise linearly; the smoke run must record the staged K per
+    step and produce finite losses on the single-device mesh."""
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import TrainConfig, train_consistent_gnn
+
+    mesh = box_mesh((2, 2, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=1, mlp_hidden_layers=2)
+    pg = partition_mesh(mesh, (1, 1, 1))
+    mesh_dev = make_mesh((1, 1), ("data", "graph"))
+    tcfg = TrainConfig(n_steps=4, batch=1, halo_mode="none", log_every=100,
+                       rollout_curriculum=(1, 2),
+                       pushforward_noise=0.01, pushforward_noise_final=0.0)
+    hist = train_consistent_gnn(mesh_dev, pg, mesh, cfg, tcfg)
+    assert hist["rollout_k"] == [1, 1, 2, 2]
+    assert all(np.isfinite(loss) for loss in hist["losses"])
+    assert hist["schedule"] == "blocking"

@@ -7,8 +7,10 @@ size sweep + per-SHA ``history`` trajectory), ``BENCH_halo_overlap.json``
 measured ``auto`` pick), ``BENCH_rollout.json`` (us/node/step vs
 autoregressive rollout depth K, both schedules, consistency-asserted), and
 ``BENCH_partition.json`` (block-vs-spectral partition quality on a
-stretched mesh, bitwise copy-agreement asserted) so future PRs have a perf
-trajectory to regress against (see ``scripts/bench_gate.py``).
+stretched mesh, bitwise copy-agreement asserted), and
+``BENCH_resilience.json`` (checkpoint save/restore latency + steady-state
+``run_resilient`` overhead %, bitwise-trajectory asserted) so future PRs
+have a perf trajectory to regress against (see ``scripts/bench_gate.py``).
 Run:
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -92,6 +94,15 @@ def write_rollout_json(path: str = "BENCH_rollout.json") -> dict:
     return _write_json(path, rollout_sweep())
 
 
+def write_resilience_json(path: str = "BENCH_resilience.json") -> dict:
+    """Collect the checkpoint/resilience overhead benchmark (sync
+    save/restore latency, steady-state run_resilient overhead %, with its
+    built-in bitwise-trajectory and exact-roundtrip assertions) and
+    persist it."""
+    from benchmarks.resilience import resilience_sweep
+    return _write_json(path, resilience_sweep())
+
+
 def write_partition_json(path: str = "BENCH_partition.json") -> dict:
     """Collect the block-vs-spectral partition quality sweep (stretched
     mesh, with its built-in bitwise copy-agreement assertions) and persist
@@ -103,12 +114,13 @@ def write_partition_json(path: str = "BENCH_partition.json") -> dict:
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench,
-                            halo_overlap, multilevel, rollout)
+                            halo_overlap, multilevel, rollout, resilience)
     payload = write_segment_agg_json()   # computed once, reused by kernel_bench
     overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
     multilevel_payload = write_multilevel_json()  # reused by multilevel.run
     rollout_payload = write_rollout_json()        # reused by rollout.run
     partition_payload = write_partition_json()    # reused by partition_stats.run
+    resilience_payload = write_resilience_json()  # reused by resilience.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
@@ -117,7 +129,8 @@ def main() -> None:
                        (kernel_bench, "kernels"),
                        (halo_overlap, "halo-overlap"),
                        (multilevel, "multilevel"),
-                       (rollout, "rollout")):
+                       (rollout, "rollout"),
+                       (resilience, "resilience")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
         kw = {}
         if mod is kernel_bench:
@@ -130,6 +143,8 @@ def main() -> None:
             kw = dict(payload=rollout_payload)
         elif mod is partition_stats:
             kw = dict(payload=partition_payload)
+        elif mod is resilience:
+            kw = dict(payload=resilience_payload)
         all_rows += mod.run(verbose=True, **kw)
     fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
@@ -156,6 +171,12 @@ def main() -> None:
     print(f"wrote BENCH_partition.json (R up to {worst_case['ranks']}: "
           f"halo volume block {hv_b} vs spectral {hv_s}, "
           f"copy agreement exact)")
+    rp = resilience_payload
+    print(f"wrote BENCH_resilience.json (save {rp['save_ms']:.1f} ms / "
+          f"restore {rp['restore_ms']:.1f} ms for {rp['tree_bytes']}B, "
+          f"{rp['overhead_pct']:.1f}% overhead at ckpt_every="
+          f"{rp['ckpt_every']}, trajectory bitwise="
+          f"{rp['losses_bitwise_equal']})")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

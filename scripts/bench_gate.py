@@ -18,6 +18,13 @@ count); with baseline files provided, fails on regressions beyond
 * halo overlap: the overlap/blocking *ratio* per rank count vs the
   baseline's ratio.  Both schedules compile on any host, and the ratio
   normalizes hardware differences away, so this gate also runs on CPU CI.
+* resilience (``--resilience-out``): baseline-free.  The resilient loop's
+  loss trajectory must be BITWISE identical to an uncheckpointed run and
+  the checkpoint round trip byte-exact (strict — checkpointing must never
+  perturb training); the steady-state overhead at ``ckpt_every`` is
+  bounded loosely by ``--resilience-max-overhead`` (the bench model is
+  tiny, so the percentage is a worst case — the bound catches structural
+  catastrophes like a synchronous full-tree save per step).
 * partition quality (``--partition-out``): structural, baseline-free.
   Every method x rank-count cell must report bitwise copy agreement
   (``max_abs_err == 0.0``) and the spectral partitioner must strictly beat
@@ -158,6 +165,43 @@ def gate_partition(payload: dict) -> bool:
     return ok
 
 
+def gate_resilience(payload: dict, max_overhead: float) -> bool:
+    """True iff checkpointing stayed invisible to training and cheap enough.
+
+    Baseline-free.  The strict half is correctness: the resilient loop's
+    loss trajectory must be BITWISE identical to the bare loop's, and a
+    save -> restore round trip must be byte-exact — checkpointing that
+    perturbs training is a correctness bug, not a perf problem.  The loose
+    half is cost: ``overhead_pct`` (run_resilient vs bare loop at
+    ``ckpt_every``) must stay under ``max_overhead``.  The bench model is
+    deliberately tiny (~10 ms steps), so the percentage is a worst case
+    and shared-runner noise is real; the bound only exists to catch a
+    structural catastrophe such as an accidental synchronous full-tree
+    save (or restore) on every step."""
+    ok = True
+    if not payload.get("losses_bitwise_equal"):
+        print("REGRESSION: resilient loss trajectory != bare loop "
+              "(checkpointing perturbed training)")
+        ok = False
+    if not payload.get("restore_exact"):
+        print("REGRESSION: checkpoint save -> restore round trip is not "
+              "byte-exact")
+        ok = False
+    if payload["overhead_pct"] > max_overhead:
+        print(f"REGRESSION: resilience overhead {payload['overhead_pct']:.1f}% "
+              f"> {max_overhead:.0f}% at ckpt_every={payload['ckpt_every']} "
+              f"(save {payload['save_ms']:.1f} ms, "
+              f"restore {payload['restore_ms']:.1f} ms)")
+        ok = False
+    if ok:
+        print(f"resilience gate ok: trajectory bitwise, restore exact, "
+              f"{payload['overhead_pct']:.1f}% overhead at ckpt_every="
+              f"{payload['ckpt_every']} (save {payload['save_ms']:.1f} ms, "
+              f"restore {payload['restore_ms']:.1f} ms, "
+              f"{payload['tree_bytes']}B state)")
+    return ok
+
+
 def _load(path: str | None) -> dict | None:
     if not path or not os.path.exists(path):
         return None
@@ -192,6 +236,18 @@ def main() -> int:
                          "and baseline-free: every cell must report "
                          "max_abs_err == 0.0 and spectral must beat block's "
                          "halo volume at >= 4 ranks")
+    ap.add_argument("--resilience-out", default=None,
+                    help="where to write BENCH_resilience.json (checkpoint "
+                         "save/restore latency + steady-state run_resilient "
+                         "overhead %%); the benchmark only runs when given. "
+                         "Gated baseline-free: loss trajectory must be "
+                         "bitwise-identical to an uncheckpointed run, the "
+                         "save/restore round trip byte-exact, and overhead "
+                         "under --resilience-max-overhead")
+    ap.add_argument("--resilience-max-overhead", type=float, default=200.0,
+                    help="max resilient-vs-bare overhead %% on the "
+                         "deliberately tiny bench model (loose: catches "
+                         "structural catastrophes, not runner weather)")
     ap.add_argument("--baseline", default=None,
                     help="previous BENCH_segment_agg.json to gate against")
     ap.add_argument("--halo-baseline", default=None,
@@ -242,6 +298,11 @@ def main() -> int:
         part_payload = write_partition_json(args.partition_out)
         print(json.dumps(part_payload, indent=2, sort_keys=True))
         ok &= gate_partition(part_payload)
+    if args.resilience_out:
+        from benchmarks.run import write_resilience_json
+        res_payload = write_resilience_json(args.resilience_out)
+        print(json.dumps(res_payload, indent=2, sort_keys=True))
+        ok &= gate_resilience(res_payload, args.resilience_max_overhead)
     return 0 if ok else 1
 
 

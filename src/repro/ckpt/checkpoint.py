@@ -1,28 +1,74 @@
-"""Sharded .npz checkpointing with manifest, async save, and elastic restore.
+"""Sharded .npz checkpointing with manifest, checksums, async save, and
+elastic restore.
 
 No orbax offline — built on numpy:
   * each save writes ``step_<N>/shard_<host>.npz`` (one file per host with its
     addressable array shards; on this single-host container that is one file)
-    plus ``manifest.json`` (step, flat key list, shapes/dtypes, mesh shape,
-    config fingerprint) and a terminal ``COMMIT`` marker — a crash mid-save
-    can never be mistaken for a complete checkpoint;
-  * ``restore`` loads the latest *committed* step, re-shards onto the current
-    mesh (elastic: a checkpoint written on one mesh restores onto another —
-    arrays are saved unsharded per host here, resharding is a device_put);
-  * ``AsyncCheckpointer`` overlaps serialization with training (thread).
+    plus ``manifest.json`` (step, flat key list, shapes/dtypes, per-array
+    CRC32 checksums, caller ``extra`` — the training loop stores its mesh
+    fingerprint and loss-history tail there) and a terminal ``COMMIT``
+    marker — a crash mid-save can never be mistaken for a complete
+    checkpoint;
+  * ``restore`` loads a *committed* step and validates it BEFORE
+    unflattening: every key's shape/dtype against the manifest and the
+    template, every array's checksum against the manifest — a corrupted or
+    truncated shard raises :class:`CheckpointCorruption` naming the first
+    bad key instead of failing three layers down in an unflatten/broadcast;
+  * ``restore_with_fallback`` walks committed steps newest-first and falls
+    back past corrupted ones — the recovery path a resilient trainer takes
+    when the newest checkpoint was damaged after commit;
+  * re-sharding is elastic: arrays are saved unsharded per host, so a
+    checkpoint written on one mesh restores onto another via the
+    ``shardings`` pytree (a device_put per leaf);
+  * ``AsyncCheckpointer`` overlaps serialization with training (thread);
+    save errors surface on the next ``wait()``/``save()``.
+
+Fault injection for tests lives behind :func:`set_fault_hook`: the hook is
+called at the two stages where a real crash corrupts state ("arrays_written"
+— shard on disk, no manifest/COMMIT; "pre_commit" — everything but COMMIT)
+and may truncate files or raise (see
+``repro.runtime.fault_tolerance.FaultPlan``).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 import jax
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruption(CheckpointError):
+    """A committed checkpoint's on-disk bytes disagree with its manifest
+    (truncated/bit-flipped shard, unreadable npz, checksum mismatch).
+    Fallback-eligible: ``restore_with_fallback`` skips to the previous
+    committed step."""
+
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+# test injection point: callable(stage, step, step_dir) invoked by ``save``
+# at "arrays_written" (shard npz on disk) and "pre_commit" (manifest written,
+# COMMIT not yet) — may mutate files and/or raise to emulate a crash
+_fault_hook: Optional[Callable[[str, int, Path], None]] = None
+
+
+def set_fault_hook(fn: Optional[Callable[[str, int, Path], None]]):
+    """Install a save-path fault-injection hook; returns the previous one."""
+    global _fault_hook
+    prev, _fault_hook = _fault_hook, fn
+    return prev
 
 
 def _flatten(tree):
@@ -32,6 +78,10 @@ def _flatten(tree):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         out[key] = leaf
     return out, treedef
+
+
+def _checksum(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def save(ckpt_dir: str | Path, step: int, tree: Any, extra: Optional[dict] = None):
@@ -45,15 +95,20 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, extra: Optional[dict] = Non
     flat, _ = _flatten(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
     np.savez(tmp / "shard_0.npz", **{k.replace("/", "__"): v for k, v in arrays.items()})
+    if _fault_hook is not None:
+        _fault_hook("arrays_written", step, tmp)
     manifest = dict(
         step=step,
         keys=sorted(arrays),
         shapes={k: list(v.shape) for k, v in arrays.items()},
         dtypes={k: str(v.dtype) for k, v in arrays.items()},
+        checksums={k: _checksum(v) for k, v in arrays.items()},
         time=time.time(),
         extra=extra or {},
     )
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if _fault_hook is not None:
+        _fault_hook("pre_commit", step, tmp)
     (tmp / "COMMIT").write_text("ok")
     if step_dir.exists():
         shutil.rmtree(step_dir)
@@ -61,55 +116,167 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, extra: Optional[dict] = Non
     return step_dir
 
 
-def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+def committed_steps(ckpt_dir: str | Path) -> list[int]:
+    """Ascending committed step numbers.  Robust to leftover ``*.tmp`` dirs
+    and other debris a mid-save crash leaves behind (those never carry a
+    COMMIT and never match the step name pattern)."""
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
-        return None
+        return []
     steps = []
     for d in ckpt_dir.iterdir():
-        if d.name.startswith("step_") and (d / "COMMIT").exists():
-            steps.append(int(d.name.split("_")[1]))
-    return max(steps) if steps else None
+        m = _STEP_RE.match(d.name)
+        if m and (d / "COMMIT").exists():
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def peek_manifest(ckpt_dir: str | Path, step: Optional[int] = None) -> Optional[dict]:
+    """Read a committed step's manifest without touching the arrays (cheap
+    pre-restore inspection: mesh fingerprint, resolved schedule, step).
+    Returns None when there is no committed checkpoint."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = Path(ckpt_dir) / f"step_{step:010d}" / "manifest.json"
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruption(
+            f"manifest unreadable for committed step {step} under "
+            f"{ckpt_dir}: {e}") from e
 
 
 def restore(ckpt_dir: str | Path, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None):
     """Restore into the structure of ``tree_like`` (values replaced).
 
+    Validation happens BEFORE any unflatten: the template's flat keys must
+    match the manifest's (missing/unexpected keys are named), each template
+    leaf's shape/dtype must match what the manifest recorded (a mismatch
+    names the key — usually a model-config drift between save and resume),
+    and each loaded array must match its manifest checksum (a mismatch
+    raises :class:`CheckpointCorruption` naming the key).
+
     ``shardings``: optional pytree of NamedSharding for elastic placement on
-    the current mesh.
+    the current mesh — how a checkpoint written on R ranks lands on R'.
     """
     ckpt_dir = Path(ckpt_dir)
-    step = step if step is not None else latest_step(ckpt_dir)
+    committed = committed_steps(ckpt_dir)
+    step = step if step is not None else (committed[-1] if committed else None)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    if step not in committed:
+        raise FileNotFoundError(
+            f"step {step} has no committed checkpoint under {ckpt_dir} "
+            f"(committed: {committed})")
     step_dir = ckpt_dir / f"step_{step:010d}"
-    data = np.load(step_dir / "shard_0.npz")
+    manifest = peek_manifest(ckpt_dir, step)
     flat, treedef = _flatten(tree_like)
-    shard_flat = _flatten(shardings)[0] if shardings is not None else {}
+
+    m_keys = set(manifest["keys"])
+    t_keys = set(flat)
+    if m_keys != t_keys:
+        missing = sorted(m_keys - t_keys)
+        unexpected = sorted(t_keys - m_keys)
+        raise ValueError(
+            f"checkpoint step {step} does not match the restore template: "
+            f"keys only in checkpoint: {missing[:5]}; keys only in template: "
+            f"{unexpected[:5]} — was the model/optimizer config changed "
+            "between save and resume?")
+    for key, leaf in flat.items():
+        want_shape = tuple(manifest["shapes"][key])
+        want_dtype = manifest["dtypes"][key]
+        have = np.asarray(leaf)
+        if tuple(have.shape) != want_shape or str(have.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint step {step} key {key!r} has shape "
+                f"{want_shape}/{want_dtype} but the restore template has "
+                f"{tuple(have.shape)}/{have.dtype} — the checkpoint was "
+                "written with a different model/optimizer configuration")
+
+    try:
+        data = np.load(step_dir / "shard_0.npz")
+    except Exception as e:
+        raise CheckpointCorruption(
+            f"shard unreadable for committed step {step} under {ckpt_dir}: "
+            f"{e}") from e
+    checksums = manifest.get("checksums", {})
     leaves = []
     for key in flat:
-        arr = data[key.replace("/", "__")]
-        if key in shard_flat:
-            arr = jax.device_put(arr, shard_flat[key])
+        try:
+            arr = data[key.replace("/", "__")]
+        except Exception as e:
+            raise CheckpointCorruption(
+                f"step {step} key {key!r} unreadable from shard "
+                f"(truncated/corrupted npz): {e}") from e
+        if tuple(arr.shape) != tuple(manifest["shapes"][key]):
+            raise CheckpointCorruption(
+                f"step {step} key {key!r} on-disk shape {tuple(arr.shape)} "
+                f"disagrees with its manifest {tuple(manifest['shapes'][key])}")
+        if key in checksums and _checksum(arr) != checksums[key]:
+            raise CheckpointCorruption(
+                f"step {step} key {key!r} failed its checksum — the shard "
+                "was corrupted after commit; restore_with_fallback skips to "
+                "the previous committed step")
+        if shardings is not None:
+            shard_flat = _flatten(shardings)[0]
+            if key in shard_flat:
+                arr = jax.device_put(arr, shard_flat[key])
         leaves.append(arr)
     # order of _flatten matches tree_flatten order
     vals = jax.tree_util.tree_unflatten(treedef, leaves)
-    manifest = json.loads((step_dir / "manifest.json").read_text())
     return vals, manifest
 
 
+def restore_with_fallback(ckpt_dir: str | Path, tree_like: Any,
+                          shardings: Any = None):
+    """Restore the newest committed step that validates, falling back past
+    corrupted ones (checksum failures, truncated shards, unreadable
+    manifests).  Template mismatches (wrong shapes/keys — a config problem,
+    not a disk problem) propagate immediately.  Raises FileNotFoundError
+    when no committed step survives validation."""
+    steps = committed_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    last_err: Optional[BaseException] = None
+    for step in reversed(steps):
+        try:
+            return restore(ckpt_dir, tree_like, step=step, shardings=shardings)
+        except CheckpointCorruption as e:
+            print(f"[ckpt] step {step} corrupted, falling back: {e}")
+            last_err = e
+    raise FileNotFoundError(
+        f"no valid committed checkpoint under {ckpt_dir} "
+        f"({len(steps)} committed steps, all corrupted; last error: "
+        f"{last_err})")
+
+
 def prune(ckpt_dir: str | Path, keep: int = 3):
+    """Delete old committed steps, keeping the newest ``keep``.
+
+    The newest committed step is NEVER deleted, even with ``keep <= 0``
+    (a misconfigured retention policy must not destroy the only recovery
+    point)."""
+    keep = max(int(keep), 1)
+    steps = committed_steps(ckpt_dir)
     ckpt_dir = Path(ckpt_dir)
-    steps = sorted(
-        int(d.name.split("_")[1]) for d in ckpt_dir.iterdir()
-        if d.name.startswith("step_") and (d / "COMMIT").exists())
     for s in steps[:-keep]:
         shutil.rmtree(ckpt_dir / f"step_{s:010d}", ignore_errors=True)
 
 
 class AsyncCheckpointer:
-    """Background-thread checkpointing: snapshot to host, save off-thread."""
+    """Background-thread checkpointing: snapshot to host, save off-thread.
+
+    A failed async save is surfaced as the raised exception on the next
+    ``wait()`` (or the implicit wait inside the next ``save()``) — the
+    resilient training driver treats it like any other step failure and
+    restores from the previous committed step."""
 
     def __init__(self, ckpt_dir: str | Path, keep: int = 3):
         self.dir = Path(ckpt_dir)

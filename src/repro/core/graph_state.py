@@ -170,6 +170,18 @@ class NMPPlan:
         return autotune_schedule(self, graph, measure=measure,
                                  hidden=hidden, iters=iters)
 
+    def policy(self) -> dict:
+        """JSON-able policy fields (no halo specs) — the plan's entry in a
+        checkpoint manifest's mesh fingerprint.  An elastic resume compares
+        these to decide whether the execution policy changed (allowed —
+        backends/schedules are arithmetically consistent) and reuses the
+        recorded resolved schedule instead of re-autotuning ``auto`` when
+        the rank count is unchanged."""
+        return {"backend": self.backend, "schedule": self.schedule,
+                "precision": self.precision, "interpret": self.interpret,
+                "block_n": self.block_n, "block_e": self.block_e,
+                "halo_mode": self.halo.mode}
+
 
 _NMP_IMPLS: Dict[Tuple[str, str], Callable] = {}
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import GNNConfig, NMPPlan, box_mesh, partition_mesh
 from repro.launch.mesh import make_mesh
+from repro.runtime.fault_tolerance import ResilientConfig
 from repro.train.loop import TrainConfig, train_consistent_gnn
 
 
@@ -38,7 +39,21 @@ def main():
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--halo", default="neighbor", choices=["neighbor", "a2a", "none"])
     ap.add_argument("--model", default="small", choices=["small", "large"])
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="plain fire-and-forget checkpoint dir (no resume); "
+                         "for crash recovery + elastic resume use --ckpt-dir")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="resilient checkpoint dir: auto-resumes from the "
+                         "newest valid checkpoint (elastically — the "
+                         "checkpoint may come from a different --ranks or "
+                         "--partitioner), recovers from crashes, and writes "
+                         "fingerprinted manifests (see CONTRIBUTING.md "
+                         "'Elastic resume')")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="steps between periodic checkpoints (with --ckpt-dir)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="in-process crash recoveries before giving up "
+                         "(with --ckpt-dir)")
     ap.add_argument("--mp-backend", default="xla", choices=["xla", "fused"],
                     help="NMP hot-loop backend (fused = Pallas kernel)")
     ap.add_argument("--mp-interpret", action="store_true",
@@ -84,6 +99,9 @@ def main():
     if args.pushforward_noise and args.rollout_steps == 1:
         ap.error("--pushforward-noise needs --rollout-steps > 1 (one-step "
                  "training never feeds predictions back)")
+    if args.ckpt and args.ckpt_dir:
+        ap.error("--ckpt and --ckpt-dir are mutually exclusive (plain "
+                 "fire-and-forget saves vs resilient auto-resume)")
 
     sem = box_mesh(tuple(args.elements), p=args.order)
     R = int(np.prod(args.ranks))
@@ -115,14 +133,27 @@ def main():
 
     policy = NMPPlan(backend=args.mp_backend, interpret=args.mp_interpret,
                      schedule=args.mp_schedule, precision=args.mp_precision)
+    resilience = None
+    if args.ckpt_dir:
+        resilience = ResilientConfig(ckpt_dir=args.ckpt_dir,
+                                     ckpt_every=args.ckpt_every,
+                                     max_restarts=args.max_restarts)
     tcfg = TrainConfig(n_steps=args.steps, batch=args.batch, lr=args.lr,
                        halo_mode=args.halo, ckpt_dir=args.ckpt, plan=policy,
                        rollout_steps=args.rollout_steps,
-                       pushforward_noise=args.pushforward_noise)
+                       pushforward_noise=args.pushforward_noise,
+                       partitioner=args.partitioner, resilience=resilience)
     hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
                                 hierarchy=hierarchy)
     if args.mp_schedule == "auto":
         print(f"schedule auto -> {hist['schedule']}")
+    if hist.get("elastic"):
+        el = hist["elastic"]
+        print(f"elastic resume at step {el['step']}: "
+              f"R={el['from_ranks']}/{el['from_partitioner']} -> "
+              f"R={el['to_ranks']}/{el['to_partitioner']}")
+    if hist.get("restarts"):
+        print(f"recovered from {hist['restarts']} crash(es)")
     print(f"loss {hist['losses'][0]:.6f} -> {hist['losses'][-1]:.6f} "
           f"({len(hist['losses'])} steps, {hist['straggler_events']} straggler events)")
 

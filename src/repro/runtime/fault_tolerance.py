@@ -2,17 +2,32 @@
 
 ``run_resilient`` wraps a step function with:
   * periodic async checkpoints (+ straggler-triggered early checkpoints);
-  * crash recovery: on any exception the driver restores the latest committed
-    checkpoint and resumes (up to ``max_restarts``) — the same path a
-    preempted/killed pod takes on rescheduling;
+  * crash recovery: on ANY exception the driver restores the latest valid
+    committed checkpoint and resumes (up to ``max_restarts``, with bounded
+    exponential backoff between attempts) — the same path a preempted or
+    killed pod takes on rescheduling.  Corrupted checkpoints are skipped by
+    ``ckpt.restore_with_fallback`` (checksum validation) and restore falls
+    back to the previous committed step;
   * deterministic data replay: the data iterator is keyed by step, so a
     restart replays exactly the batches after the restored step (bitwise
     recovery is asserted in tests);
-  * optional failure injection (``inject_failure_at``) used by the tests.
+  * fault injection (:class:`FaultPlan`) used by the tests and the
+    subprocess resilience driver: step-indexed exceptions of any type,
+    hard process kills (``os._exit`` — emulates a dropped rank), crashes
+    inside the checkpoint save path (truncated shard / missing COMMIT),
+    and post-commit shard corruption.
+
+The GNN training loop (``repro.train.loop``) drives this with its own
+``restore_fn`` (elastic restore: fingerprint check + re-sharding onto the
+current mesh) and ``manifest_extra`` (mesh fingerprint).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
+import time
+from pathlib import Path
 from typing import Any, Callable, Optional
 
 from repro.ckpt import checkpoint as ckpt
@@ -26,10 +41,121 @@ class ResilientConfig:
     keep: int = 3
     max_restarts: int = 3
     straggler_checkpoint: bool = True
+    # bounded exponential backoff between restarts:
+    # sleep min(backoff_base * 2**(restarts-1), backoff_max) seconds
+    backoff_base: float = 0.05
+    backoff_max: float = 5.0
+    # manifests carry the last `history_tail` losses so a resumed run's
+    # history is continuous (full fidelity for runs shorter than the tail)
+    history_tail: int = 10000
 
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+def backoff_seconds(restarts: int, cfg: ResilientConfig) -> float:
+    """Bounded exponential backoff for restart attempt ``restarts`` (1-based)."""
+    return min(cfg.backoff_base * (2.0 ** max(restarts - 1, 0)), cfg.backoff_max)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Declarative fault injection for resilience tests and drivers.
+
+    Step faults (checked by ``maybe_fail`` before each training step):
+      * ``crash_at_step`` — raise ``exc`` (default :class:`InjectedFailure`;
+        set e.g. ``RuntimeError`` to model a real OOM/IO crash) the first
+        ``n_crashes`` times the step is reached;
+      * ``kill_process_at_step`` — ``os._exit(exit_code)``: no cleanup, no
+        atexit, async saver thread dies mid-flight — the closest a test can
+        get to a dropped rank / preempted pod.  Used by the subprocess
+        resilience driver; the orchestrator relaunches (possibly on a
+        different rank count) and expects elastic resume.
+
+    Checkpoint-save faults (installed as the ``ckpt`` fault hook while the
+    plan is active via :meth:`installed`):
+      * ``crash_save_at_step`` — the first save at/after this step dies at
+        ``save_stage``: "pre_commit" leaves shard+manifest but no COMMIT
+        (``latest_step`` must skip it); "truncate_shard" additionally
+        truncates the shard npz before raising (a half-written file).
+
+    ``corrupt_shard`` is a static helper that damages an already-committed
+    shard in place — restore must detect it by checksum and fall back.
+    """
+    crash_at_step: Optional[int] = None
+    exc: type = InjectedFailure
+    n_crashes: int = 1
+    kill_process_at_step: Optional[int] = None
+    exit_code: int = 17
+    crash_save_at_step: Optional[int] = None
+    save_stage: str = "pre_commit"          # or "truncate_shard"
+    crashes_fired: int = 0
+    save_crashes_fired: int = 0
+
+    def maybe_fail(self, step: int):
+        if self.kill_process_at_step is not None and step == self.kill_process_at_step:
+            os._exit(self.exit_code)
+        if (self.crash_at_step is not None and step == self.crash_at_step
+                and self.crashes_fired < self.n_crashes):
+            self.crashes_fired += 1
+            raise self.exc(f"injected failure at step {step}")
+
+    def _ckpt_hook(self, stage: str, step: int, step_dir: Path):
+        if self.crash_save_at_step is None or step < self.crash_save_at_step:
+            return
+        if self.save_crashes_fired >= self.n_crashes:
+            return
+        if self.save_stage == "truncate_shard" and stage == "arrays_written":
+            shard = step_dir / "shard_0.npz"
+            size = shard.stat().st_size
+            with open(shard, "r+b") as f:
+                f.truncate(max(size // 2, 1))
+            self.save_crashes_fired += 1
+            raise InjectedFailure(
+                f"injected save crash (truncated shard) at step {step}")
+        if self.save_stage == "pre_commit" and stage == "pre_commit":
+            self.save_crashes_fired += 1
+            raise InjectedFailure(
+                f"injected save crash (no COMMIT) at step {step}")
+
+    @contextlib.contextmanager
+    def installed(self):
+        """Activate the checkpoint-save faults for the duration."""
+        if self.crash_save_at_step is None:
+            yield self
+            return
+        prev = ckpt.set_fault_hook(self._ckpt_hook)
+        try:
+            yield self
+        finally:
+            ckpt.set_fault_hook(prev)
+
+    @staticmethod
+    def corrupt_shard(ckpt_dir: str | Path, step: int, n_bytes: int = 16):
+        """Flip bytes in the middle of a COMMITTED step's shard (bit rot /
+        partial overwrite after commit).  Restore detects it by checksum."""
+        shard = Path(ckpt_dir) / f"step_{step:010d}" / "shard_0.npz"
+        size = shard.stat().st_size
+        off = size // 2
+        with open(shard, "r+b") as f:
+            f.seek(off)
+            chunk = f.read(n_bytes)
+            f.seek(off)
+            f.write(bytes(b ^ 0xFF for b in chunk))
+
+
+def _default_restore(cfg: ResilientConfig, init_state_fn):
+    """Restore the newest valid committed step, or None for a fresh start.
+    Returns (state, start_step, prior_losses, manifest)."""
+    if not ckpt.committed_steps(cfg.ckpt_dir):
+        return None
+    state, manifest = ckpt.restore_with_fallback(cfg.ckpt_dir, init_state_fn())
+    start = manifest["step"] + 1
+    extra = manifest.get("extra", {})
+    off = int(extra.get("losses_offset", 0))
+    losses = list(extra.get("losses", []))[:max(start - off, 0)]
+    return state, start, losses, manifest
 
 
 def run_resilient(
@@ -40,46 +166,87 @@ def run_resilient(
     cfg: ResilientConfig,
     inject_failure_at: Optional[int] = None,
     monitor: Optional[StragglerMonitor] = None,
+    fault: Optional[FaultPlan] = None,
+    restore_fn: Optional[Callable[[], Optional[tuple]]] = None,
+    manifest_extra: Optional[dict] = None,
 ):
-    """Returns (final_state, history dict)."""
+    """Returns (final_state, history dict).
+
+    Any ``Exception`` from a step (or a surfaced async-save failure) counts
+    as a crash: the driver restores the latest valid committed checkpoint,
+    sleeps a bounded exponential backoff, and replays.  After
+    ``cfg.max_restarts`` failed restarts the exception propagates.
+    ``KeyboardInterrupt``/``SystemExit`` always propagate.
+
+    ``restore_fn`` overrides the default restore — it must return
+    ``(state, start_step, prior_losses)`` (extra trailing values are
+    allowed) or None for a fresh start.  The GNN loop uses this for elastic
+    restore across rank counts.  ``manifest_extra`` is merged into every
+    checkpoint manifest's ``extra`` (static metadata: the mesh fingerprint).
+    """
     saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
     monitor = monitor or StragglerMonitor()
-    history = {"losses": [], "restarts": 0, "straggler_events": 0}
+    history = {"losses": [], "restarts": 0, "straggler_events": 0,
+               "restart_steps": [], "resume_steps": [], "backoffs": []}
+    if inject_failure_at is not None and fault is None:
+        fault = FaultPlan(crash_at_step=inject_failure_at)
+
+    def save_extra(reason: str) -> dict:
+        tail = history["losses"][-cfg.history_tail:]
+        extra = {"reason": reason,
+                 "losses": list(tail),     # copy: async thread serializes later
+                 "losses_offset": len(history["losses"]) - len(tail)}
+        if manifest_extra:
+            extra.update(manifest_extra)
+        return extra
 
     restarts = 0
+    step = 0
     while True:
         try:
-            latest = ckpt.latest_step(cfg.ckpt_dir)
-            if latest is not None:
-                template = init_state_fn()
-                state, manifest = ckpt.restore(cfg.ckpt_dir, template)
-                start = manifest["step"] + 1
-            else:
-                state = init_state_fn()
-                start = 0
+            with (fault.installed() if fault is not None
+                  else contextlib.nullcontext()):
+                restored = (restore_fn() if restore_fn is not None
+                            else _default_restore(cfg, init_state_fn))
+                if restored is None:
+                    state, start = init_state_fn(), 0
+                    history["losses"] = []
+                else:
+                    state, start, prior_losses = restored[0], restored[1], restored[2]
+                    # truncate to the restored prefix — replayed steps must
+                    # not be double-counted in the history
+                    history["losses"] = list(prior_losses)
+                    history["resume_steps"].append(start - 1)
 
-            for step in range(start, n_steps):
-                if inject_failure_at is not None and step == inject_failure_at \
-                        and restarts == 0:
-                    raise InjectedFailure(f"injected at step {step}")
-                batch = batch_fn(step)
-                monitor.start_step()
-                state, metrics = step_fn(state, batch)
-                ev = monitor.end_step(step)
-                if ev is not None:
-                    history["straggler_events"] += 1
-                    if cfg.straggler_checkpoint:
-                        saver.save(step, state, extra={"reason": "straggler"})
-                history["losses"].append(float(metrics.get("loss", 0.0)))
-                if step % cfg.ckpt_every == 0 or step == n_steps - 1:
-                    saver.save(step, state, extra={"reason": "periodic"})
-            saver.wait()
-            return state, history
+                for step in range(start, n_steps):
+                    if fault is not None:
+                        fault.maybe_fail(step)
+                    batch = batch_fn(step)
+                    monitor.start_step()
+                    state, metrics = step_fn(state, batch)
+                    ev = monitor.end_step(step)
+                    history["losses"].append(float(metrics.get("loss", 0.0)))
+                    if ev is not None:
+                        history["straggler_events"] += 1
+                        if cfg.straggler_checkpoint:
+                            saver.save(step, state, extra=save_extra("straggler"))
+                    if step % cfg.ckpt_every == 0 or step == n_steps - 1:
+                        saver.save(step, state, extra=save_extra("periodic"))
+                saver.wait()
+                return state, history
 
-        except InjectedFailure:
+        except Exception:
             restarts += 1
             history["restarts"] = restarts
+            history["restart_steps"].append(step)
             if restarts > cfg.max_restarts:
                 raise
-            saver.wait()
-            # loop re-enters: restore from latest committed checkpoint
+            # a failed in-flight save must not abort the recovery itself
+            try:
+                saver.wait()
+            except Exception:
+                pass
+            delay = backoff_seconds(restarts, cfg)
+            history["backoffs"].append(delay)
+            time.sleep(delay)
+            # loop re-enters: restore from latest valid committed checkpoint

@@ -39,8 +39,23 @@ class StragglerMonitor:
         self._t0 = time.perf_counter()
 
     def end_step(self, step: int) -> Optional[StragglerEvent]:
+        if self._t0 is None:
+            # start_step never ran for this step (e.g. the previous step
+            # died mid-flight and a resilient driver restarted the loop) —
+            # there is nothing valid to measure
+            return None
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         return self.observe(step, dt)
+
+    def reset(self):
+        """Forget the timing statistics (not the recorded events) — used
+        after an elastic restart, where a new rank count changes the
+        per-step time scale and stale EWMA stats would misfire."""
+        self.mean = None
+        self.var = 0.0
+        self.n = 0
+        self._t0 = None
 
     def observe(self, step: int, dt: float) -> Optional[StragglerEvent]:
         self.n += 1

@@ -17,10 +17,25 @@ Two training modes, selected by ``TrainConfig.rollout_steps``:
 Execution policy (backend/schedule/precision/...) is a single
 :class:`~repro.core.graph_state.NMPPlan` on the TrainConfig; the per-level
 halo specs are filled in from the partition at launch.
+
+Elastic fault tolerance (``TrainConfig.resilience``): the loop is driven by
+``repro.runtime.fault_tolerance.run_resilient`` — periodic + straggler-
+triggered async checkpoints whose manifests carry a *mesh fingerprint*
+(mesh hash, rank count, partitioner, plan policy, replay-critical training
+config) and the loss-history tail, catch-all crash recovery with bounded
+exponential backoff, and :func:`resume_elastic` restore.  Because the
+paper's consistency guarantee makes the partition arithmetically invisible
+(Eq. 2/3), a checkpoint written on R ranks restores onto R' ranks — or a
+different partitioner — and the loss trajectory *continues*: bitwise when
+the partition is unchanged, to float32 summation tolerance (~1e-7 relative)
+across a repartition.  Batches are replayed deterministically: every batch
+function is pure in ``step`` (see CONTRIBUTING.md "Elastic resume").
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from types import SimpleNamespace
 from typing import Optional
 
 import numpy as np
@@ -30,13 +45,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import make_gnn_step_fns, shard_graph
 from repro.core.gnn import GNNConfig, init_gnn
-from repro.core.graph_state import NMPPlan, ShardedGraph
+from repro.core.graph_state import AUTO, BLOCKING, OVERLAP, NMPPlan, ShardedGraph
 from repro.core.mesh_gen import SEMMesh, taylor_green_velocity
 from repro.core.partition import PartitionedGraphs, gather_node_features
 from repro.ckpt import checkpoint as ckpt
+from repro.runtime.fault_tolerance import (
+    FaultPlan, ResilientConfig, run_resilient,
+)
 from repro.runtime.straggler import StragglerMonitor
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
-from repro.train.rollout import make_rollout_step_fns, make_tgv_rollout_batch_fn
+from repro.train.rollout import (
+    curriculum_k, make_rollout_step_fns, make_tgv_rollout_batch_fn,
+)
 
 
 @dataclasses.dataclass
@@ -63,6 +83,16 @@ class TrainConfig:
     # anneal pushforward noise linearly from pushforward_noise to this
     # value over the run (None = constant)
     pushforward_noise_final: Optional[float] = None
+    # which mesh decomposition produced ``pg`` ("block" | "spectral") —
+    # recorded in the checkpoint fingerprint so an elastic resume knows
+    # whether the partitioner changed (allowed: results are consistent)
+    partitioner: str = "block"
+    # elastic fault tolerance: not None switches the loop to the
+    # run_resilient driver (auto-resume from ckpt_dir, crash recovery with
+    # bounded backoff, fingerprinted manifests). ``ckpt_dir``/``ckpt_every``
+    # above are the plain fire-and-forget checkpoint knobs and are ignored
+    # when resilience is configured.
+    resilience: Optional[ResilientConfig] = None
 
 
 def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
@@ -78,21 +108,60 @@ def make_tgv_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh, batch: int,
     return batch_fn
 
 
-def train_consistent_gnn(
-    mesh_dev,
-    pg: PartitionedGraphs,
-    sem_mesh: SEMMesh,
-    cfg: GNNConfig,
-    tcfg: TrainConfig,
-    hierarchy=None,
-) -> dict:
-    """Full training run; returns history with losses (paper Fig. 6 right).
+def mesh_fingerprint_hash(sem_mesh: SEMMesh) -> str:
+    """Content hash of the global mesh (node coords + element connectivity).
+    Partition-independent: every rank count / partitioner of the same mesh
+    hashes identically, so it is the checkpoint field that rejects resuming
+    onto a *different problem* while allowing elastic repartitioning."""
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(sem_mesh.coords).tobytes())
+    h.update(np.ascontiguousarray(sem_mesh.elem_nodes).tobytes())
+    return h.hexdigest()[:16]
 
-    ``hierarchy`` (``repro.core.coarsen.MultiLevelGraphs`` with ``pg`` as
-    level 0) enables the consistent multilevel V-cycle when
-    ``cfg.n_levels > 1``: each coarse level gets its own halo spec and its
-    static arrays ride along as nested ShardedGraph levels.
-    """
+
+# fingerprint fields that MUST match between save and resume: they define
+# the trajectory (problem + deterministic batch replay + optimizer math).
+# Everything else (ranks, partitioner, halo_mode, policy) is execution
+# layout — arithmetically invisible under the consistency guarantee.
+_REPLAY_FIELDS = ("mesh_hash", "n_global", "seed", "batch", "lr",
+                  "rollout_steps", "rollout_curriculum", "pushforward_noise",
+                  "pushforward_noise_final", "n_levels", "hidden")
+
+
+def run_fingerprint(sem_mesh: SEMMesh, pg: PartitionedGraphs, cfg: GNNConfig,
+                    tcfg: TrainConfig, plan: NMPPlan) -> dict:
+    """The manifest ``extra["fingerprint"]`` a checkpoint carries."""
+    return {
+        "mesh_hash": mesh_fingerprint_hash(sem_mesh),
+        "n_global": int(pg.n_global),
+        "ranks": int(pg.R),
+        "partitioner": tcfg.partitioner,
+        "halo_mode": tcfg.halo_mode,
+        "policy": plan.policy(),
+        "seed": int(tcfg.seed),
+        "batch": int(tcfg.batch),
+        "lr": float(tcfg.lr),
+        "rollout_steps": int(tcfg.rollout_steps),
+        "rollout_curriculum": list(tcfg.rollout_curriculum),
+        "pushforward_noise": float(tcfg.pushforward_noise),
+        "pushforward_noise_final": tcfg.pushforward_noise_final,
+        "n_levels": int(cfg.n_levels),
+        "hidden": int(cfg.hidden),
+    }
+
+
+def _init_state(cfg: GNNConfig, tcfg: TrainConfig, opt_cfg: AdamWConfig) -> dict:
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = init_gnn(key, cfg)
+    return {"params": params, "opt": init_adamw(params, opt_cfg), "rng": key}
+
+
+def _build_execution(mesh_dev, pg, sem_mesh, cfg, tcfg, hierarchy):
+    """Build everything a training step needs for the CURRENT partition:
+    plan (halo specs + resolved schedule), ShardedGraph, sharded placement,
+    and the per-step grad/update closures.  Shared by the plain and the
+    resilient paths — an elastic resume simply rebuilds this for the new
+    rank grid and restores params/opt into it."""
     if cfg.n_levels > 1 and hierarchy is None:
         raise ValueError("cfg.n_levels > 1 needs hierarchy= "
                          "(repro.core.coarsen.build_hierarchy)")
@@ -108,16 +177,24 @@ def train_consistent_gnn(
     graph = ShardedGraph.build(
         pg, sem_mesh.coords, plan,
         hierarchy=hierarchy if cfg.n_levels > 1 else None)
-    # schedule="auto": measure blocking vs overlap on this (graph, R) once
-    # and commit to the winner (no-op for fixed schedules)
+    # schedule="auto": on a same-rank-count resume, reuse the schedule the
+    # original run measured (recorded in the manifest fingerprint) so the
+    # replayed trajectory runs the exact same program; otherwise measure
+    # blocking vs overlap on this (graph, R) once and commit to the winner
+    ckpt_dir = tcfg.resilience.ckpt_dir if tcfg.resilience else tcfg.ckpt_dir
+    if plan.schedule == AUTO and ckpt_dir:
+        try:
+            manifest = ckpt.peek_manifest(ckpt_dir)
+        except ckpt.CheckpointCorruption:
+            manifest = None
+        fp = (manifest or {}).get("extra", {}).get("fingerprint", {})
+        prev = fp.get("policy", {})
+        if (fp.get("ranks") == pg.R and prev.get("backend") == plan.backend
+                and prev.get("schedule") in (BLOCKING, OVERLAP)):
+            plan = plan.replace(schedule=prev["schedule"])
     plan = plan.autotune(graph, hidden=cfg.hidden)
 
     opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
-    params = init_gnn(jax.random.PRNGKey(tcfg.seed), cfg)
-    opt_state = init_adamw(params, opt_cfg)
-
-    monitor = StragglerMonitor()
-    saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
 
     @jax.jit
     def update(params, opt_state, loss, grads):
@@ -132,7 +209,6 @@ def train_consistent_gnn(
         # increasing K (the 1 -> 2 -> 4 schedule of the pushforward line of
         # work), with step fns / batch fns built once per distinct K
         stages = stages or (tcfg.rollout_steps,)
-        stage_len = max(1, -(-tcfg.n_steps // len(stages)))
         noise_scale = tcfg.pushforward_noise
         if tcfg.pushforward_noise_final is not None:
             n0 = tcfg.pushforward_noise
@@ -143,7 +219,7 @@ def train_consistent_gnn(
         fns_by_k = {}
 
         def k_for_step(step: int) -> int:
-            return stages[min(step // stage_len, len(stages) - 1)]
+            return curriculum_k(stages, tcfg.n_steps, step)
 
         def grad_for_step(params, step):
             k = k_for_step(step)
@@ -170,16 +246,161 @@ def train_consistent_gnn(
             xs = jax.device_put(jnp.asarray(batch_fn(step)), feat_sh)
             return grad_step(params, xs, xs, gs)
 
-    history = {"losses": [], "rollout_k": [], "schedule": plan.schedule}
+    return SimpleNamespace(plan=plan, graph=graph, gs=gs, opt_cfg=opt_cfg,
+                           update=update, grad_for_step=grad_for_step,
+                           k_for_step=k_for_step)
+
+
+def resume_elastic(ckpt_dir, mesh_dev, pg, sem_mesh, cfg, tcfg, plan):
+    """Elastic restore: latest valid checkpoint onto the CURRENT mesh/partition.
+
+    The caller has already rebuilt ``PartitionedGraphs`` (+ ``ShardedGraph``
+    + ``NMPPlan`` via :func:`_build_execution`) for the new rank grid —
+    block or spectral; this function restores the *portable* state
+    (params, opt, rng are partition-independent: replicated over the graph
+    axis) onto ``mesh_dev`` via per-leaf shardings, validates the manifest
+    fingerprint, and classifies the resume:
+
+      * replay-critical mismatch (different mesh, seed, batch schedule,
+        optimizer or model config) → ``ValueError`` naming the field: the
+        checkpoint belongs to a different trajectory;
+      * execution-layout mismatch (rank count, partitioner, halo mode,
+        plan policy) → allowed, returned as the ``elastic`` record — the
+        consistency guarantee makes the trajectory continue.
+
+    Returns ``None`` when no committed checkpoint exists, else
+    ``(state, start_step, prior_losses, manifest, elastic_or_None)``.
+    Corrupted newest checkpoints fall back to the previous committed step
+    (``ckpt.restore_with_fallback``).
+    """
+    if not ckpt.committed_steps(ckpt_dir):
+        return None
+    opt_cfg = AdamWConfig(schedule=lambda s: jnp.asarray(tcfg.lr), weight_decay=0.0)
+    template = _init_state(cfg, tcfg, opt_cfg)
+    replicated = NamedSharding(mesh_dev, P())
+    shardings = jax.tree.map(lambda _: replicated, template)
+    state, manifest = ckpt.restore_with_fallback(ckpt_dir, template,
+                                                 shardings=shardings)
+    fp_now = run_fingerprint(sem_mesh, pg, cfg, tcfg, plan)
+    fp_old = manifest.get("extra", {}).get("fingerprint")
+    elastic = None
+    if fp_old:
+        for field in _REPLAY_FIELDS:
+            if fp_old.get(field) != fp_now.get(field):
+                raise ValueError(
+                    f"cannot resume from {ckpt_dir}: replay-critical "
+                    f"fingerprint field {field!r} changed "
+                    f"({fp_old.get(field)!r} -> {fp_now.get(field)!r}) — "
+                    "this checkpoint belongs to a different trajectory")
+        changed = {k: [fp_old.get(k), fp_now.get(k)]
+                   for k in ("ranks", "partitioner", "halo_mode", "policy")
+                   if fp_old.get(k) != fp_now.get(k)}
+        if changed:
+            elastic = {"step": manifest["step"] + 1,
+                       "from_ranks": fp_old.get("ranks"),
+                       "to_ranks": fp_now.get("ranks"),
+                       "from_partitioner": fp_old.get("partitioner"),
+                       "to_partitioner": fp_now.get("partitioner"),
+                       "changed": changed}
+    start = manifest["step"] + 1
+    extra = manifest.get("extra", {})
+    off = int(extra.get("losses_offset", 0))
+    losses = list(extra.get("losses", []))[:max(start - off, 0)]
+    return state, start, losses, manifest, elastic
+
+
+def _train_resilient(ex, mesh_dev, pg, sem_mesh, cfg, tcfg,
+                     fault: Optional[FaultPlan]) -> dict:
+    rcfg = tcfg.resilience
+    fp = run_fingerprint(sem_mesh, pg, cfg, tcfg, ex.plan)
+    monitor = StragglerMonitor()
+    elastic_events = []
+
+    def init_state_fn():
+        return _init_state(cfg, tcfg, ex.opt_cfg)
+
+    def step_fn(state, step):
+        loss, grads = ex.grad_for_step(state["params"], step)
+        params, opt_state, _ = ex.update(state["params"], state["opt"],
+                                         loss, grads)
+        return ({"params": params, "opt": opt_state, "rng": state["rng"]},
+                {"loss": float(loss)})
+
+    def restore_fn():
+        res = resume_elastic(rcfg.ckpt_dir, mesh_dev, pg, sem_mesh, cfg,
+                             tcfg, ex.plan)
+        if res is None:
+            return None
+        state, start, losses, manifest, elastic = res
+        if elastic is not None:
+            elastic_events.append(elastic)
+            # the per-step time scale changed with the layout — stale EWMA
+            # stats would flag the first steps as stragglers
+            monitor.reset()
+        return state, start, losses
+
+    state, history = run_resilient(
+        init_state_fn, step_fn, lambda step: step, tcfg.n_steps, rcfg,
+        monitor=monitor, fault=fault, restore_fn=restore_fn,
+        manifest_extra={"fingerprint": fp})
+    history["rollout_k"] = [ex.k_for_step(s) for s in range(tcfg.n_steps)]
+    history["schedule"] = ex.plan.schedule
+    history["elastic"] = elastic_events[-1] if elastic_events else None
+    history["params"] = state["params"]
+    return history
+
+
+def train_consistent_gnn(
+    mesh_dev,
+    pg: PartitionedGraphs,
+    sem_mesh: SEMMesh,
+    cfg: GNNConfig,
+    tcfg: TrainConfig,
+    hierarchy=None,
+    fault: Optional[FaultPlan] = None,
+) -> dict:
+    """Full training run; returns history with losses (paper Fig. 6 right).
+
+    ``hierarchy`` (``repro.core.coarsen.MultiLevelGraphs`` with ``pg`` as
+    level 0) enables the consistent multilevel V-cycle when
+    ``cfg.n_levels > 1``: each coarse level gets its own halo spec and its
+    static arrays ride along as nested ShardedGraph levels.
+
+    With ``tcfg.resilience`` set, the run is driven by ``run_resilient``:
+    it auto-resumes from the newest valid checkpoint in
+    ``resilience.ckpt_dir`` (elastically — the checkpoint may come from a
+    different rank count or partitioner), recovers from crashes up to
+    ``max_restarts`` with bounded exponential backoff, and checkpoints
+    periodically plus on straggler events.  ``fault`` injects failures for
+    tests/drivers (see ``FaultPlan``); it is only honored on the resilient
+    path.
+    """
+    ex = _build_execution(mesh_dev, pg, sem_mesh, cfg, tcfg, hierarchy)
+    if tcfg.resilience is not None:
+        return _train_resilient(ex, mesh_dev, pg, sem_mesh, cfg, tcfg, fault)
+
+    fp = run_fingerprint(sem_mesh, pg, cfg, tcfg, ex.plan)
+    state = _init_state(cfg, tcfg, ex.opt_cfg)
+    params, opt_state = state["params"], state["opt"]
+    monitor = StragglerMonitor()
+    saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+
+    history = {"losses": [], "rollout_k": [], "schedule": ex.plan.schedule}
     for step in range(tcfg.n_steps):
         monitor.start_step()
-        loss, grads = grad_for_step(params, step)
-        params, opt_state, _ = update(params, opt_state, loss, grads)
+        loss, grads = ex.grad_for_step(params, step)
+        params, opt_state, _ = ex.update(params, opt_state, loss, grads)
         monitor.end_step(step)
         history["losses"].append(float(loss))
-        history["rollout_k"].append(k_for_step(step))
+        history["rollout_k"].append(ex.k_for_step(step))
         if saver and (step % tcfg.ckpt_every == 0 or step == tcfg.n_steps - 1):
-            saver.save(step, {"params": params, "opt": opt_state})
+            # same tree + fingerprinted manifest as the resilient path, so
+            # a plain run's checkpoints are elastically resumable too
+            saver.save(step, {"params": params, "opt": opt_state,
+                              "rng": state["rng"]},
+                       extra={"reason": "periodic", "fingerprint": fp,
+                              "losses": list(history["losses"]),
+                              "losses_offset": 0})
     if saver:
         saver.wait()
     history["straggler_events"] = len(monitor.events)

@@ -24,6 +24,15 @@ Shapes (stacked, host side):
                                 must be identical across coincident copies —
                                 generate on the global node field and
                                 ``gather_node_features`` it.
+
+Deterministic-replay contract (elastic resume, CONTRIBUTING.md): every
+batch function here is PURE in ``step`` — snapshot times are
+``(step*batch + b)*dt`` and noise is drawn from a fresh
+``default_rng(seed + step*batch + b)`` — so a run restored from a step-k
+checkpoint replays steps k+1.. with exactly the batches the uninterrupted
+run saw.  Curriculum state is equally replayable: :func:`curriculum_k` maps
+``step`` to its rollout depth as a pure function, never as mutable loop
+state.
 """
 from __future__ import annotations
 
@@ -39,6 +48,21 @@ from repro.core.gnn import GNNConfig, gnn_forward
 from repro.core.graph_state import NMPPlan, as_graph
 from repro.core.mesh_gen import SEMMesh, taylor_green_velocity
 from repro.core.partition import PartitionedGraphs, gather_node_features
+
+
+def curriculum_k(stages: Sequence[int], n_steps: int, step: int) -> int:
+    """Rollout depth K for ``step`` under a staged curriculum.
+
+    ``stages`` (e.g. ``(1, 2, 4)``) split ``n_steps`` into even stages of
+    increasing K.  Pure in ``step`` — part of the deterministic-replay
+    contract: an elastically resumed run recomputes the same K schedule the
+    original run used instead of carrying it as loop state.
+    """
+    stages = tuple(stages)
+    if not stages:
+        return 1
+    stage_len = max(1, -(-n_steps // len(stages)))
+    return stages[min(step // stage_len, len(stages) - 1)]
 
 
 def rollout_step(params, x0, targets, graph, plan: NMPPlan,

@@ -1,0 +1,220 @@
+"""Elastic fault-tolerance driver: kill/resume across REAL process boundaries.
+
+Unlike the in-process tests (tests/test_resilience.py), every training run
+here is a fresh subprocess with its own forced host-device count, so a
+"dropped rank" is a real ``os._exit`` mid-run (async checkpoint thread dies
+in flight, no cleanup) and a resume is a cold process that must rebuild the
+partition — possibly for a DIFFERENT rank count or partitioner — and
+restore from disk.  On real collectives (shard_map over a
+('data','graph') mesh) the orchestrator asserts:
+
+  1. same-R kill -> resume reproduces the uninterrupted run's loss
+     trajectory BITWISE (XLA CPU is deterministic; the restored
+     params/opt/rng are byte-identical and batches replay by step);
+  2. elastic R -> R' resume (and a partitioner switch, block <-> spectral):
+     the restored history prefix is bitwise and the post-resume trajectory
+     continues within Eq. 2/3 float32 consistency tolerance — the partition
+     is arithmetically invisible, only summation order changes;
+  3. a crash INSIDE the checkpoint save (no COMMIT written) is recovered
+     in-process: the half-written step is skipped, restore falls back to
+     the previous committed step, and the final trajectory is still bitwise;
+  4. a committed shard corrupted after the fact is detected by checksum and
+     restore falls back to the previous committed step (bitwise trajectory).
+
+Respects an externally-forced ``XLA_FLAGS=--xla_force_host_platform_
+device_count={2,4}`` (the CI consistency-matrix resilience leg) as the rank
+budget R; resumes use R' = R // 2.  Standalone invocations default to 4.
+``--partitioner`` selects the decomposition of the killed run; the elastic
+resume deliberately uses the OTHER partitioner.
+
+Exit code 0 = all assertions passed.
+"""
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+GRIDS = {1: (1, 1, 1), 2: (2, 1, 1), 4: (2, 2, 1), 8: (4, 2, 1)}
+KILL_EXIT = 17
+STEPS = 12
+EVERY = 3
+KILL_AT = 8
+# post-resume tolerance for a repartitioned trajectory: per-step float32
+# summation reorder is ~1e-7 relative (see consistency_driver), with a few
+# optimizer steps of compounding on top
+ELASTIC_RTOL = 1e-4
+
+
+def build_parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="blocking",
+                    choices=["blocking", "overlap"])
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"])
+    # worker mode (one training run in this process)
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--ranks", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=EVERY)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--crash-save-at", type=int, default=None)
+    ap.add_argument("--save-stage", default="pre_commit",
+                    choices=["pre_commit", "truncate_shard"])
+    ap.add_argument("--out", default=None)
+    return ap
+
+
+def run_worker(args):
+    # must precede the jax import: each worker forces its own device count
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.ranks}")
+    from repro.core import GNNConfig, NMPPlan, box_mesh, partition_mesh
+    from repro.ckpt import checkpoint as ckpt
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.fault_tolerance import FaultPlan, ResilientConfig
+    from repro.train.loop import TrainConfig, train_consistent_gnn
+
+    sem = box_mesh((2, 2, 2), p=2)
+    pg = partition_mesh(sem, GRIDS[args.ranks], method=args.partitioner)
+    mesh_dev = make_mesh((1, args.ranks), ("data", "graph"))
+    cfg = GNNConfig(hidden=8, n_mp_layers=2)
+    rc = ResilientConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         max_restarts=3, backoff_base=0.01)
+    tcfg = TrainConfig(n_steps=args.steps, batch=1, lr=1e-3,
+                       halo_mode="neighbor", seed=0,
+                       plan=NMPPlan(schedule=args.schedule),
+                       partitioner=args.partitioner, resilience=rc)
+    fault = None
+    if args.kill_at is not None:
+        fault = FaultPlan(kill_process_at_step=args.kill_at,
+                          exit_code=KILL_EXIT)
+    elif args.crash_save_at is not None:
+        fault = FaultPlan(crash_save_at_step=args.crash_save_at,
+                          save_stage=args.save_stage)
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg, fault=fault)
+    out = {"losses": hist["losses"], "restarts": hist["restarts"],
+           "resume_steps": hist["resume_steps"], "elastic": hist["elastic"],
+           "latest_step": ckpt.latest_step(args.ckpt_dir)}
+    Path(args.out).write_text(json.dumps(out))
+    print(f"worker R={args.ranks} partitioner={args.partitioner} done: "
+          f"{len(hist['losses'])} losses, restarts={hist['restarts']}")
+
+
+def spawn(workdir, tag, ranks, partitioner, schedule, ckpt_dir, *,
+          kill_at=None, crash_save_at=None, save_stage="pre_commit",
+          expect_rc=0):
+    out = Path(workdir) / f"{tag}.json"
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+           "--ranks", str(ranks), "--partitioner", partitioner,
+           "--schedule", schedule, "--ckpt-dir", str(ckpt_dir),
+           "--out", str(out)]
+    if kill_at is not None:
+        cmd += ["--kill-at", str(kill_at)]
+    if crash_save_at is not None:
+        cmd += ["--crash-save-at", str(crash_save_at),
+                "--save-stage", save_stage]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=600)
+    if r.returncode != expect_rc:
+        print(r.stdout)
+        print(r.stderr, file=sys.stderr)
+        raise AssertionError(
+            f"worker {tag}: expected exit {expect_rc}, got {r.returncode}")
+    return json.loads(out.read_text()) if expect_rc == 0 else None
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.worker:
+        return run_worker(args)
+
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                  os.environ.get("XLA_FLAGS", ""))
+    budget = int(m.group(1)) if m else 4
+    assert budget in GRIDS, f"need a 1/2/4/8 device budget, got {budget}"
+    R, R2 = budget, max(budget // 2, 1)
+    other = {"block": "spectral", "spectral": "block"}[args.partitioner]
+    print(f"resilience driver: R={R} -> R'={R2}, "
+          f"partitioner={args.partitioner} (elastic resume -> {other}), "
+          f"schedule={args.schedule}")
+
+    with tempfile.TemporaryDirectory() as wd:
+        sp = lambda *a, **k: spawn(wd, *a, schedule=args.schedule, **k)  # noqa: E731
+
+        ref = sp("ref", R, args.partitioner, ckpt_dir=Path(wd) / "dref")
+        assert len(ref["losses"]) == STEPS and ref["restarts"] == 0
+
+        # -- 1. same-R hard kill (os._exit mid-run) -> cold-process resume
+        d1 = Path(wd) / "d1"
+        sp("kill1", R, args.partitioner, ckpt_dir=d1,
+           kill_at=KILL_AT, expect_rc=KILL_EXIT)
+        r1 = sp("resume1", R, args.partitioner, ckpt_dir=d1)
+        assert r1["losses"] == ref["losses"], (
+            "same-R resume is not bitwise:\n"
+            f"  ref    {ref['losses']}\n  resume {r1['losses']}")
+        assert r1["resume_steps"], "resume1 never restored a checkpoint"
+        print(f"same-R kill/resume: bitwise over {STEPS} steps "
+              f"(resumed from step {r1['resume_steps'][0]})")
+
+        # -- 2. elastic: kill on R ranks, resume on R' with the OTHER
+        #       partitioner — prefix bitwise, continuation within tolerance
+        d2 = Path(wd) / "d2"
+        sp("kill2", R, args.partitioner, ckpt_dir=d2,
+           kill_at=KILL_AT, expect_rc=KILL_EXIT)
+        r2 = sp("resume2", R2, other, ckpt_dir=d2)
+        s = r2["resume_steps"][0]
+        assert r2["losses"][:s + 1] == ref["losses"][:s + 1], (
+            "restored history prefix is not bitwise")
+        for i in range(s + 1, STEPS):
+            dev = abs(r2["losses"][i] - ref["losses"][i])
+            assert dev <= ELASTIC_RTOL * max(1.0, abs(ref["losses"][i])), (
+                f"elastic continuation diverged at step {i}: "
+                f"{r2['losses'][i]} vs {ref['losses'][i]} (dev {dev:.2e})")
+        if R2 != R:
+            el = r2["elastic"]
+            assert el and el["from_ranks"] == R and el["to_ranks"] == R2, el
+        max_dev = max(abs(a - b) for a, b in
+                      zip(r2["losses"][s + 1:], ref["losses"][s + 1:]))
+        print(f"elastic R={R}/{args.partitioner} -> R'={R2}/{other}: prefix "
+              f"bitwise, continuation max dev {max_dev:.2e} <= {ELASTIC_RTOL}")
+
+        # -- 3. crash INSIDE the async checkpoint save (no COMMIT): the
+        #       surfaced save error triggers an in-process restart that
+        #       falls back past the half-written step
+        r3 = sp("savecrash", R, args.partitioner, ckpt_dir=Path(wd) / "d3",
+                crash_save_at=2 * EVERY)
+        assert r3["restarts"] >= 1, "save crash never surfaced"
+        assert r3["losses"] == ref["losses"], (
+            "recovery from a mid-checkpoint crash is not bitwise")
+        assert r3["resume_steps"] and r3["resume_steps"][0] < 2 * EVERY, (
+            "restore did not fall back past the uncommitted step")
+        print(f"mid-checkpoint crash: restarted {r3['restarts']}x, fell back "
+              f"to step {r3['resume_steps'][0]}, bitwise trajectory")
+
+        # -- 4. corrupt a COMMITTED shard post-hoc: checksum detects it and
+        #       restore falls back to the previous committed step
+        d4 = Path(wd) / "d4"
+        sp("kill4", R, args.partitioner, ckpt_dir=d4,
+           kill_at=KILL_AT, expect_rc=KILL_EXIT)
+        from repro.ckpt import checkpoint as ckpt
+        from repro.runtime.fault_tolerance import FaultPlan
+        newest = ckpt.latest_step(d4)
+        assert newest is not None and newest > 0
+        FaultPlan.corrupt_shard(d4, newest)
+        r4 = sp("resume4", R, args.partitioner, ckpt_dir=d4)
+        assert r4["resume_steps"][0] < newest, (
+            f"resume used the corrupted step {newest}")
+        assert r4["losses"] == ref["losses"], (
+            "recovery from a corrupted shard is not bitwise")
+        print(f"corrupted shard at step {newest}: fell back to step "
+              f"{r4['resume_steps'][0]}, bitwise trajectory")
+
+    print("RESILIENCE DRIVER PASS")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,358 @@
+"""Elastic fault-tolerant training: in-process tests.
+
+Covers the resilience layer end-to-end on a single-device mesh (R = 1, so
+everything runs in-process; real multi-device kill/resume lives in
+tests/drivers/resilience_driver.py and the CI resilience leg):
+
+  * crash -> restore -> replay is BITWISE identical to an uninterrupted run
+    (one-step and K-rollout training, and run extension across calls);
+  * elastic resume across a partitioner switch (block <-> spectral): the
+    fingerprint records the change and the trajectory continues within
+    consistency tolerance;
+  * replay-critical fingerprint mismatches (different mesh, different seed)
+    are rejected with an actionable error;
+  * run_resilient recovers from ANY exception (not just InjectedFailure),
+    applies bounded exponential backoff, and re-raises past max_restarts;
+  * checkpoint hardening: template shape/key validation naming the bad key,
+    checksum detection of corrupted shards with fallback to the previous
+    committed step, prune never deleting the newest step, latest_step
+    surviving leftover *.tmp debris;
+  * seed primitives: AsyncCheckpointer error surfacing on wait(), crash
+    mid-save leaving no COMMIT, StragglerMonitor EWMA threshold behavior.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import GNNConfig, box_mesh, partition_mesh
+from repro.launch.mesh import make_mesh
+from repro.runtime.fault_tolerance import (
+    FaultPlan, InjectedFailure, ResilientConfig, backoff_seconds,
+    run_resilient,
+)
+from repro.runtime.straggler import StragglerMonitor
+from repro.train.loop import TrainConfig, train_consistent_gnn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    sem = box_mesh((2, 2, 2), p=2)
+    pg = partition_mesh(sem, (1, 1, 1))
+    mesh_dev = make_mesh((1, 1), ("data", "graph"))
+    cfg = GNNConfig(hidden=8, n_mp_layers=2)
+    return sem, pg, mesh_dev, cfg
+
+
+def _base(**kw):
+    kw.setdefault("n_steps", 8)
+    kw.setdefault("batch", 1)
+    kw.setdefault("lr", 1e-3)
+    kw.setdefault("halo_mode", "none")
+    kw.setdefault("seed", 0)
+    return TrainConfig(**kw)
+
+
+def _rc(d, **kw):
+    kw.setdefault("ckpt_every", 2)
+    kw.setdefault("backoff_base", 0.001)
+    return ResilientConfig(ckpt_dir=str(d), **kw)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: resilient GNN training — bitwise recovery, elastic resume
+# ---------------------------------------------------------------------------
+
+def test_crash_recovery_bitwise_one_step(setup, tmp_path):
+    """Injected crash at step 5 -> restore -> replay: bitwise == uninterrupted."""
+    sem, pg, mesh_dev, cfg = setup
+    ref = train_consistent_gnn(mesh_dev, pg, sem, cfg, _base())
+    tcfg = _base(resilience=_rc(tmp_path))
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
+                                fault=FaultPlan(crash_at_step=5))
+    assert hist["restarts"] == 1
+    assert hist["resume_steps"] and hist["resume_steps"][0] <= 4
+    assert hist["losses"] == ref["losses"]          # bitwise, incl. replay
+    for a, b in zip(jax.tree.leaves(hist["params"]),
+                    jax.tree.leaves(ref["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crash_recovery_bitwise_rollout(setup, tmp_path):
+    """Same guarantee on the K-rollout path (curriculum + pushforward noise)."""
+    sem, pg, mesh_dev, cfg = setup
+    kw = dict(rollout_curriculum=(1, 2), pushforward_noise=0.01,
+              pushforward_noise_final=0.0)
+    ref = train_consistent_gnn(mesh_dev, pg, sem, cfg, _base(**kw))
+    tcfg = _base(**kw, resilience=_rc(tmp_path))
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg, tcfg,
+                                fault=FaultPlan(crash_at_step=5))
+    assert hist["restarts"] == 1
+    assert hist["losses"] == ref["losses"]
+    assert hist["rollout_k"] == ref["rollout_k"]
+
+
+def test_resume_extends_run_bitwise(setup, tmp_path):
+    """A completed 4-step resilient run resumed to 8 steps == one 8-step run."""
+    sem, pg, mesh_dev, cfg = setup
+    ref = train_consistent_gnn(mesh_dev, pg, sem, cfg, _base())
+    train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                         _base(n_steps=4, resilience=_rc(tmp_path)))
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                                _base(resilience=_rc(tmp_path)))
+    assert hist["resume_steps"] == [3]
+    assert hist["losses"] == ref["losses"]
+
+
+@pytest.mark.parametrize("save_with,resume_with",
+                         [("block", "spectral"), ("spectral", "block")])
+def test_elastic_partitioner_switch(setup, tmp_path, save_with, resume_with):
+    """Checkpoint under one partitioner, resume under the other: the
+    fingerprint records the elastic change and the trajectory continues
+    within Eq. 2/3 consistency tolerance."""
+    sem, _, mesh_dev, cfg = setup
+    ref = train_consistent_gnn(
+        mesh_dev, partition_mesh(sem, (1, 1, 1), method=save_with), sem, cfg,
+        _base(partitioner=save_with))
+    train_consistent_gnn(
+        mesh_dev, partition_mesh(sem, (1, 1, 1), method=save_with), sem, cfg,
+        _base(n_steps=4, partitioner=save_with, resilience=_rc(tmp_path)))
+    hist = train_consistent_gnn(
+        mesh_dev, partition_mesh(sem, (1, 1, 1), method=resume_with), sem,
+        cfg, _base(partitioner=resume_with, resilience=_rc(tmp_path)))
+    el = hist["elastic"]
+    assert el is not None and el["from_partitioner"] == save_with
+    assert el["to_partitioner"] == resume_with and el["step"] == 4
+    assert hist["losses"][:4] == ref["losses"][:4]      # restored prefix
+    for a, b in zip(hist["losses"][4:], ref["losses"][4:]):
+        assert abs(a - b) < 1e-6 * max(1.0, abs(b))
+
+
+def test_replay_critical_mismatch_rejected(setup, tmp_path):
+    """Resuming onto a different mesh or with a different seed is refused
+    with an error naming the fingerprint field."""
+    sem, pg, mesh_dev, cfg = setup
+    train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                         _base(n_steps=4, resilience=_rc(tmp_path)))
+    sem2 = box_mesh((2, 2, 2), p=3)                      # different problem
+    pg2 = partition_mesh(sem2, (1, 1, 1))
+    with pytest.raises(ValueError, match="mesh_hash"):
+        train_consistent_gnn(mesh_dev, pg2, sem2, cfg,
+                             _base(resilience=_rc(tmp_path)))
+    with pytest.raises(ValueError, match="seed"):
+        train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                             _base(seed=1, resilience=_rc(tmp_path)))
+
+
+def test_mid_checkpoint_crash_recovers_bitwise(setup, tmp_path):
+    """A save that dies before COMMIT surfaces via the async checkpointer,
+    triggers a restart, and restore falls back past the half-written step."""
+    sem, pg, mesh_dev, cfg = setup
+    ref = train_consistent_gnn(mesh_dev, pg, sem, cfg, _base())
+    tcfg = _base(resilience=_rc(tmp_path))
+    hist = train_consistent_gnn(
+        mesh_dev, pg, sem, cfg, tcfg,
+        fault=FaultPlan(crash_save_at_step=4, save_stage="pre_commit"))
+    assert hist["restarts"] >= 1
+    assert hist["resume_steps"][0] < 4                   # fell back
+    assert hist["losses"] == ref["losses"]
+
+
+def test_corrupted_shard_falls_back_bitwise(setup, tmp_path):
+    """Post-commit corruption is caught by checksum; restore falls back to
+    the previous committed step and the replayed trajectory is bitwise."""
+    sem, pg, mesh_dev, cfg = setup
+    ref = train_consistent_gnn(mesh_dev, pg, sem, cfg, _base())
+    train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                         _base(n_steps=5, resilience=_rc(tmp_path)))
+    newest = ckpt.latest_step(tmp_path)
+    assert newest == 4
+    FaultPlan.corrupt_shard(tmp_path, newest)
+    hist = train_consistent_gnn(mesh_dev, pg, sem, cfg,
+                                _base(resilience=_rc(tmp_path)))
+    assert hist["resume_steps"][0] < newest
+    assert hist["losses"] == ref["losses"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: run_resilient catch-all recovery + backoff
+# ---------------------------------------------------------------------------
+
+def _toy():
+    def init_state():
+        return {"w": jnp.zeros(4), "step": jnp.asarray(0)}
+
+    def step_fn(state, batch):
+        w = state["w"] + batch
+        return {"w": w, "step": state["step"] + 1}, {"loss": float(w.sum())}
+
+    def batch_fn(step):
+        return jnp.full((4,), float(step % 7) * 0.25)
+
+    return init_state, step_fn, batch_fn
+
+
+def test_noninjected_failure_recovered(tmp_path):
+    """A real crash (here: RuntimeError from the step fn) is recovered, not
+    just the test-only InjectedFailure — regression for the seed bug where
+    only InjectedFailure was caught."""
+    init_state, step_fn, batch_fn = _toy()
+    fired = []
+
+    def flaky_step(state, batch):
+        if int(state["step"]) == 9 and not fired:
+            fired.append(1)
+            raise RuntimeError("spurious OOM")
+        return step_fn(state, batch)
+
+    cfg = ResilientConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                          max_restarts=2, backoff_base=0.001)
+    state, hist = run_resilient(init_state, flaky_step, batch_fn, 15, cfg)
+    assert hist["restarts"] == 1
+    ref = init_state()
+    for s in range(15):
+        ref, _ = step_fn(ref, batch_fn(s))
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.asarray(ref["w"]))
+    # the history holds exactly one loss per step despite the replay
+    assert len(hist["losses"]) == 15
+    assert hist["backoffs"] == [0.001]
+
+
+def test_persistent_failure_reraises_past_max_restarts(tmp_path):
+    init_state, step_fn, batch_fn = _toy()
+
+    def broken_step(state, batch):
+        raise OSError("disk gone")
+
+    cfg = ResilientConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                          max_restarts=2, backoff_base=0.001)
+    with pytest.raises(OSError, match="disk gone"):
+        run_resilient(init_state, broken_step, batch_fn, 10, cfg)
+
+
+def test_backoff_is_bounded_exponential():
+    cfg = ResilientConfig(backoff_base=0.5, backoff_max=3.0)
+    assert [backoff_seconds(r, cfg) for r in (1, 2, 3, 4, 5)] == \
+        [0.5, 1.0, 2.0, 3.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# satellite: checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def test_restore_names_mismatched_key(tmp_path):
+    ckpt.save(tmp_path, 0, {"a": jnp.zeros((2, 3)), "b": jnp.ones(4)})
+    with pytest.raises(ValueError, match="'a'"):
+        ckpt.restore(tmp_path, {"a": jnp.zeros((3, 2)), "b": jnp.ones(4)})
+    with pytest.raises(ValueError, match="extra"):
+        ckpt.restore(tmp_path, {"a": jnp.zeros((2, 3)), "b": jnp.ones(4),
+                                "extra": jnp.zeros(1)})
+
+
+def test_corrupted_shard_detected_and_fallback(tmp_path):
+    tree = {"w": jnp.arange(64, dtype=jnp.float32)}
+    ckpt.save(tmp_path, 0, tree)
+    ckpt.save(tmp_path, 5, {"w": tree["w"] + 1})
+    FaultPlan.corrupt_shard(tmp_path, 5)
+    with pytest.raises(ckpt.CheckpointCorruption):
+        ckpt.restore(tmp_path, tree, step=5)
+    restored, manifest = ckpt.restore_with_fallback(tmp_path, tree)
+    assert manifest["step"] == 0
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    # every committed step corrupted -> FileNotFoundError, not a crash
+    FaultPlan.corrupt_shard(tmp_path, 0)
+    with pytest.raises(FileNotFoundError, match="all corrupted"):
+        ckpt.restore_with_fallback(tmp_path, tree)
+
+
+def test_prune_never_deletes_newest(tmp_path):
+    for s in (0, 5, 10):
+        ckpt.save(tmp_path, s, {"x": jnp.full(3, float(s))})
+    ckpt.prune(tmp_path, keep=0)                        # misconfigured
+    assert ckpt.committed_steps(tmp_path) == [10]
+    ckpt.prune(tmp_path, keep=-3)
+    assert ckpt.committed_steps(tmp_path) == [10]
+
+
+def test_latest_step_survives_tmp_debris(tmp_path):
+    ckpt.save(tmp_path, 3, {"x": jnp.zeros(2)})
+    # a crash mid-save leaves step_*.tmp behind; it must not break scanning
+    (tmp_path / "step_0000000007.tmp").mkdir()
+    (tmp_path / "garbage").mkdir()
+    assert ckpt.latest_step(tmp_path) == 3
+    ckpt.prune(tmp_path, keep=1)
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+# ---------------------------------------------------------------------------
+# satellite: seed primitives — async errors, no-COMMIT saves, straggler EWMA
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_surfaces_error_on_wait(tmp_path):
+    target = tmp_path / "cannot_mkdir"
+    target.write_text("a file where the ckpt dir should be")
+    saver = ckpt.AsyncCheckpointer(target)
+    saver.save(0, {"x": jnp.zeros(2)})
+    with pytest.raises(Exception):
+        saver.wait()
+    assert saver.last_error is None          # consumed, not sticky
+
+
+def test_crash_mid_save_leaves_no_commit(tmp_path):
+    ckpt.save(tmp_path, 0, {"x": jnp.zeros(2)})
+    plan = FaultPlan(crash_save_at_step=5, save_stage="pre_commit")
+    with plan.installed():
+        with pytest.raises(InjectedFailure):
+            ckpt.save(tmp_path, 5, {"x": jnp.ones(2)})
+    assert ckpt.latest_step(tmp_path) == 0   # half-written step is invisible
+    assert (tmp_path / "step_0000000005.tmp").exists()
+    assert not (tmp_path / "step_0000000005.tmp" / "COMMIT").exists()
+
+
+def test_truncated_shard_detected(tmp_path):
+    ckpt.save(tmp_path, 0, {"x": jnp.arange(128, dtype=jnp.float32)})
+    plan = FaultPlan(crash_save_at_step=3, save_stage="truncate_shard")
+    with plan.installed():
+        with pytest.raises(InjectedFailure):
+            ckpt.save(tmp_path, 3, {"x": jnp.arange(128, dtype=jnp.float32)})
+    assert ckpt.latest_step(tmp_path) == 0
+    restored, manifest = ckpt.restore_with_fallback(
+        tmp_path, {"x": jnp.zeros(128)})
+    assert manifest["step"] == 0
+
+
+def test_manifest_carries_checksums_and_extra(tmp_path):
+    ckpt.save(tmp_path, 2, {"x": jnp.arange(4, dtype=jnp.float32)},
+              extra={"fingerprint": {"ranks": 2}})
+    m = ckpt.peek_manifest(tmp_path)
+    assert m["step"] == 2
+    assert set(m["checksums"]) == {"x"}
+    assert m["extra"]["fingerprint"]["ranks"] == 2
+    # manifests stay plain JSON (no numpy leakage)
+    json.dumps(m)
+
+
+def test_straggler_ewma_threshold_behavior():
+    mon = StragglerMonitor(alpha=0.1, k_std=4.0, slack=1.5, warmup_steps=5)
+    # during warmup nothing fires, even for an extreme outlier
+    for s in range(4):
+        assert mon.observe(s, 0.1) is None
+    assert mon.observe(4, 5.0) is None                  # n == warmup
+    mon2 = StragglerMonitor(alpha=0.1, k_std=4.0, slack=1.5, warmup_steps=3)
+    for s in range(10):
+        mon2.observe(s, 0.1)
+    base_mean = mon2.mean
+    # above k_std*std but below slack*mean -> not an outlier
+    assert mon2.observe(10, 0.12) is None
+    # far beyond both thresholds -> event, and EWMA excludes it
+    ev = mon2.observe(11, 2.0)
+    assert ev is not None and ev.step == 11
+    assert mon2.mean < base_mean * 1.5
+    # end_step without start_step (post-crash restart) is a no-op
+    assert mon2.end_step(12) is None
+    mon2.reset()
+    assert mon2.mean is None and mon2.n == 0 and len(mon2.events) == 1

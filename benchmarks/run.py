@@ -9,7 +9,9 @@ autoregressive rollout depth K, both schedules, consistency-asserted), and
 ``BENCH_partition.json`` (block-vs-spectral partition quality on a
 stretched mesh, bitwise copy-agreement asserted), and
 ``BENCH_resilience.json`` (checkpoint save/restore latency + steady-state
-``run_resilient`` overhead %, bitwise-trajectory asserted) so future PRs
+``run_resilient`` overhead %, bitwise-trajectory asserted), and
+``BENCH_serve.json`` (inference-engine latency/throughput vs batch slots,
+graph-cache reuse speedup, bitwise-vs-offline asserted) so future PRs
 have a perf trajectory to regress against (see ``scripts/bench_gate.py``).
 Run:
     PYTHONPATH=src python -m benchmarks.run
@@ -103,6 +105,14 @@ def write_resilience_json(path: str = "BENCH_resilience.json") -> dict:
     return _write_json(path, resilience_sweep())
 
 
+def write_serve_json(path: str = "BENCH_serve.json") -> dict:
+    """Collect the inference-engine serving benchmark (latency/throughput
+    vs batch slots, graph-cache cold-build vs hit, with its built-in
+    bitwise-vs-offline assertion) and persist it."""
+    from benchmarks.serve import serve_sweep
+    return _write_json(path, serve_sweep())
+
+
 def write_partition_json(path: str = "BENCH_partition.json") -> dict:
     """Collect the block-vs-spectral partition quality sweep (stretched
     mesh, with its built-in bitwise copy-agreement assertions) and persist
@@ -114,13 +124,15 @@ def write_partition_json(path: str = "BENCH_partition.json") -> dict:
 def main() -> None:
     from benchmarks import (consistency_vs_ranks, training_consistency,
                             partition_stats, weak_scaling, kernel_bench,
-                            halo_overlap, multilevel, rollout, resilience)
+                            halo_overlap, multilevel, rollout, resilience,
+                            serve)
     payload = write_segment_agg_json()   # computed once, reused by kernel_bench
     overlap_payload = write_halo_overlap_json()  # reused by halo_overlap.run
     multilevel_payload = write_multilevel_json()  # reused by multilevel.run
     rollout_payload = write_rollout_json()        # reused by rollout.run
     partition_payload = write_partition_json()    # reused by partition_stats.run
     resilience_payload = write_resilience_json()  # reused by resilience.run
+    serve_payload = write_serve_json()            # reused by serve.run
     all_rows = []
     for mod, label in ((consistency_vs_ranks, "Fig6-left"),
                        (training_consistency, "Fig6-right"),
@@ -130,7 +142,8 @@ def main() -> None:
                        (halo_overlap, "halo-overlap"),
                        (multilevel, "multilevel"),
                        (rollout, "rollout"),
-                       (resilience, "resilience")):
+                       (resilience, "resilience"),
+                       (serve, "serve")):
         print(f"\n=== {label}: {mod.__name__} ===", flush=True)
         kw = {}
         if mod is kernel_bench:
@@ -145,6 +158,8 @@ def main() -> None:
             kw = dict(payload=partition_payload)
         elif mod is resilience:
             kw = dict(payload=resilience_payload)
+        elif mod is serve:
+            kw = dict(payload=serve_payload)
         all_rows += mod.run(verbose=True, **kw)
     fused_us = payload.get("fused_us", payload.get("fused_interpret_us", 0.0))
     print(f"\nwrote BENCH_segment_agg.json "
@@ -177,6 +192,12 @@ def main() -> None:
           f"{rp['overhead_pct']:.1f}% overhead at ckpt_every="
           f"{rp['ckpt_every']}, trajectory bitwise="
           f"{rp['losses_bitwise_equal']})")
+    sp = serve_payload
+    best = max(sp["cases"], key=lambda c: c["req_per_s"])
+    print(f"wrote BENCH_serve.json ({best['req_per_s']:.1f} req/s at "
+          f"{best['batch_slots']} slots, p50 {best['latency_ms_p50']:.1f} ms, "
+          f"graph-cache reuse {sp['graph_cache']['speedup']:.0f}x, "
+          f"bitwise_vs_offline={sp['bitwise_vs_offline']})")
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,129 @@
+"""Serving-engine benchmark (BENCH_serve.json).
+
+Measures the resident :class:`repro.runtime.engine.InferenceEngine` the way
+a solver feed exercises it:
+
+  * per-request latency (p50/p95/mean, submit -> result) and steady-state
+    throughput, swept over ``batch_slots`` — the tradeoff the engine's
+    fixed-slot batching buys (one compiled program, higher slots = higher
+    throughput under concurrent producers);
+  * ``graph_cache`` — cold ``register_mesh`` build time (partition +
+    ShardedGraph + NMPPlan + jitted-fn construction) vs a cache hit for the
+    same mesh hash, with the speedup ratio.  The cache is the engine's
+    whole point: a resident service must never rebuild per request;
+  * ``bitwise_vs_offline`` rider asserted on every run: the first streamed
+    prediction of every case equals the engine's batch-1 offline oracle
+    bitwise (batching/padding/queueing are arithmetically invisible).
+
+Gated by ``scripts/bench_gate.py --serve-out`` (baseline-free: the bitwise
+rider is strict, cached-graph reuse must beat the cold build by > 5x —
+absolute latencies are host-dependent, the structural properties are not).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from repro.core import GNNConfig, NMPPlan, box_mesh, init_gnn, partition_mesh
+from repro.core.mesh_gen import taylor_green_velocity
+from repro.ckpt import checkpoint as ckpt
+from repro.runtime.engine import EngineConfig, InferenceEngine
+from repro.train.loop import TrainConfig, run_fingerprint
+
+N_REQUESTS = 24
+BATCH_SLOTS_SWEEP = (1, 4)
+ROLLOUT_STEPS = 2
+DT = 0.05
+
+
+def serve_sweep(n_requests: int = N_REQUESTS,
+                batch_slots_sweep=BATCH_SLOTS_SWEEP,
+                rollout_steps: int = ROLLOUT_STEPS) -> dict:
+    sem = box_mesh((4, 4, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+
+    def snapshot_fn(step: int):
+        return taylor_green_velocity(
+            sem.coords, t=(step * DT) % 2.0).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckdir = Path(d) / "ck"
+        pg0 = partition_mesh(sem, (1, 1, 1))
+        fp = run_fingerprint(sem, pg0, cfg, TrainConfig(), NMPPlan())
+        # serving timings/consistency don't depend on training quality, so a
+        # fresh init is a valid (and fast) stand-in for trained weights
+        ckpt.save(ckdir, 0, {"params": params}, extra={"fingerprint": fp})
+
+        cases = []
+        cache = {"cold_build_ms": None, "hit_ms": None}
+        bitwise = True
+        for slots in batch_slots_sweep:
+            engine = InferenceEngine(
+                ckdir, cfg,
+                EngineConfig(batch_slots=slots, rollout_steps=rollout_steps))
+            t0 = time.perf_counter()
+            mesh_hash = engine.register_mesh(sem)
+            cold_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            engine.register_mesh(sem)
+            hit_ms = (time.perf_counter() - t0) * 1e3
+            if cache["cold_build_ms"] is None:
+                cache.update(cold_build_ms=cold_ms, hit_ms=hit_ms)
+            engine.warmup()
+            with engine:
+                t0 = time.perf_counter()
+                results = dict(engine.stream(mesh_hash, snapshot_fn,
+                                             n_requests, n_producers=2))
+                wall = time.perf_counter() - t0
+            lat = np.sort([r.latency_s for r in results.values()]) * 1e3
+            first = min(results)
+            bitwise &= bool(np.array_equal(
+                results[first].preds,
+                engine.offline_reference(mesh_hash, snapshot_fn(first))))
+            cases.append({
+                "batch_slots": slots,
+                "latency_ms_p50": float(np.percentile(lat, 50)),
+                "latency_ms_p95": float(np.percentile(lat, 95)),
+                "latency_ms_mean": float(lat.mean()),
+                "req_per_s": float(len(results) / wall),
+                "batches": int(engine.stats["batches"]),
+                "padded_slots": int(engine.stats["padded_slots"]),
+            })
+        cache["speedup"] = cache["cold_build_ms"] / max(cache["hit_ms"], 1e-6)
+
+    return {
+        "n_nodes": int(pg0.n_global),
+        "ranks": len(jax.devices()),
+        "rollout_steps": rollout_steps,
+        "requests": n_requests,
+        "producers": 2,
+        "cases": cases,
+        "graph_cache": cache,
+        "bitwise_vs_offline": bool(bitwise),
+    }
+
+
+def run(verbose: bool = False, payload: dict | None = None):
+    payload = payload or serve_sweep()
+    rows = []
+    for c in payload["cases"]:
+        rows.append((
+            f"serve/slots{c['batch_slots']}",
+            c["latency_ms_p50"] * 1e3,
+            f"p95 {c['latency_ms_p95']:.1f}ms, {c['req_per_s']:.1f} req/s, "
+            f"bitwise={payload['bitwise_vs_offline']}"))
+    gc = payload["graph_cache"]
+    rows.append((
+        "serve/graph_cache",
+        gc["cold_build_ms"] * 1e3,
+        f"hit {gc['hit_ms'] * 1e3:.0f}us, reuse speedup "
+        f"{gc['speedup']:.0f}x"))
+    if verbose:
+        for name, us, derived in rows:
+            print(f"{name}: {us:.1f} us ({derived})")
+    return rows

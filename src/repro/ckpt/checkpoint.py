@@ -234,6 +234,103 @@ def restore(ckpt_dir: str | Path, tree_like: Any, step: Optional[int] = None,
     return vals, manifest
 
 
+def restore_partial(ckpt_dir: str | Path, tree_like: Any, prefix: str,
+                    step: Optional[int] = None, shardings: Any = None):
+    """Restore ONLY the subtree saved under ``prefix`` (e.g. ``"params"``)
+    into the structure of ``tree_like``, ignoring every other key in the
+    checkpoint.
+
+    This is how a serving process loads model weights out of a full
+    training checkpoint (``{params, opt, rng}``) without reconstructing
+    optimizer state it will never use: the template is just the params
+    pytree.  The selected subset gets the same validation as
+    :func:`restore` — exact key set (missing/unexpected keys named),
+    shapes/dtypes against the manifest, per-array CRC32 checksums (a
+    mismatch raises :class:`CheckpointCorruption`).  A ``prefix`` absent
+    from the checkpoint raises ValueError naming the prefixes that DO
+    exist.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    committed = committed_steps(ckpt_dir)
+    step = step if step is not None else (committed[-1] if committed else None)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    if step not in committed:
+        raise FileNotFoundError(
+            f"step {step} has no committed checkpoint under {ckpt_dir} "
+            f"(committed: {committed})")
+    step_dir = ckpt_dir / f"step_{step:010d}"
+    manifest = peek_manifest(ckpt_dir, step)
+
+    # map sub-key (relative to prefix) -> full checkpoint key; a key equal
+    # to the prefix itself means the subtree is a single bare leaf, whose
+    # flattened template key is ""
+    sub = {}
+    for k in manifest["keys"]:
+        if k == prefix:
+            sub[""] = k
+        elif k.startswith(prefix + "/"):
+            sub[k[len(prefix) + 1:]] = k
+    if not sub:
+        avail = sorted({k.split("/", 1)[0] for k in manifest["keys"]})
+        raise ValueError(
+            f"checkpoint step {step} has no keys under prefix {prefix!r} — "
+            f"available top-level prefixes: {avail}")
+
+    flat, treedef = _flatten(tree_like)
+    if set(sub) != set(flat):
+        missing = sorted(set(sub) - set(flat))
+        unexpected = sorted(set(flat) - set(sub))
+        raise ValueError(
+            f"checkpoint step {step} subtree {prefix!r} does not match the "
+            f"restore template: keys only in checkpoint: {missing[:5]}; keys "
+            f"only in template: {unexpected[:5]} — was the model config "
+            "changed between save and restore?")
+    for key, leaf in flat.items():
+        full = sub[key]
+        want_shape = tuple(manifest["shapes"][full])
+        want_dtype = manifest["dtypes"][full]
+        have = np.asarray(leaf)
+        if tuple(have.shape) != want_shape or str(have.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint step {step} key {full!r} has shape "
+                f"{want_shape}/{want_dtype} but the restore template has "
+                f"{tuple(have.shape)}/{have.dtype} — the checkpoint was "
+                "written with a different model configuration")
+
+    try:
+        data = np.load(step_dir / "shard_0.npz")
+    except Exception as e:
+        raise CheckpointCorruption(
+            f"shard unreadable for committed step {step} under {ckpt_dir}: "
+            f"{e}") from e
+    checksums = manifest.get("checksums", {})
+    shard_flat = _flatten(shardings)[0] if shardings is not None else {}
+    leaves = []
+    for key in flat:
+        full = sub[key]
+        try:
+            arr = data[full.replace("/", "__")]
+        except Exception as e:
+            raise CheckpointCorruption(
+                f"step {step} key {full!r} unreadable from shard "
+                f"(truncated/corrupted npz): {e}") from e
+        if tuple(arr.shape) != tuple(manifest["shapes"][full]):
+            raise CheckpointCorruption(
+                f"step {step} key {full!r} on-disk shape {tuple(arr.shape)} "
+                f"disagrees with its manifest "
+                f"{tuple(manifest['shapes'][full])}")
+        if full in checksums and _checksum(arr) != checksums[full]:
+            raise CheckpointCorruption(
+                f"step {step} key {full!r} failed its checksum — the shard "
+                "was corrupted after commit")
+        if key in shard_flat:
+            arr = jax.device_put(arr, shard_flat[key])
+        leaves.append(arr)
+    vals = jax.tree_util.tree_unflatten(treedef, leaves)
+    return vals, manifest
+
+
 def restore_with_fallback(ckpt_dir: str | Path, tree_like: Any,
                           shardings: Any = None):
     """Restore the newest committed step that validates, falling back past

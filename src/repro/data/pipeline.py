@@ -23,19 +23,36 @@ class PrefetchingLoader:
     ``shardings``: pytree of NamedSharding (or None leaves) congruent with
     the batch; ``device_put`` happens on the prefetch thread so H2D transfer
     overlaps the previous step's compute.
+
+    ``n_producers``: producer threads sharing the one bounded queue (the
+    serving engine's ingest transport runs several solver feeds through a
+    single loader).  Producer t generates steps ``start_step + t,
+    start_step + t + n_producers, ...`` — the step stream is covered
+    exactly once with no shared mutable counter, but items may interleave
+    across producers, so consumers must key on the step id each item
+    carries (every batch function in this repo is pure in ``step``).
+    Error semantics are drain-then-raise: the FIRST producer error (kept
+    under a lock — concurrent failures must not overwrite it) stops every
+    producer, batches already queued drain normally, then the error
+    surfaces on ``__next__``.
     """
 
     def __init__(self, batch_fn: Callable[[int], Any], shardings: Any = None,
-                 prefetch: int = 2, start_step: int = 0):
+                 prefetch: int = 2, start_step: int = 0, n_producers: int = 1):
         self.batch_fn = batch_fn
         self.shardings = shardings
         self.prefetch = max(1, prefetch)
+        self.n_producers = max(1, n_producers)
         self._q: queue.Queue = queue.Queue(maxsize=self.prefetch)
-        self._step = start_step
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._work, daemon=True)
-        self._thread.start()
+        self._err_lock = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._work, args=(start_step + t,),
+                             daemon=True)
+            for t in range(self.n_producers)]
+        for t in self._threads:
+            t.start()
 
     def _place(self, batch):
         if self.shardings is None:
@@ -44,8 +61,7 @@ class PrefetchingLoader:
             lambda x, s: jax.device_put(x, s) if s is not None else jax.numpy.asarray(x),
             batch, self.shardings)
 
-    def _work(self):
-        step = self._step
+    def _work(self, step: int):
         try:
             while not self._stop.is_set():
                 item = (step, self._place(self.batch_fn(step)))
@@ -55,16 +71,22 @@ class PrefetchingLoader:
                         break
                     except queue.Full:
                         continue
-                step += 1
+                step += self.n_producers
         except BaseException as e:  # surfaced on next __next__
-            self._err = e
+            with self._err_lock:
+                if self._err is None:
+                    self._err = e
+            # one dead producer poisons the stream: stop the others so the
+            # queue drains to empty and the error actually surfaces
+            # (otherwise healthy producers keep the queue non-empty forever)
+            self._stop.set()
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        # Poll with a timeout and re-check the producer each lap: a plain
-        # blocking get() would hang forever when the producer thread dies
+        # Poll with a timeout and re-check the producers each lap: a plain
+        # blocking get() would hang forever when a producer thread dies
         # (batch_fn raised) with the queue empty — the error is set AFTER
         # the consumer already parked on the queue.  Queued batches drain
         # before the error surfaces, so a mid-stream failure still delivers
@@ -75,14 +97,15 @@ class PrefetchingLoader:
             except queue.Empty:
                 if self._err is not None:
                     raise self._err
-                if not self._thread.is_alive():
-                    # producer exited cleanly (close() raced us): no more
-                    # items will ever arrive
+                if not any(t.is_alive() for t in self._threads):
+                    # every producer exited cleanly (close() raced us): no
+                    # more items will ever arrive
                     raise StopIteration
 
     def close(self):
         self._stop.set()
-        self._thread.join(timeout=5)
+        for t in self._threads:
+            t.join(timeout=5)
 
 
 def token_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):

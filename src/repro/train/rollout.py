@@ -41,7 +41,7 @@ from typing import Sequence
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.consistent_loss import consistent_mse
 from repro.core.gnn import GNNConfig, gnn_forward
@@ -151,6 +151,53 @@ def make_rollout_step_fns(
     rollout_eval = _wrap(rollout_local, (P(), seq))
     rollout_grad = _wrap(grad_local, (P(), P()))
     return rollout_eval, rollout_grad
+
+
+def make_rollout_predict_fn(
+    mesh: Mesh,
+    cfg: GNNConfig,
+    plan: NMPPlan,
+    rollout_steps: int,
+    data_axes: Sequence[str] = ("data",),
+    graph_axis: str = "graph",
+):
+    """Inference-only wrapper over :func:`make_rollout_step_fns`' eval step.
+
+    ``predict(params, x0, graph) -> preds [B, K, R, N_pad, F]``.
+
+    The scan body consumes ``targets`` only to compute per-step losses —
+    predictions depend on ``x0`` and ``params`` alone — so feeding zero
+    targets (and zero pushforward noise) through the EXACT jitted program
+    the rollout consistency suite pins yields inference predictions with no
+    reimplemented forward.  That reuse is what makes the serving engine's
+    bitwise-vs-offline contract checkable at all: engine and offline eval
+    literally run the same compiled rollout.
+
+    ``x0`` may be a host array; it is placed with the step function's input
+    sharding, and the zero targets/noise are built once per input shape and
+    cached (the engine calls this with one fixed batch-slot shape).
+    """
+    rollout_eval, _ = make_rollout_step_fns(
+        mesh, cfg, plan, rollout_steps, data_axes, graph_axis)
+    feat_sh = NamedSharding(mesh, P(tuple(data_axes), graph_axis, None, None))
+    seq_sh = NamedSharding(mesh, P(tuple(data_axes), None, graph_axis,
+                                   None, None))
+    zeros_cache: dict = {}
+
+    def predict(params, x0, graph):
+        xs = jax.device_put(jnp.asarray(x0, jnp.float32), feat_sh)
+        key = tuple(xs.shape)
+        if key not in zeros_cache:
+            b, r, n, f = xs.shape
+            zeros_cache[key] = (
+                jax.device_put(
+                    jnp.zeros((b, rollout_steps, r, n, f), xs.dtype), seq_sh),
+                jax.device_put(jnp.zeros(xs.shape, xs.dtype), feat_sh))
+        targets, noise = zeros_cache[key]
+        _, preds = rollout_eval(params, xs, targets, noise, graph)
+        return preds
+
+    return predict
 
 
 def make_tgv_rollout_batch_fn(pg: PartitionedGraphs, mesh_sem: SEMMesh,

@@ -1,0 +1,176 @@
+"""Serving-engine driver (subprocess, real collectives).
+
+Runs the resident :class:`repro.runtime.engine.InferenceEngine` end to end
+— fingerprinted checkpoint load, mesh registration (graph cache), warmup,
+multi-producer streaming through the bounded request queue — and asserts:
+
+  1. every streamed prediction is BITWISE identical to an offline
+     ``rollout_step`` eval of the same snapshot, built independently from
+     scratch (own partition, plan, jitted step fns) at the same device
+     count — batching, slot padding, queueing and threading must be
+     arithmetically invisible;
+  2. streamed R-rank predictions match the single-device stacked reference
+     to fp32 tolerance (the paper's 1-rank == R-rank guarantee, extended
+     to serving);
+  3. a mesh the checkpoint was not trained on is refused BY NAME (both
+     hashes in the error), at registration and at submit;
+  4. a killed producer thread terminates the engine with an error instead
+     of hanging: queued results drain, the stream raises, the engine is
+     closed, and later submits are refused.
+
+Adapts to the forced host-device count ({1,2,4} — the CI serve-smoke
+job runs 1 and 2); standalone invocations default to 2 devices.  Exit
+code 0 = all assertions passed.
+"""
+import argparse
+import os
+import tempfile
+import time
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import numpy as np
+import jax
+
+from repro.core import (
+    GNNConfig, HaloSpec, NMPPlan, NONE, ShardedGraph, box_mesh, init_gnn,
+    partition_mesh, gather_node_features, taylor_green_velocity,
+)
+from repro.core.distributed import shard_graph
+from repro.core.partition import scatter_node_outputs
+from repro.core.reference import rollout_stacked
+from repro.ckpt import checkpoint as ckpt
+from repro.launch.mesh import make_mesh
+from repro.runtime.engine import (
+    EngineConfig, EngineError, InferenceEngine, MeshMismatchError,
+)
+from repro.train.loop import TrainConfig, mesh_fingerprint_hash, \
+    run_fingerprint
+from repro.train.rollout import make_rollout_predict_fn
+
+K = 2
+DT = 0.05
+N_REQ = 6
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="blocking",
+                    choices=["blocking", "overlap"])
+    ap.add_argument("--partitioner", default="block",
+                    choices=["block", "spectral"])
+    args = ap.parse_args()
+    R = len(jax.devices())
+    assert R in (1, 2, 4), f"need 1, 2 or 4 host devices, got {R}"
+
+    sem = box_mesh((4, 4, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+
+    def snapshot_fn(step: int):
+        return taylor_green_velocity(
+            sem.coords, t=(step * DT) % 2.0).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckdir = os.path.join(d, "ck")
+        fp = run_fingerprint(
+            sem, partition_mesh(sem, (1, 1, 1)), cfg,
+            TrainConfig(partitioner=args.partitioner), NMPPlan())
+        ckpt.save(ckdir, 0, {"params": params}, extra={"fingerprint": fp})
+
+        engine = InferenceEngine(
+            ckdir, cfg,
+            EngineConfig(batch_slots=3, rollout_steps=K,
+                         partitioner=args.partitioner),
+            plan=NMPPlan(schedule=args.schedule))
+        mesh_hash = engine.register_mesh(sem)
+        engine.warmup()
+        engine.start()
+        streamed = dict(engine.stream(mesh_hash, snapshot_fn, N_REQ,
+                                      n_producers=2))
+        assert len(streamed) == N_REQ, sorted(streamed)
+        print(f"streamed {N_REQ} requests on R={R} "
+              f"(schedule={args.schedule}, partitioner={args.partitioner}, "
+              f"steps {sorted(streamed)})")
+
+        # ---- 1. bitwise vs an independently built offline rollout eval ----
+        pg = partition_mesh(sem, (R, 1, 1), method=args.partitioner)
+        plan = NMPPlan.build(pg, "a2a" if R > 1 else "none", axis="graph",
+                             schedule=args.schedule)
+        graph = ShardedGraph.build(pg, sem.coords, plan)
+        mesh_dev = make_mesh((1, R), ("data", "graph"))
+        predict = make_rollout_predict_fn(mesh_dev, cfg, plan, K)
+        gs = shard_graph(mesh_dev, graph)
+        for step, res in streamed.items():
+            xs = gather_node_features(pg, snapshot_fn(step))[None]
+            preds = np.asarray(predict(params, xs, gs))[0]
+            offline = np.stack([scatter_node_outputs(pg, preds[k])
+                                for k in range(K)])
+            assert np.array_equal(offline, res.preds), \
+                f"step {step}: streamed output not bitwise-equal offline eval"
+        print(f"bitwise vs offline rollout eval: OK ({N_REQ} requests)")
+
+        # ---- 2. fp32-consistent vs the 1-rank stacked reference ----
+        pg1 = partition_mesh(sem, (1, 1, 1))
+        plan1 = NMPPlan(halo=HaloSpec(mode=NONE), schedule=args.schedule)
+        graph1 = ShardedGraph.build(pg1, sem.coords, plan1)
+        for step in sorted(streamed)[:2]:
+            x1 = gather_node_features(pg1, snapshot_fn(step))
+            t1 = np.zeros((K,) + x1.shape, np.float32)
+            _, preds1 = rollout_stacked(params, x1, t1, graph1, plan1,
+                                        cfg.node_out)
+            ref = np.stack([scatter_node_outputs(pg1, np.asarray(preds1[k]))
+                            for k in range(K)])
+            np.testing.assert_allclose(streamed[step].preds, ref,
+                                       rtol=3e-4, atol=1e-5)
+        print("fp32-consistent vs 1-rank stacked reference: OK")
+
+        # ---- 3. mesh mismatch refused by name ----
+        other = box_mesh((3, 3, 2), p=2)
+        other_hash = mesh_fingerprint_hash(other)
+        try:
+            engine.register_mesh(other)
+            raise AssertionError("mismatched mesh was accepted")
+        except MeshMismatchError as e:
+            assert fp["mesh_hash"] in str(e) and other_hash in str(e), str(e)
+        try:
+            engine.submit(other_hash, snapshot_fn(0))
+            raise AssertionError("mismatched submit was accepted")
+        except MeshMismatchError:
+            pass
+        print("mesh mismatch refused by name: OK")
+
+        # ---- 4. killed producer terminates the engine, no hang ----
+        def dying(step: int):
+            if step >= 2:
+                raise RuntimeError("injected producer death")
+            return snapshot_fn(step)
+
+        got = []
+        t0 = time.monotonic()
+        try:
+            for step, _ in engine.stream(mesh_hash, dying, N_REQ,
+                                         n_producers=1):
+                got.append(step)
+            raise AssertionError("stream survived a dead producer")
+        except EngineError as e:
+            assert "producer" in str(e), str(e)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 60, f"producer death took {elapsed:.0f}s to surface"
+        assert got == [0, 1], \
+            f"drain-then-raise violated: yielded {got} before the error"
+        assert engine.closed, "engine left half-alive after producer death"
+        try:
+            engine.submit(mesh_hash, snapshot_fn(0))
+            raise AssertionError("submit accepted after terminal failure")
+        except EngineError:
+            pass
+        print(f"killed producer terminated the engine in {elapsed:.1f}s "
+              "(drained [0, 1] first): OK")
+
+    print("SERVE DRIVER PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Unit tests for scripts/bench_gate.py gate logic (no benchmarks run).
+
+The segment-agg tests pin the ROADMAP carry-over fix: the strict compiled
+gate must FAIL when ``fused_us`` is present in both runs and regresses,
+and must say "compiled gate SKIPPED (interpret-only host)" explicitly when
+it cannot fire — for years of CPU-only CI the skip was silent and nobody
+noticed the compiled gate had never run once.
+"""
+import importlib.util
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "bench_gate", os.path.join(_ROOT, "scripts", "bench_gate.py"))
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+# ---------------------------------------------------------------------------
+# compiled segment-agg gate
+
+
+def test_compiled_gate_fails_on_fused_regression(capsys):
+    payload = {"fused_us": 200.0, "xla_us": 50.0}
+    base = {"fused_us": 100.0, "xla_us": 50.0}
+    assert not bench_gate.gate_segment_agg(payload, base, 0.25)
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_compiled_gate_passes_within_allowance(capsys):
+    payload = {"fused_us": 110.0, "xla_us": 50.0}
+    base = {"fused_us": 100.0, "xla_us": 50.0}
+    assert bench_gate.gate_segment_agg(payload, base, 0.25)
+    assert "compiled gate ok" in capsys.readouterr().out
+
+
+def test_interpret_only_host_reports_skip_explicitly(capsys):
+    """CPU CI path: no fused_us anywhere — the log must state the compiled
+    gate was SKIPPED and why, then still run the loose ratio gate."""
+    payload = {"fused_interpret_us": 1000.0, "xla_us": 100.0}
+    base = {"fused_interpret_us": 900.0, "xla_us": 100.0}
+    assert bench_gate.gate_segment_agg(payload, base, 0.25)
+    out = capsys.readouterr().out
+    assert "compiled gate SKIPPED (interpret-only host)" in out
+    assert "ratio" in out
+
+
+def test_interpret_ratio_gate_still_fails_on_blowup(capsys):
+    payload = {"fused_interpret_us": 10000.0, "xla_us": 100.0}
+    base = {"fused_interpret_us": 1000.0, "xla_us": 100.0}
+    assert not bench_gate.gate_segment_agg(payload, base, 0.25)
+    out = capsys.readouterr().out
+    assert "compiled gate SKIPPED (interpret-only host)" in out
+    assert "REGRESSION" in out
+
+
+def test_compiled_run_without_compiled_baseline_reports_skip(capsys):
+    """Accelerator run vs interpret-only baseline: the strict gate cannot
+    compare — the skip must name the missing compiled baseline."""
+    payload = {"fused_us": 100.0, "fused_interpret_us": 1000.0,
+               "xla_us": 100.0}
+    base = {"fused_interpret_us": 1000.0, "xla_us": 100.0}
+    assert bench_gate.gate_segment_agg(payload, base, 0.25)
+    assert "compiled gate SKIPPED (no compiled baseline)" \
+        in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# serve gate
+
+
+def _serve_payload(**over):
+    payload = {
+        "cases": [{"batch_slots": 4, "latency_ms_p50": 40.0,
+                   "latency_ms_p95": 55.0, "latency_ms_mean": 42.0,
+                   "req_per_s": 170.0, "batches": 6, "padded_slots": 0}],
+        "graph_cache": {"cold_build_ms": 30.0, "hit_ms": 0.05,
+                        "speedup": 600.0},
+        "bitwise_vs_offline": True,
+    }
+    payload.update(over)
+    return payload
+
+
+def test_serve_gate_passes_on_healthy_payload(capsys):
+    assert bench_gate.gate_serve(_serve_payload())
+    assert "serve gate ok" in capsys.readouterr().out
+
+
+def test_serve_gate_fails_on_bitwise_mismatch(capsys):
+    assert not bench_gate.gate_serve(_serve_payload(bitwise_vs_offline=False))
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_serve_gate_fails_when_cache_speedup_too_low(capsys):
+    payload = _serve_payload(
+        graph_cache={"cold_build_ms": 30.0, "hit_ms": 10.0, "speedup": 3.0})
+    assert not bench_gate.gate_serve(payload, min_cache_speedup=5.0)
+    assert "graph-cache" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# existing gates keep their contracts (smoke)
+
+
+@pytest.mark.parametrize("bitwise,exact,overhead,want", [
+    (True, True, 50.0, True),
+    (False, True, 50.0, False),
+    (True, True, 500.0, False),
+])
+def test_resilience_gate_matrix(bitwise, exact, overhead, want):
+    payload = {"losses_bitwise_equal": bitwise, "restore_exact": exact,
+               "overhead_pct": overhead, "ckpt_every": 5, "save_ms": 1.0,
+               "restore_ms": 1.0, "tree_bytes": 1000}
+    assert bench_gate.gate_resilience(payload, 200.0) is want

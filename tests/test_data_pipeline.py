@@ -79,6 +79,90 @@ def test_prefetching_loader_error_after_good_batches():
         loader.close()
 
 
+def test_prefetching_loader_multi_producer_covers_stream_exactly_once():
+    """N producers stride the step sequence (producer t gets start_step + t,
+    + n_producers, ...): the union is every step exactly once, interleaved
+    in any order — consumers key on the step id each item carries."""
+    def fn(step: int):
+        return {"x": np.full((2,), step)}
+
+    loader = PrefetchingLoader(fn, prefetch=4, start_step=3, n_producers=3)
+    try:
+        seen = [next(loader)[0] for _ in range(12)]
+        # no step is ever produced twice
+        assert len(set(seen)) == 12, f"duplicated steps: {seen}"
+        # per producer (= residue class of the stride), steps arrive in
+        # order with no gaps from that producer's first step — together
+        # with uniqueness this is exactly-once coverage of the stream
+        for t in range(3):
+            cls = [s for s in seen if (s - 3) % 3 == t]
+            assert cls == list(range(3 + t, 3 + t + 3 * len(cls), 3)), \
+                f"producer {t} skipped or reordered steps: {cls}"
+    finally:
+        loader.close()
+
+
+def test_prefetching_loader_multi_producer_backpressure():
+    """With the queue full, every producer parks in put(): total batch_fn
+    calls stay bounded by queue depth + one in-flight item per producer —
+    producers must not run ahead of the consumer."""
+    calls = []
+
+    def fn(step: int):
+        calls.append(step)          # list.append is atomic under the GIL
+        return {"x": np.zeros(1)}
+
+    loader = PrefetchingLoader(fn, prefetch=2, n_producers=2)
+    try:
+        time.sleep(0.5)
+        assert len(calls) <= 2 + 2, \
+            f"producers ran ahead of backpressure: {len(calls)} calls"
+        # drain: the stream continues correctly after the stall (unique
+        # steps, each producer's residue class in order with no gaps)
+        seen = [next(loader)[0] for _ in range(6)]
+        assert len(set(seen)) == 6, f"duplicated steps: {seen}"
+        for t in range(2):
+            cls = [s for s in seen if s % 2 == t]
+            assert cls == list(range(t, t + 2 * len(cls), 2)), \
+                f"producer {t} skipped or reordered steps: {cls}"
+    finally:
+        loader.close()
+
+
+def test_prefetching_loader_multi_producer_drain_then_raise():
+    """One producer dying stops ALL producers (first error wins, kept under
+    a lock), already-queued batches drain, then the error surfaces — the
+    healthy producers must not keep the stream alive forever."""
+    def fn(step: int):
+        if step == 3:
+            raise RuntimeError("producer for step 3 died")
+        return {"x": np.full((2,), step)}
+
+    loader = PrefetchingLoader(fn, prefetch=2, n_producers=2)
+    try:
+        got = []
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="step 3 died"):
+            for _ in range(20):
+                s, _ = next(loader)
+                got.append(s)
+        assert time.monotonic() - t0 < 10.0, "error took too long to surface"
+        assert 3 not in got
+        assert len(got) == len(set(got)), f"duplicated steps: {got}"
+    finally:
+        loader.close()
+
+
+def test_prefetching_loader_close_joins_all_producers():
+    def fn(step: int):
+        return {"x": np.zeros(1)}
+
+    loader = PrefetchingLoader(fn, prefetch=1, n_producers=3)
+    next(loader)
+    loader.close()
+    assert not any(t.is_alive() for t in loader._threads)
+
+
 def test_host_shard():
     batch = {"x": np.arange(12).reshape(6, 2)}
     sh = host_shard(batch, host_id=1, n_hosts=3)

@@ -1,0 +1,242 @@
+"""Resident inference engine: lifecycle, consistency, refusal, shutdown.
+
+In-process (single device) coverage of ``repro.runtime.engine``; the CI
+serve-smoke job re-runs the same contracts on real collectives via
+``tests/drivers/serve_driver.py`` at 1 and 2 forced host devices.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import GNNConfig, NMPPlan, box_mesh, init_gnn, partition_mesh
+from repro.core.distributed import shard_graph
+from repro.core.graph_state import ShardedGraph
+from repro.core.mesh_gen import taylor_green_velocity
+from repro.core.partition import gather_node_features, scatter_node_outputs
+from repro.ckpt import checkpoint as ckpt
+from repro.launch.mesh import make_mesh
+from repro.runtime.engine import (
+    EngineConfig, EngineError, InferenceEngine, MeshMismatchError,
+)
+from repro.train.loop import TrainConfig, mesh_fingerprint_hash, \
+    run_fingerprint
+from repro.train.rollout import make_rollout_predict_fn
+
+K = 2
+DT = 0.05
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One mesh + model + fingerprinted checkpoint shared by every test."""
+    sem = box_mesh((3, 3, 2), p=2)
+    cfg = GNNConfig(hidden=8, n_mp_layers=2, mlp_hidden_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    ckdir = tmp_path_factory.mktemp("serve") / "ck"
+    fp = run_fingerprint(sem, partition_mesh(sem, (1, 1, 1)), cfg,
+                         TrainConfig(), NMPPlan())
+    # full training-shaped tree: the engine must restore ONLY params
+    ckpt.save(ckdir, 0,
+              {"params": params, "opt": {"m": np.zeros(4, np.float32)},
+               "rng": np.zeros(2, np.uint32)},
+              extra={"fingerprint": fp})
+    return dict(sem=sem, cfg=cfg, params=params, ckdir=ckdir, fp=fp)
+
+
+def snapshot(sem, step):
+    return taylor_green_velocity(sem.coords,
+                                 t=(step * DT) % 2.0).astype(np.float32)
+
+
+def make_engine(served, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("rollout_steps", K)
+    return InferenceEngine(served["ckdir"], served["cfg"],
+                           EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint contract
+
+
+def test_engine_restores_params_only_from_training_checkpoint(served):
+    eng = make_engine(served)
+    for a, b in zip(jax.tree.leaves(eng.params),
+                    jax.tree.leaves(served["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert eng.ckpt_step == 0
+    assert eng.fingerprint["mesh_hash"] == served["fp"]["mesh_hash"]
+
+
+def test_engine_refuses_unfingerprinted_checkpoint(served, tmp_path):
+    ckdir = tmp_path / "bare"
+    ckpt.save(ckdir, 0, {"params": served["params"]})
+    with pytest.raises(EngineError, match="fingerprint"):
+        InferenceEngine(ckdir, served["cfg"], EngineConfig())
+
+
+def test_engine_refuses_model_config_mismatch(served):
+    wrong = GNNConfig(hidden=16, n_mp_layers=2, mlp_hidden_layers=2)
+    with pytest.raises(EngineError, match="hidden"):
+        InferenceEngine(served["ckdir"], wrong, EngineConfig())
+
+
+def test_engine_falls_back_past_corrupted_newest_step(served, tmp_path):
+    ckdir = tmp_path / "corrupt"
+    other = jax.tree.map(lambda a: np.asarray(a) + 1.0, served["params"])
+    ckpt.save(ckdir, 0, {"params": served["params"]},
+              extra={"fingerprint": served["fp"]})
+    ckpt.save(ckdir, 1, {"params": other},
+              extra={"fingerprint": served["fp"]})
+    shard = ckdir / "step_0000000001" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:64])    # truncate after commit
+    eng = InferenceEngine(ckdir, served["cfg"], EngineConfig())
+    assert eng.ckpt_step == 0
+    for a, b in zip(jax.tree.leaves(eng.params),
+                    jax.tree.leaves(served["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_partial_roundtrip_and_bad_prefix(served):
+    template = jax.tree.map(np.asarray, served["params"])
+    vals, manifest = ckpt.restore_partial(served["ckdir"], template, "params")
+    for a, b in zip(jax.tree.leaves(vals), jax.tree.leaves(template)):
+        assert np.array_equal(np.asarray(a), b)
+    assert manifest["step"] == 0
+    with pytest.raises(ValueError, match="params"):
+        ckpt.restore_partial(served["ckdir"], template, "nonexistent")
+    with pytest.raises(ValueError, match="template"):
+        ckpt.restore_partial(served["ckdir"], {"lonely": np.zeros(3)},
+                             "params")
+
+
+# ---------------------------------------------------------------------------
+# graph cache + mesh refusal
+
+
+def test_register_mesh_caches_by_hash(served):
+    eng = make_engine(served)
+    h1 = eng.register_mesh(served["sem"])
+    h2 = eng.register_mesh(served["sem"])
+    assert h1 == h2 == mesh_fingerprint_hash(served["sem"])
+    assert eng.stats["cache_builds"] == 1
+    assert eng.stats["cache_hits"] == 1
+
+
+def test_mesh_mismatch_refused_by_name(served):
+    eng = make_engine(served)
+    other = box_mesh((2, 2, 2), p=2)
+    other_hash = mesh_fingerprint_hash(other)
+    with pytest.raises(MeshMismatchError) as ei:
+        eng.register_mesh(other)
+    assert served["fp"]["mesh_hash"] in str(ei.value)
+    assert other_hash in str(ei.value)
+    with pytest.raises(MeshMismatchError):
+        eng.submit(other_hash, snapshot(other, 0))
+
+
+def test_submit_requires_registration_and_shape(served):
+    eng = make_engine(served)
+    h = mesh_fingerprint_hash(served["sem"])
+    with pytest.raises(EngineError, match="register_mesh"):
+        eng.submit(h, snapshot(served["sem"], 0))
+    eng.register_mesh(served["sem"])
+    with pytest.raises(EngineError, match="shape"):
+        eng.submit(h, np.zeros((7, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# consistency contract
+
+
+def test_streamed_output_bitwise_equals_offline_rollout_eval(served):
+    sem, cfg, params = served["sem"], served["cfg"], served["params"]
+    eng = make_engine(served, batch_slots=4)   # 5 requests -> padded batches
+    h = eng.register_mesh(sem)
+    eng.warmup()
+    with eng:
+        out = dict(eng.stream(h, lambda s: snapshot(sem, s), 5,
+                              n_producers=2))
+    assert len(out) == 5
+
+    # independently built offline eval (same device count, batch=1)
+    pg = partition_mesh(sem, (1, 1, 1))
+    plan = NMPPlan.build(pg, "none", axis="graph")
+    graph = ShardedGraph.build(pg, sem.coords, plan)
+    mesh_dev = make_mesh((1, 1), ("data", "graph"))
+    predict = make_rollout_predict_fn(mesh_dev, cfg, plan, K)
+    gs = shard_graph(mesh_dev, graph)
+    for step, res in out.items():
+        xs = gather_node_features(pg, snapshot(sem, step))[None]
+        preds = np.asarray(predict(params, xs, gs))[0]
+        offline = np.stack([scatter_node_outputs(pg, preds[k])
+                            for k in range(K)])
+        assert np.array_equal(offline, res.preds), f"step {step}"
+        assert res.preds.shape == (K, pg.n_global, cfg.node_out)
+    assert eng.stats["padded_slots"] > 0   # padding really happened
+
+
+def test_offline_reference_matches_submit(served):
+    sem = served["sem"]
+    eng = make_engine(served)
+    h = eng.register_mesh(sem)
+    eng.warmup()
+    with eng:
+        res = eng.submit(h, snapshot(sem, 3), step=3).result(timeout=60)
+    assert np.array_equal(res.preds, eng.offline_reference(h, snapshot(sem, 3)))
+
+
+# ---------------------------------------------------------------------------
+# backpressure + shutdown
+
+
+def test_submit_backpressure_bounded_queue(served):
+    sem = served["sem"]
+    eng = make_engine(served, max_pending=2)   # engine NOT started: queue fills
+    h = eng.register_mesh(sem)
+    futs = [eng.submit(h, snapshot(sem, s), step=s, timeout=1.0)
+            for s in range(2)]
+    with pytest.raises(EngineError, match="saturated|full"):
+        eng.submit(h, snapshot(sem, 2), timeout=0.05)
+    eng.warmup()
+    eng.start()
+    for s, fut in enumerate(futs):
+        res = fut.result(timeout=60)
+        assert res.step == s
+    eng.close()
+
+
+def test_close_fails_pending_and_refuses_submit(served):
+    sem = served["sem"]
+    eng = make_engine(served)
+    h = eng.register_mesh(sem)
+    fut = eng.submit(h, snapshot(sem, 0))      # never started -> still queued
+    eng.close()
+    with pytest.raises(EngineError, match="shut down"):
+        fut.result(timeout=5)
+    with pytest.raises(EngineError):
+        eng.submit(h, snapshot(sem, 1))
+    with pytest.raises(EngineError, match="already started|shut down"):
+        eng.start()
+
+
+def test_producer_death_terminates_engine_with_error(served):
+    sem = served["sem"]
+    eng = make_engine(served)
+    h = eng.register_mesh(sem)
+    eng.warmup()
+    eng.start()
+
+    def dying(step):
+        if step >= 2:
+            raise RuntimeError("injected producer death")
+        return snapshot(sem, step)
+
+    got = []
+    with pytest.raises(EngineError, match="producer"):
+        for step, _ in eng.stream(h, dying, 6, n_producers=1):
+            got.append(step)
+    assert got == [0, 1]          # drain-then-raise, end to end
+    assert eng.closed
+    with pytest.raises(EngineError, match="terminated"):
+        eng.submit(h, snapshot(sem, 0))

@@ -37,8 +37,55 @@ def _time(fn, *args, iters=20):
     return best * 1e6
 
 
+def _halo_mode_sweep(pg, graph, hidden: int) -> dict:
+    """The (schedule x halo-mode x wire) probe on one partition: per-mode
+    wire bytes, the measured candidate table, the tuner's resolved triple,
+    and the packed-vs-dense copy agreement (must be exactly 0.0)."""
+    import numpy as np
+    from repro.core import (NMPPlan, halo_sync_stacked,
+                            measure_plan_candidates)
+    from repro.core.consistent_mp import _mode_label, _wire_name
+
+    wire = {
+        "a2a": pg.wire_bytes("a2a", feat_dim=hidden),
+        "neighbor": pg.wire_bytes("neighbor", feat_dim=hidden),
+        "neighbor-packed": pg.wire_bytes("neighbor", packed=True,
+                                         feat_dim=hidden),
+    }
+    # the packed kernels run interpreted anywhere but TPU
+    interpret = jax.default_backend() != "tpu"
+    plan = NMPPlan.build(pg, "auto", schedule="auto", interpret=interpret)
+    table = measure_plan_candidates(plan, graph, hidden=hidden, iters=10)
+    tuned = plan.autotune(graph, measure=True, hidden=hidden, iters=10)
+    triple = (tuned.schedule, _mode_label(tuned.halo),
+              _wire_name(tuned.halo.wire_dtype))
+    best = min(table, key=table.get)
+
+    # packed is pure data movement: bitwise-equal to the dense exchange
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(pg.R, pg.n_pad, hidden)).astype(
+        np.float32)) * jnp.asarray(pg.node_mask)[..., None]
+    import dataclasses
+    packed_spec = dataclasses.replace(plan.halo, mode="neighbor",
+                                      packed=True)
+    dense_spec = dataclasses.replace(packed_spec, packed=False)
+    err = float(jnp.abs(halo_sync_stacked(a, graph, packed_spec)
+                        - halo_sync_stacked(a, graph, dense_spec)).max())
+    return dict(
+        wire_bytes=wire,
+        candidates_us={f"{s}|{m}|{w or 'fp32'}": t * 1e6
+                       for (s, m, w), t in table.items()},
+        auto_triple=list(triple),
+        auto_matches_best=(triple == best),
+        packed_max_abs_err=err,
+    )
+
+
 def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
-    """One case per partition grid: blocking vs overlap stacked forward."""
+    """One case per partition grid: blocking vs overlap stacked forward,
+    plus the halo-mode sweep (wire bytes per format, measured (schedule x
+    halo-mode x wire) candidate timings, the tuner's pick, packed-vs-dense
+    copy agreement) on every multi-rank grid."""
     from repro.core import (
         A2A, NONE, GNNConfig, HaloSpec, NMPPlan, ShardedGraph, box_mesh,
         gather_node_features, init_gnn, partition_mesh,
@@ -57,7 +104,11 @@ def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
         spec = HaloSpec(mode=NONE if pg.R == 1 else A2A)
         plans = {s: NMPPlan(halo=spec, schedule=s)
                  for s in ("blocking", "overlap")}
-        graph = ShardedGraph.build(pg, mesh.coords, plans["overlap"])
+        # one graph serves every candidate: halo mode "auto" makes the
+        # build attach the packed pk{k}_* arrays next to the dense ones
+        build_plan = NMPPlan.build(pg, NONE if pg.R == 1 else "auto",
+                                   schedule="auto")
+        graph = ShardedGraph.build(pg, mesh.coords, build_plan)
         x = jnp.asarray(gather_node_features(pg, x_global))
 
         def fwd(schedule):
@@ -76,7 +127,7 @@ def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
         # the gate checks it matches (or beats) the best fixed schedule
         auto = (NMPPlan(halo=spec, schedule="auto")
                 .autotune(graph, hidden=cfg.hidden).schedule)
-        cases.append(dict(
+        case = dict(
             ranks=pg.R, grid=list(grid),
             blocking_us=timings["blocking"],
             overlap_us=timings["overlap"],
@@ -84,7 +135,10 @@ def overlap_compare(grids=GRIDS, elements=(4, 4, 2), order=2) -> dict:
             auto_us=timings[auto],
             interior_frac=pg.interior_split()["interior_frac"],
             max_abs_err=err,
-        ))
+        )
+        if pg.R > 1:
+            case.update(_halo_mode_sweep(pg, graph, cfg.hidden))
+        cases.append(case)
     return dict(backend=jax.default_backend(), n_nodes=mesh.n_nodes,
                 elements=list(elements), order=order, cases=cases)
 

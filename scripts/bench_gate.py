@@ -18,6 +18,11 @@ count); with baseline files provided, fails on regressions beyond
 * halo overlap: the overlap/blocking *ratio* per rank count vs the
   baseline's ratio.  Both schedules compile on any host, and the ratio
   normalizes hardware differences away, so this gate also runs on CPU CI.
+  Whenever the halo payload is generated, the baseline-free packed-halo
+  gate also runs: packed wire volume <= dense neighbor everywhere and <
+  dense A2A per rank at >= 4 ranks, packed-vs-dense copy agreement exactly
+  0.0, and the autotuned (schedule x halo-mode x wire) triple equal to the
+  argmin of the measured candidate table recorded next to it.
 * resilience (``--resilience-out``): baseline-free.  The resilient loop's
   loss trajectory must be BITWISE identical to an uncheckpointed run and
   the checkpoint round trip byte-exact (strict — checkpointing must never
@@ -147,6 +152,62 @@ def gate_halo_overlap(payload: dict, base: dict, max_regression: float) -> bool:
     print(f"halo-overlap gate ok: geomean ratio {gm_now:.2f} "
           f"(limit {limit:.2f}; per grid: {per_grid})")
     return True
+
+
+def gate_packed_halo(payload: dict) -> bool:
+    """True iff the packed halo exchange holds its structural invariants on
+    every multi-rank case.  Baseline-free — all three properties are
+    topological/arithmetic, not timings:
+
+    * wire volume: the bucketed packed-neighbor format never ships more
+      bytes than the dense neighbor format (it is a prefix truncation of
+      it), and at >= 4 ranks it ships strictly fewer bytes per rank than
+      dense A2A — the whole point of neighbor-bucketed buffers is that the
+      dense ``[R, Bf]`` wire pays the worst pair's width R-1 times over.
+    * copy agreement: packed vs dense exchange differ by exactly 0.0 —
+      the packed path is pure data movement, so any nonzero difference is
+      an indexing bug, not roundoff.
+    * tuner faithfulness: the (schedule x halo-mode x wire) triple the
+      autotuner resolved must be the argmin of the measured candidate
+      table recorded alongside it."""
+    ok = True
+    for c in payload["cases"]:
+        if "wire_bytes" not in c:
+            continue
+        ranks = c["ranks"]
+        wb = c["wire_bytes"]
+        packed, dense, a2a = (wb["neighbor-packed"], wb["neighbor"],
+                              wb["a2a"])
+        for field in ("total", "max"):
+            if packed[field] > dense[field]:
+                print(f"REGRESSION: packed wire {field} {packed[field]} > "
+                      f"dense neighbor {dense[field]} at R={ranks} (packed "
+                      f"is a prefix truncation — it can never grow)")
+                ok = False
+        if ranks >= 4 and packed["max"] >= a2a["max"]:
+            print(f"REGRESSION: packed wire bytes/rank {packed['max']} >= "
+                  f"dense A2A {a2a['max']} at R={ranks} (bucketed buffers "
+                  f"must beat the dense [R, Bf] wire at >= 4 ranks)")
+            ok = False
+        if c["packed_max_abs_err"] != 0.0:
+            print(f"REGRESSION: packed vs dense exchange disagree by "
+                  f"{c['packed_max_abs_err']:g} at R={ranks} (want exactly "
+                  f"0.0 — packed is pure data movement)")
+            ok = False
+        if not c.get("auto_matches_best"):
+            print(f"REGRESSION: autotuned triple {c.get('auto_triple')} is "
+                  f"not the argmin of the measured candidate table at "
+                  f"R={ranks}")
+            ok = False
+    if ok:
+        summary = "; ".join(
+            f"R={c['ranks']} packed={c['wire_bytes']['neighbor-packed']['max']}"
+            f"B/rank a2a={c['wire_bytes']['a2a']['max']}B/rank "
+            f"pick={'|'.join(str(t) for t in c['auto_triple'])}"
+            for c in payload["cases"] if "wire_bytes" in c)
+        print(f"packed-halo gate ok: agreement exact, tuner faithful, "
+              f"wire {summary}")
+    return ok
 
 
 def gate_partition(payload: dict) -> bool:
@@ -345,6 +406,8 @@ def main() -> int:
         print(json.dumps(halo_payload, indent=2, sort_keys=True))
         if halo_base is not None:
             ok &= gate_halo_overlap(halo_payload, halo_base, args.max_regression)
+        # structural invariants of the packed wire format need no baseline
+        ok &= gate_packed_halo(halo_payload)
     if args.multilevel_out:
         # the sweep asserts multilevel consistency internally (raises on
         # violation); the JSON is an uploaded artifact, not a timing gate

@@ -5,11 +5,15 @@ from repro.core.graph_state import (
     NMPPlan, ShardedGraph, as_graph, nmp_impl, register_nmp_impl,
     registered_nmp_impls,
 )
-from repro.core.halo import A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync
+from repro.core.halo import (
+    A2A, NEIGHBOR, NONE, HaloSpec, halo_spec_from_plan, halo_sync,
+    halo_sync_stacked,
+)
 from repro.core.consistent_loss import consistent_mse, consistent_node_count, consistent_node_sum
 from repro.core.consistent_mp import (
-    BLOCKING, OVERLAP, autotune_schedule, init_nmp_layer, interior_frac,
-    multilevel_vcycle, nmp_layer, prolong_aggregate, restrict_aggregate,
+    BLOCKING, OVERLAP, autotune_plan, autotune_schedule, init_nmp_layer,
+    interior_frac, measure_plan_candidates, multilevel_vcycle, nmp_layer,
+    prolong_aggregate, restrict_aggregate,
 )
 from repro.core.graph_state import AUTO
 from repro.core.partition_quality import (
@@ -19,7 +23,9 @@ from repro.core.mesh_gen import SEMMesh, box_mesh, gll_points, mesh_graph_edges,
 from repro.core.partition import (
     PartitionedGraphs,
     RankGraph,
+    flat_rounds2d_perms,
     gather_node_features,
+    packed_halo_arrays,
     partition_graph,
     partition_mesh,
     scatter_node_outputs,

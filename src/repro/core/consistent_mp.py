@@ -73,7 +73,8 @@ __all__ = [
     "XLA", "FUSED", "BLOCKING", "OVERLAP", "FP32", "BF16", "PRECISIONS",
     "init_nmp_layer", "edge_update_aggregate", "edge_update_aggregate_part",
     "node_update", "nmp_layer", "multilevel_vcycle", "restrict_aggregate",
-    "prolong_aggregate", "autotune_schedule", "interior_frac",
+    "prolong_aggregate", "autotune_schedule", "autotune_plan",
+    "measure_plan_candidates", "interior_frac",
 ]
 
 
@@ -443,14 +444,22 @@ def multilevel_vcycle(
 
 
 # ---------------------------------------------------------------------------
-# measured schedule autotuning (NMPPlan.autotune / schedule="auto")
+# measured plan autotuning (NMPPlan.autotune: schedule="auto", halo="auto")
 # ---------------------------------------------------------------------------
 
-# (graph-hash, R, backend, precision, interpret, halo mode, measured?) ->
-# winning schedule, for the process lifetime.  One measurement per distinct
-# (graph, rank-count, policy) — the same memoize-the-expensive-probe shape
-# as the fused kernels' block-size autotune table.
+# (graph-hash, R, policy) -> resolved pick (a schedule string for the legacy
+# schedule-only path; a (schedule, halo-mode label, wire name) triple for the
+# cross-product path), for the process lifetime.  One measurement per
+# distinct (graph, rank-count, policy) — the same memoize-the-expensive-probe
+# shape as the fused kernels' block-size autotune table.
 _SCHEDULE_CACHE: dict = {}
+
+# (graph-hash, R, policy, candidate grid) -> {(schedule, mode label, wire
+# name): seconds}.  Kept separate from the pick cache so the benchmark sweep
+# (benchmarks/halo_overlap.py) can read the SAME measured table the tuner
+# argmins over — the "auto pick matches the best fixed config" acceptance
+# check holds by construction.
+_TUNE_TABLE_CACHE: dict = {}
 
 
 def _graph_schedule_key(g0: dict) -> tuple:
@@ -508,33 +517,206 @@ def interior_frac(g0: dict) -> float:
     return n_int / max(n_int + n_bnd, 1.0)
 
 
-def autotune_schedule(plan: NMPPlan, graph, measure: bool | None = None,
-                      hidden: int = 8, iters: int = 20) -> NMPPlan:
-    """Resolve ``schedule="auto"`` against a stacked graph (see
-    :meth:`NMPPlan.autotune`, the public entry point)."""
+AUTO = "auto"
+
+#: halo-mode labels the cross-product tuner sweeps; "neighbor-packed" is the
+#: bucketed wire format (NEIGHBOR collectives over the narrow pk{k}_* arrays)
+MODE_LABELS = ("a2a", "neighbor", "neighbor-packed")
+
+
+def _mode_label(spec: HaloSpec) -> str:
+    return f"{spec.mode}-packed" if spec.packed else spec.mode
+
+
+def _wire_name(wire) -> str | None:
+    return None if wire is None else jnp.dtype(wire).name
+
+
+def _spec_for(spec: HaloSpec, label: str, wire_name: str | None) -> HaloSpec:
+    """The fixed HaloSpec a (mode label, wire name) candidate denotes —
+    perms/rounds2d/axis/interpret are kept from ``spec``."""
+    import dataclasses
+    if label == "neighbor-packed":
+        mode, packed = NEIGHBOR, True
+    elif label in ("a2a", "neighbor", "none"):
+        mode, packed = label, False
+    else:
+        raise ValueError(f"unknown halo-mode label {label!r}; expected one "
+                         f"of {MODE_LABELS}")
+    wire = None if wire_name is None else jnp.dtype(wire_name)
+    return dataclasses.replace(spec, mode=mode, packed=packed,
+                               wire_dtype=wire)
+
+
+def _resolve_plan(plan: NMPPlan, schedule: str, label: str,
+                  wire_name: str | None) -> NMPPlan:
+    """Apply a resolved (schedule, mode label, wire name) triple to the plan:
+    the fine halo and every still-auto coarse halo (each keeps its own
+    perms)."""
+    halo = _spec_for(plan.halo, label, wire_name)
+    coarse = tuple(_spec_for(h, label, wire_name) if h.mode == AUTO else h
+                   for h in plan.coarse_halos)
+    return plan.replace(schedule=schedule, halo=halo, coarse_halos=coarse)
+
+
+def _packed_supported(plan: NMPPlan) -> bool:
+    # the fused pack/unpack kernels need the Pallas interpreter anywhere
+    # but TPU; without it the packed candidate would crash at trace time
+    return plan.interpret or jax.default_backend() == "tpu"
+
+
+def measure_plan_candidates(plan: NMPPlan, graph, hidden: int = 8,
+                            iters: int = 20, schedules=None, modes=None,
+                            wires=None) -> dict:
+    """Time the (schedule × halo-mode × wire) candidate grid on the ACTUAL
+    (graph, rank count), memoized for the process lifetime.
+
+    Each candidate times one jitted stacked NMP layer
+    (``reference._smooth_stacked``) with the exchange routed through the
+    mode-faithful single-device emulator (``halo.halo_sync_stacked``) — the
+    same per-rank arithmetic, wire masking/compression, and fused Pallas
+    pack/unpack the production shard_map path runs for that candidate.
+
+    Returns {(schedule, mode label, wire name): seconds}; ``NMPPlan.autotune``
+    argmins over this table, and ``benchmarks/halo_overlap.py`` records it, so
+    the auto pick matches the best measured fixed config by construction.
+    """
+    import itertools
+    import time as _time
+    from repro.core.halo import halo_sync_stacked
+    from repro.core.reference import _smooth_stacked
+
+    graph = as_graph(graph)
+    g0 = graph.levels[0]
+    R, n_pad = np.asarray(g0["node_mask"]).shape
+    if schedules is None:
+        schedules = (BLOCKING, OVERLAP) if plan.schedule == AUTO \
+            else (plan.schedule,)
+    if modes is None:
+        modes = MODE_LABELS if _packed_supported(plan) \
+            else ("a2a", "neighbor")
+        if plan.halo.mode != AUTO:
+            modes = (_mode_label(plan.halo),)
+    if wires is None:
+        wires = (None,) if plan.halo.wire_dtype is None \
+            else (None, _wire_name(plan.halo.wire_dtype))
+    wires = tuple(_wire_name(w) for w in wires)
+    key = (_graph_schedule_key(g0), R, plan.backend, plan.precision,
+           plan.interpret, tuple(schedules), tuple(modes), wires, hidden)
+    cached = _TUNE_TABLE_CACHE.get(key)
+    if cached is not None:
+        return dict(cached)
+
+    e_pad = np.asarray(g0["edge_mask"]).shape[-1]
+    params = init_nmp_layer(jax.random.PRNGKey(0), hidden, 2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(R, n_pad, hidden)), jnp.float32)
+    e = jnp.asarray(rng.normal(size=(R, e_pad, hidden)), jnp.float32)
+
+    table = {}
+    for sched, label, wire in itertools.product(schedules, modes, wires):
+        cand = plan.replace(schedule=sched,
+                            halo=_spec_for(plan.halo, label, wire))
+        fn = jax.jit(lambda p, xx, ee, _c=cand:
+                     _smooth_stacked(p, xx, ee, g0, _c, halo_sync_stacked))
+        jax.block_until_ready(fn(params, x, e))        # compile + warm
+        t = float("inf")
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(params, x, e))
+            t = min(t, _time.perf_counter() - t0)
+        table[(sched, label, wire)] = t
+    _TUNE_TABLE_CACHE[key] = dict(table)
+    return table
+
+
+def autotune_plan(plan: NMPPlan, graph, measure: bool | None = None,
+                  hidden: int = 8, iters: int = 20) -> NMPPlan:
+    """Resolve every ``"auto"`` field of the plan — ``schedule`` and/or the
+    halo ``mode`` — against a stacked graph (see :meth:`NMPPlan.autotune`,
+    the public entry point).
+
+    Schedule-only resolution keeps the original measured probe
+    (:func:`_measure_best_schedule`) and cache keys; a plan whose halo mode
+    is ``"auto"`` upgrades to the (schedule × halo-mode × wire) cross-product
+    measured by :func:`measure_plan_candidates`.  Wire candidates are
+    ``{None, plan.halo.wire_dtype}`` — the tuner may DROP a requested lossy
+    wire dtype when uncompressed measures faster, but never introduces one
+    the caller didn't ask for, and never touches the wire of a fixed
+    (non-auto) halo mode.
+    """
     graph = as_graph(graph)
     g0 = graph.levels[0]
     nm = np.asarray(g0["node_mask"])
     if nm.ndim != 2:
         raise ValueError("autotune needs the stacked graph (leading rank "
                          f"axis); got node_mask of ndim {nm.ndim}")
+    if plan.schedule != AUTO and plan.halo.mode != AUTO:
+        return plan
     R = nm.shape[0]
     if R <= 1 or plan.halo.mode == "none":
-        # no exchange to hide -> blocking trivially optimal
-        return plan.replace(schedule=BLOCKING)
+        # no exchange to hide -> blocking trivially optimal; a single rank
+        # needs no exchange at all
+        out = plan.replace(schedule=BLOCKING) if plan.schedule == AUTO \
+            else plan
+        if out.halo.mode == AUTO:
+            out = _resolve_plan(out, out.schedule, "none", None)
+        return out
     if measure is None:
         import os
         measure = os.environ.get("REPRO_SCHEDULE_AUTOTUNE", "1") != "0"
+
+    if plan.halo.mode != AUTO:
+        # legacy schedule-only path: same probe, same cache keys
+        key = (_graph_schedule_key(g0), R, plan.backend, plan.precision,
+               plan.interpret, plan.halo.mode, bool(measure), hidden)
+        sched = _SCHEDULE_CACHE.get(key)
+        if sched is None:
+            if measure:
+                sched = _measure_best_schedule(plan, g0, hidden, iters)
+            else:
+                # structural fallback: once the exchange-independent share
+                # of the edge work drops under half, there is not enough
+                # interior compute to pay blocking's serialization
+                sched = OVERLAP if interior_frac(g0) < 0.5 else BLOCKING
+            _SCHEDULE_CACHE[key] = sched
+        return plan.replace(schedule=sched)
+
+    # cross-product path: halo mode (and possibly schedule / wire) are auto
+    schedules = (BLOCKING, OVERLAP) if plan.schedule == AUTO \
+        else (plan.schedule,)
+    modes = MODE_LABELS if _packed_supported(plan) else ("a2a", "neighbor")
+    wires = (None,) if plan.halo.wire_dtype is None \
+        else (None, _wire_name(plan.halo.wire_dtype))
     key = (_graph_schedule_key(g0), R, plan.backend, plan.precision,
-           plan.interpret, plan.halo.mode, bool(measure), hidden)
-    sched = _SCHEDULE_CACHE.get(key)
-    if sched is None:
+           plan.interpret, "cross", tuple(schedules), tuple(modes),
+           tuple(wires), bool(measure), hidden)
+    triple = _SCHEDULE_CACHE.get(key)
+    if triple is None:
         if measure:
-            sched = _measure_best_schedule(plan, g0, hidden, iters)
+            table = measure_plan_candidates(plan, graph, hidden=hidden,
+                                            iters=iters, schedules=schedules,
+                                            modes=modes, wires=wires)
+            triple = min(table, key=table.get)
         else:
-            # structural fallback: once the exchange-independent share of
-            # the edge work drops under half, there is not enough interior
-            # compute to pay blocking's serialization
-            sched = OVERLAP if interior_frac(g0) < 0.5 else BLOCKING
-        _SCHEDULE_CACHE[key] = sched
-    return plan.replace(schedule=sched)
+            # structural fallback: neighbor rounds bound wire volume by the
+            # rank degree (the paper's N-A2A insight) and the packed format
+            # only narrows them further; schedule falls back as above
+            if plan.schedule == AUTO:
+                sched = OVERLAP if interior_frac(g0) < 0.5 else BLOCKING
+            else:
+                sched = plan.schedule
+            label = "neighbor-packed" if _packed_supported(plan) \
+                else "neighbor"
+            triple = (sched, label, _wire_name(plan.halo.wire_dtype))
+        _SCHEDULE_CACHE[key] = triple
+    return _resolve_plan(plan, *triple)
+
+
+def autotune_schedule(plan: NMPPlan, graph, measure: bool | None = None,
+                      hidden: int = 8, iters: int = 20) -> NMPPlan:
+    """Back-compat alias for :func:`autotune_plan` (historically the tuner
+    resolved only ``schedule="auto"``; it now also resolves halo mode
+    ``"auto"`` over the full candidate cross-product)."""
+    return autotune_plan(plan, graph, measure=measure, hidden=hidden,
+                         iters=iters)

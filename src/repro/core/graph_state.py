@@ -88,7 +88,15 @@ class NMPPlan:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}; "
                              f"expected one of {SCHEDULES}")
-        object.__setattr__(self, "coarse_halos", tuple(self.coarse_halos))
+        # the plan's interpret flag is authoritative: mirror it into every
+        # halo spec so the packed exchange's Pallas pack/unpack kernels run
+        # under the same interpreter policy as the fused NMP kernels
+        sync = tuple(
+            h if h.interpret == self.interpret
+            else dataclasses.replace(h, interpret=self.interpret)
+            for h in (self.halo, *self.coarse_halos))
+        object.__setattr__(self, "halo", sync[0])
+        object.__setattr__(self, "coarse_halos", tuple(sync[1:]))
 
     def replace(self, **kw) -> "NMPPlan":
         return dataclasses.replace(self, **kw)
@@ -108,6 +116,15 @@ class NMPPlan:
         """
         return self.schedule in (OVERLAP, AUTO)
 
+    @property
+    def wants_packed(self) -> bool:
+        """Whether the graph must carry the bucketed per-round packed halo
+        arrays (``pk{k}_*``).  True for any ``HaloSpec(packed=True)`` level
+        and for halo mode ``"auto"`` — the tuner's candidate set includes the
+        packed neighbor format, so the graph must support it."""
+        return any(h.packed or h.mode == AUTO
+                   for h in (self.halo, *self.coarse_halos))
+
     def halos(self, n_levels: int) -> Tuple[HaloSpec, ...]:
         """Per-level exchange specs for an ``n_levels``-deep hierarchy.
 
@@ -122,17 +139,21 @@ class NMPPlan:
 
     @classmethod
     def build(cls, pg_or_hierarchy, mode: str, axis: str = "graph",
-              wire_dtype=None, **policy) -> "NMPPlan":
+              wire_dtype=None, packed: bool = False, **policy) -> "NMPPlan":
         """Build a plan with halo specs derived from a partition's halo plan.
 
         ``pg_or_hierarchy`` is a ``PartitionedGraphs`` (flat model) or a
         ``MultiLevelGraphs`` (every level gets its own spec); ``mode`` is the
-        exchange mode (``none`` | ``a2a`` | ``neighbor``); remaining kwargs
-        are the policy fields (backend/schedule/precision/...).
+        exchange mode (``none`` | ``a2a`` | ``neighbor`` | ``auto`` — the
+        last resolved by :meth:`autotune` over the (schedule × halo-mode ×
+        wire) cross-product); ``packed=True`` selects the bucketed per-round
+        wire format (neighbor only); remaining kwargs are the policy fields
+        (backend/schedule/precision/...).
         """
         levels = getattr(pg_or_hierarchy, "levels", [pg_or_hierarchy])
         specs = tuple(halo_spec_from_plan(lvl.halo, mode, axis=axis,
-                                          wire_dtype=wire_dtype)
+                                          wire_dtype=wire_dtype,
+                                          packed=packed)
                       for lvl in levels)
         return cls(halo=specs[0], coarse_halos=specs[1:], **policy)
 
@@ -150,25 +171,26 @@ class NMPPlan:
 
     def autotune(self, graph, measure: bool | None = None,
                  hidden: int = 8, iters: int = 20) -> "NMPPlan":
-        """Resolve ``schedule="auto"`` by measuring blocking vs overlap.
+        """Resolve ``schedule="auto"`` and/or halo mode ``"auto"``.
 
-        Times one jitted stacked NMP layer per candidate schedule on
-        ``graph`` (a stacked :class:`ShardedGraph` — the same proxy
-        ``benchmarks/halo_overlap.py`` reports) and returns a plan with the
-        measured winner, cached per (graph-hash, rank-count, policy) for
-        the process lifetime so repeated builds pay nothing.  ``hidden``
-        should match the model width (compute/communication balance moves
-        the crossover).  With ``measure=False`` — or env var
-        ``REPRO_SCHEDULE_AUTOTUNE=0`` — falls back to the structural
-        ``interior_frac`` heuristic (< 0.5 interior work -> overlap).
-        Plans with a fixed schedule are returned unchanged.  Mirrors
-        :meth:`autotune_blocks`.
+        Times one jitted stacked NMP layer per candidate — the (schedule ×
+        halo-mode × wire) cross-product when the halo mode is ``"auto"``,
+        schedules only otherwise — on ``graph`` (a stacked
+        :class:`ShardedGraph`, the same proxy ``benchmarks/halo_overlap.py``
+        reports) and returns a plan with the measured winner, cached per
+        (graph-hash, rank-count, policy) for the process lifetime so
+        repeated builds pay nothing.  ``hidden`` should match the model
+        width (compute/communication balance moves the crossover).  With
+        ``measure=False`` — or env var ``REPRO_SCHEDULE_AUTOTUNE=0`` — falls
+        back to structural heuristics (``interior_frac`` < 0.5 -> overlap;
+        halo mode -> packed neighbor).  Plans with everything fixed are
+        returned unchanged.  Mirrors :meth:`autotune_blocks`.
         """
-        if self.schedule != AUTO:
+        if self.schedule != AUTO and self.halo.mode != AUTO:
             return self
-        from repro.core.consistent_mp import autotune_schedule
-        return autotune_schedule(self, graph, measure=measure,
-                                 hidden=hidden, iters=iters)
+        from repro.core.consistent_mp import autotune_plan
+        return autotune_plan(self, graph, measure=measure,
+                             hidden=hidden, iters=iters)
 
     def policy(self) -> dict:
         """JSON-able policy fields (no halo specs) — the plan's entry in a
@@ -180,7 +202,10 @@ class NMPPlan:
         return {"backend": self.backend, "schedule": self.schedule,
                 "precision": self.precision, "interpret": self.interpret,
                 "block_n": self.block_n, "block_e": self.block_e,
-                "halo_mode": self.halo.mode}
+                "halo_mode": self.halo.mode,
+                "halo_packed": self.halo.packed,
+                "halo_wire": (None if self.halo.wire_dtype is None
+                              else jnp.dtype(self.halo.wire_dtype).name)}
 
 
 _NMP_IMPLS: Dict[Tuple[str, str], Callable] = {}
@@ -372,8 +397,9 @@ class ShardedGraph:
         plan = plan or NMPPlan()
         seg = plan.seg_layout
         split = plan.wants_split
+        packed = plan.wants_packed
         if hierarchy is None:
-            return cls(_level_arrays(pg, coords, seg, split))
+            return cls(_level_arrays(pg, coords, seg, split, packed))
         if hierarchy.levels[0] is not pg:
             raise ValueError("hierarchy.levels[0] must be the pg passed in "
                              "(the fine partition the step fns shard over)")
@@ -387,7 +413,7 @@ class ShardedGraph:
         graph = None
         for lvl in range(hierarchy.n_levels - 1, -1, -1):
             arrays = _level_arrays(hierarchy.levels[lvl], hierarchy.coords[lvl],
-                                   seg, split)
+                                   seg, split, packed)
             if lvl >= 1:
                 t = hierarchy.transfers[lvl - 1]
                 arrays["t_fine"] = jnp.asarray(t.fine_idx)
@@ -401,14 +427,16 @@ class ShardedGraph:
 jax.tree_util.register_pytree_node_class(ShardedGraph)
 
 
-def _level_arrays(pg, coords, seg_layout, split) -> Dict[str, jnp.ndarray]:
+def _level_arrays(pg, coords, seg_layout, split,
+                  packed: bool = False) -> Dict[str, jnp.ndarray]:
     """One level's stacked static arrays: halo/edge metadata + edge geometry."""
     from repro.core.mesh_gen import edge_features as static_edge_features
     from repro.core.partition import gather_node_features
 
     arrays = {k: jnp.asarray(v)
               for k, v in pg.device_arrays(seg_layout=seg_layout,
-                                           split=split).items()}
+                                           split=split,
+                                           packed=packed).items()}
     coords_r = gather_node_features(pg, coords)
     ef = []
     for r in range(pg.R):

@@ -48,11 +48,17 @@ class HaloSpec:
     ppermute along each axis (torus routing; diagonal neighbor pairs take
     two hops). Used with mode NEIGHBOR; overrides ``perms`` when non-empty.
     """
-    mode: str                                  # none | a2a | neighbor
+    mode: str                                  # none | a2a | neighbor | auto
     axis: str = "graph"                        # mesh axis carrying sub-graphs
     perms: Tuple[Tuple[Tuple[int, int], ...], ...] = ()   # per-round ppermute pairs
     wire_dtype: Optional[jnp.dtype] = None     # e.g. jnp.bfloat16 compression
     rounds2d: Tuple = ()   # per round: ((axis, ((s,d),...)), ...) hop chain
+    # packed wire format (NEIGHBOR only): per-round bucketed pk{k}_* arrays
+    # instead of the dense global-max-width nbr_* arrays, with the pack
+    # (gather) and unpack (scatter-add) fused into Pallas kernels for
+    # combine="sum".  Pure data movement: bitwise-equal to the dense path.
+    packed: bool = False
+    interpret: bool = False                    # run packed kernels interpreted
 
 
 def _scatter_combine(a: jnp.ndarray, idx: jnp.ndarray, upd: jnp.ndarray, op: str) -> jnp.ndarray:
@@ -70,6 +76,82 @@ def _maybe_compress(buf: jnp.ndarray, spec: HaloSpec) -> Tuple[jnp.ndarray, jnp.
     if spec.wire_dtype is not None and buf.dtype != spec.wire_dtype:
         return buf.astype(spec.wire_dtype), buf.dtype
     return buf, buf.dtype
+
+
+def _wire_encode(buf: jnp.ndarray, mask: jnp.ndarray, spec: HaloSpec,
+                 combine: str) -> Tuple[jnp.ndarray, jnp.dtype]:
+    """Send-side wire prep shared by every mode: mask padding slots to the
+    combine's neutral (0 for sum, ``_NEG`` for max), THEN compress to the
+    wire dtype.  Masking before compression means only the neutral — never a
+    real value polluted by it — crosses the wire on padding slots; the recv
+    side re-masks with a fresh full-precision neutral (see ``_wire_decode``),
+    so wire compression of the neutral itself cannot drift into results."""
+    m = mask[..., None]
+    buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, _NEG)
+    return _maybe_compress(buf, spec)
+
+
+def _wire_decode(got: jnp.ndarray, mask: jnp.ndarray, spec: HaloSpec,
+                 combine: str, orig_dtype) -> jnp.ndarray:
+    """Recv-side: restore the compute dtype, then re-neutralize masked slots
+    (a ppermute non-destination receives zeros; under combine="max" a raw
+    zero would beat negative values, so masked rows are forced to ``_NEG``
+    in FULL precision — the wire-compressed neutral never survives here)."""
+    got = got.astype(orig_dtype)
+    rm = mask[..., None]
+    return got * rm if combine == "sum" else jnp.where(rm > 0, got, _NEG)
+
+
+def _round_arrays(graph, spec: HaloSpec, k: int):
+    """Round-``k`` (send_idx, send_mask, recv_idx, recv_mask) in the wire
+    format the spec selects: bucketed per-round ``pk{k}_*`` arrays when
+    packed, slices of the dense ``nbr_*`` arrays otherwise."""
+    if spec.packed:
+        return (graph[f"pk{k}_send_idx"], graph[f"pk{k}_send_mask"],
+                graph[f"pk{k}_recv_idx"], graph[f"pk{k}_recv_mask"])
+    return (graph["nbr_send_idx"][k], graph["nbr_send_mask"][k],
+            graph["nbr_recv_idx"][k], graph["nbr_recv_mask"][k])
+
+
+def _use_fused_pack(spec: HaloSpec, combine: str) -> bool:
+    # the fused Pallas pack/unpack implements masked gather + scatter-ADD;
+    # combine="max" keeps the XLA where/scatter-max path (still on the
+    # narrow packed arrays, so the wire-volume win is format-level)
+    return spec.packed and combine == "sum"
+
+
+def _gather_wire(a: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray,
+                 spec: HaloSpec, combine: str,
+                 batched: bool) -> Tuple[jnp.ndarray, jnp.dtype]:
+    """Pack boundary rows into one round's send buffer (Eq. 4c send side)."""
+    if _use_fused_pack(spec, combine):
+        from repro.kernels.halo_pack.ops import halo_pack
+        if batched:
+            buf = jnp.stack([halo_pack(a[b], idx, mask,
+                                       interpret=spec.interpret)
+                             for b in range(a.shape[0])])
+        else:
+            buf = halo_pack(a, idx, mask, interpret=spec.interpret)
+        return _maybe_compress(buf, spec)
+    buf = a[:, idx] if batched else a[idx]
+    return _wire_encode(buf, mask, spec, combine)
+
+
+def _scatter_wire(out: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray,
+                  got: jnp.ndarray, spec: HaloSpec, combine: str,
+                  orig_dtype, batched: bool) -> jnp.ndarray:
+    """Apply one round's received buffer onto the local rows (Eq. 4d)."""
+    got = got.astype(orig_dtype)
+    if _use_fused_pack(spec, combine):
+        from repro.kernels.halo_pack.ops import halo_unpack_add
+        if batched:
+            return jnp.stack([halo_unpack_add(out[b], got[b], idx, mask,
+                                              interpret=spec.interpret)
+                              for b in range(out.shape[0])])
+        return halo_unpack_add(out, got, idx, mask, interpret=spec.interpret)
+    rm = mask[..., None]
+    upd = got * rm if combine == "sum" else jnp.where(rm > 0, got, _NEG)
+    return _scatter_combine(out, idx, upd, combine)
 
 
 def halo_sync(
@@ -92,22 +174,18 @@ def halo_sync(
     """
     if spec.mode == NONE:
         return a
+    _check_spec(spec)
 
     batched = a.ndim == 3
     neutral = 0.0 if combine == "sum" else _NEG
 
-    def take(idx):
-        return a[:, idx] if batched else a[idx]
-
     if spec.mode == A2A:
         send_idx = graph["a2a_send_idx"]      # [R, Bf]
-        send_mask = graph["a2a_send_mask"]
         recv_idx = graph["a2a_recv_idx"]
         recv_mask = graph["a2a_recv_mask"]
-        buf = take(send_idx)                  # [(B,) R, Bf, F]
-        m = send_mask[..., None]
-        buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
-        buf, orig_dtype = _maybe_compress(buf, spec)
+        buf = a[:, send_idx] if batched else a[send_idx]   # [(B,) R, Bf, F]
+        buf, orig_dtype = _wire_encode(buf, graph["a2a_send_mask"], spec,
+                                       combine)
         if batched:
             # all_to_all splits the rank axis; move it leading
             buf = jnp.moveaxis(buf, 1, 0)     # [R, B, Bf, F]
@@ -125,20 +203,14 @@ def halo_sync(
     if spec.mode == NEIGHBOR and spec.rounds2d:
         out = a
         for k, hops in enumerate(spec.rounds2d):
-            send_idx = graph["nbr_send_idx"][k]
-            send_mask = graph["nbr_send_mask"][k]
-            recv_idx = graph["nbr_recv_idx"][k]
-            recv_mask = graph["nbr_recv_mask"][k]
-            buf = take(send_idx)
-            m = send_mask[..., None]
-            buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
-            buf, orig_dtype = _maybe_compress(buf, spec)
+            send_idx, send_mask, recv_idx, recv_mask = \
+                _round_arrays(graph, spec, k)
+            buf, orig_dtype = _gather_wire(a, send_idx, send_mask, spec,
+                                           combine, batched)
             for axis, perm in hops:                 # chained torus hops
                 buf = jax.lax.ppermute(buf, axis, perm=list(perm))
-            buf = buf.astype(orig_dtype)
-            rm = recv_mask[..., None]
-            upd = buf * rm if combine == "sum" else jnp.where(rm > 0, buf, neutral)
-            out = _scatter_combine(out, recv_idx, upd, combine)
+            out = _scatter_wire(out, recv_idx, recv_mask, buf, spec,
+                                combine, orig_dtype, batched)
         return out
 
     if spec.mode == NEIGHBOR:
@@ -146,28 +218,37 @@ def halo_sync(
         for k, perm in enumerate(spec.perms):
             if not perm:
                 continue
-            send_idx = graph["nbr_send_idx"][k]     # [Bn]
-            send_mask = graph["nbr_send_mask"][k]
-            recv_idx = graph["nbr_recv_idx"][k]
-            recv_mask = graph["nbr_recv_mask"][k]
-            buf = take(send_idx)
-            m = send_mask[..., None]
-            buf = buf * m if combine == "sum" else jnp.where(m > 0, buf, neutral)
-            buf, orig_dtype = _maybe_compress(buf, spec)
-            got = jax.lax.ppermute(buf, spec.axis, perm=list(perm)).astype(orig_dtype)
-            rm = recv_mask[..., None]
-            upd = got * rm if combine == "sum" else jnp.where(rm > 0, got, neutral)
-            out = _scatter_combine(out, recv_idx, upd, combine)
+            send_idx, send_mask, recv_idx, recv_mask = \
+                _round_arrays(graph, spec, k)
+            buf, orig_dtype = _gather_wire(a, send_idx, send_mask, spec,
+                                           combine, batched)
+            got = jax.lax.ppermute(buf, spec.axis, perm=list(perm))
+            out = _scatter_wire(out, recv_idx, recv_mask, got, spec,
+                                combine, orig_dtype, batched)
         return out
 
     raise ValueError(f"unknown halo mode {spec.mode!r}")
 
 
+def _check_spec(spec: HaloSpec):
+    if spec.mode == "auto":
+        raise ValueError(
+            "halo mode 'auto' must be resolved before the exchange runs: "
+            "call plan.autotune(graph) after ShardedGraph.build (the "
+            "training loop does this for you)")
+    if spec.packed and spec.mode == A2A:
+        raise ValueError(
+            "HaloSpec(packed=True) is neighbor-only: jax.lax.all_to_all "
+            "needs uniform per-rank buffers, which is exactly the O(R*Bf) "
+            "wire waste the packed format removes — use mode='neighbor'")
+
+
 def halo_spec_from_plan(plan, mode: str, axis: str = "graph",
-                        wire_dtype=None) -> HaloSpec:
+                        wire_dtype=None, packed: bool = False) -> HaloSpec:
     """Build the static HaloSpec from a host-side ``HaloPlan``."""
     perms = tuple(tuple(( int(a), int(b)) for a, b in rnd) for rnd in plan.perms)
-    return HaloSpec(mode=mode, axis=axis, perms=perms, wire_dtype=wire_dtype)
+    return HaloSpec(mode=mode, axis=axis, perms=perms, wire_dtype=wire_dtype,
+                    packed=packed)
 
 
 def halo_sync_reference(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
@@ -221,3 +302,99 @@ def halo_sync_reference(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
                 new_r = out[r].at[tgt].add(upd) if combine == "sum" else out[r].at[tgt].max(upd)
             out = out.at[r].set(new_r)
     return out
+
+
+def halo_sync_stacked(a_stacked: jnp.ndarray, graph, spec: HaloSpec,
+                      combine: str = "sum", rounds_perms=None) -> jnp.ndarray:
+    """MODE-FAITHFUL single-device emulator of the production ``halo_sync``
+    over a stacked ``[R, N, F]`` graph (no collectives).
+
+    Where :func:`halo_sync_reference` is the canonical-order A2A-array
+    oracle (zero base, ascending-rank summation — used for copy-agreement
+    assertions), this function follows the PRODUCTION per-rank arithmetic of
+    whichever mode/wire format ``spec`` selects: per-rank gathers, wire
+    masking + compression, the exchange (emulated by indexing the senders'
+    buffers), and a scatter-combine seeded from the local aggregate.  That
+    makes it the right probe body for the (schedule × halo-mode × wire)
+    autotuner and the right harness for packed-vs-dense bitwise tests — the
+    math per rank is the one the ``shard_map`` path executes, including the
+    fused Pallas pack/unpack when ``spec.packed`` and combine="sum".
+
+    ``rounds2d`` specs additionally need ``rounds_perms`` — the flat
+    per-round (src, dst) rank pairs from
+    ``repro.core.partition.flat_rounds2d_perms(grid)`` — because the
+    per-axis hop chains are only meaningful on a live device mesh.
+    """
+    if spec.mode == NONE:
+        return a_stacked
+    _check_spec(spec)
+    if a_stacked.ndim != 3:
+        raise ValueError("halo_sync_stacked expects a stacked [R, N, F] "
+                         f"aggregate, got shape {a_stacked.shape}")
+    R = a_stacked.shape[0]
+    neutral = 0.0 if combine == "sum" else _NEG
+
+    if spec.mode == A2A:
+        send_idx = graph["a2a_send_idx"]        # [R, R, Bf]
+        recv_idx = graph["a2a_recv_idx"]
+        recv_mask = graph["a2a_recv_mask"]
+        bufs = []
+        for r in range(R):
+            buf = a_stacked[r][send_idx[r]]     # [R, Bf, F]
+            buf, orig_dtype = _wire_encode(buf, graph["a2a_send_mask"][r],
+                                           spec, combine)
+            bufs.append(buf)
+        out = a_stacked
+        for r in range(R):
+            # what all_to_all delivers to rank r: sender s's slice r
+            got = jnp.stack([bufs[s][r] for s in range(R)])
+            got_flat = got.astype(orig_dtype).reshape(-1, got.shape[-1])
+            rm = recv_mask[r].reshape(-1)[..., None]
+            upd = (got_flat * rm if combine == "sum"
+                   else jnp.where(rm > 0, got_flat, neutral))
+            out = out.at[r].set(_scatter_combine(
+                a_stacked[r], recv_idx[r].reshape(-1), upd, combine))
+        return out
+
+    # NEIGHBOR: per-round disjoint pair exchanges
+    if spec.rounds2d:
+        if rounds_perms is None:
+            raise ValueError(
+                "halo_sync_stacked: a rounds2d spec needs the flat per-round "
+                "(src, dst) pairs — pass rounds_perms="
+                "flat_rounds2d_perms(grid) (repro.core.partition)")
+        rounds = rounds_perms
+    else:
+        rounds = spec.perms
+    out = a_stacked
+    for k, perm in enumerate(rounds):
+        if not perm:
+            continue
+        src_of = {int(d): int(s) for (s, d) in perm}
+        new_out = out
+        for r in range(R):
+            s = src_of.get(r)
+            if s is None:
+                continue   # non-destination ranks receive zeros -> no-op
+            sidx, smask, _, _ = (x[s] for x in _stacked_round_arrays(
+                graph, spec, k))
+            _, _, ridx, rmask = (x[r] for x in _stacked_round_arrays(
+                graph, spec, k))
+            # production gathers from the ORIGINAL aggregate each round and
+            # scatters into the running result
+            buf, orig_dtype = _gather_wire(a_stacked[s], sidx, smask, spec,
+                                           combine, batched=False)
+            new_out = new_out.at[r].set(_scatter_wire(
+                out[r], ridx, rmask, buf, spec, combine, orig_dtype,
+                batched=False))
+        out = new_out
+    return out
+
+
+def _stacked_round_arrays(graph, spec: HaloSpec, k: int):
+    """Stacked-graph variant of ``_round_arrays`` (leading rank axis kept)."""
+    if spec.packed:
+        return (graph[f"pk{k}_send_idx"], graph[f"pk{k}_send_mask"],
+                graph[f"pk{k}_recv_idx"], graph[f"pk{k}_recv_mask"])
+    return (graph["nbr_send_idx"][:, k], graph["nbr_send_mask"][:, k],
+            graph["nbr_recv_idx"][:, k], graph["nbr_recv_mask"][:, k])

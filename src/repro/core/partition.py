@@ -102,6 +102,9 @@ class PartitionedGraphs:
     # memoized (host-side, one pass per partition)
     _int_split: dict | None = dataclasses.field(
         default=None, repr=False, compare=False)
+    # bucketed per-round packed halo arrays, memoized per bucket size
+    _packed_halos: Dict[int, dict] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_pad(self) -> int:
@@ -222,8 +225,70 @@ class PartitionedGraphs:
         self._seg_layouts[key] = layout
         return layout
 
+    def packed_halo(self, bucket: int = 8) -> Dict[str, np.ndarray]:
+        """Cached bucketed per-round packed halo arrays (the packed wire
+        format — see :func:`packed_halo_arrays`).  One dict entry set per
+        NEIGHBOR round ``k``: ``pk{k}_send_idx / _send_mask / _recv_idx /
+        _recv_mask`` of per-round width ``w_k`` (max real entries over ranks
+        in that round, rounded up to ``bucket``) instead of the dense global
+        max ``B``."""
+        key = int(bucket)
+        cached = self._packed_halos.get(key)
+        if cached is None:
+            h = self.halo
+            cached = packed_halo_arrays(dict(
+                nbr_send_idx=h.nbr_send_idx, nbr_send_mask=h.nbr_send_mask,
+                nbr_recv_idx=h.nbr_recv_idx, nbr_recv_mask=h.nbr_recv_mask,
+            ), bucket=bucket)
+            self._packed_halos[key] = cached
+        return cached
+
+    def wire_bytes(self, mode: str, packed: bool = False, feat_dim: int = 1,
+                   wire_dtype=None, bucket: int = 8) -> dict:
+        """Per-rank on-wire halo payload for ONE exchange of a
+        ``[N, feat_dim]`` aggregate (``partition_quality``-style metric).
+
+        * ``mode="a2a"``: every rank ships its full dense buffer to each of
+          the other R-1 ranks — ``(R-1) * B * feat_dim`` elements regardless
+          of how many of them are masked padding.
+        * ``mode="neighbor"``: a rank ships one ``B``-wide buffer per round
+          it participates in (K = max rank degree rounds total).
+        * ``packed=True`` (neighbor only): the round-``k`` buffer is the
+          bucketed width ``w_k`` instead of the dense global max ``B``.
+
+        Returns ``{mode, packed, itemsize, per_rank, max, mean, total}``
+        (bytes; ``per_rank`` is a plain list for JSON).
+        """
+        if mode not in ("a2a", "neighbor"):
+            raise ValueError(f"wire_bytes: unknown halo mode {mode!r}")
+        if packed and mode == "a2a":
+            raise ValueError(
+                "wire_bytes: packed buffers are neighbor-only — a2a "
+                "(jax.lax.all_to_all) requires uniform per-rank buffers")
+        itemsize = int(np.dtype(np.float32 if wire_dtype is None
+                                else wire_dtype).itemsize)
+        h = self.halo
+        per_rank = np.zeros(self.R, dtype=np.int64)
+        if mode == "a2a":
+            B = h.a2a_send_idx.shape[-1]
+            per_rank[:] = (self.R - 1) * B * feat_dim * itemsize
+        else:
+            K, B = h.nbr_send_idx.shape[1], h.nbr_send_idx.shape[2]
+            pk = self.packed_halo(bucket) if packed else None
+            for k in range(K):
+                width = pk[f"pk{k}_send_idx"].shape[-1] if packed else B
+                participates = (h.nbr_send_mask[:, k].sum(axis=-1) > 0) \
+                    | (h.nbr_recv_mask[:, k].sum(axis=-1) > 0)
+                per_rank += participates * width * feat_dim * itemsize
+        return dict(mode=mode, packed=bool(packed), itemsize=itemsize,
+                    per_rank=[int(v) for v in per_rank],
+                    max=int(per_rank.max()) if self.R else 0,
+                    mean=float(per_rank.mean()) if self.R else 0.0,
+                    total=int(per_rank.sum()))
+
     def device_arrays(self, seg_layout: Tuple[int, int] | None = None,
-                      split: bool = False) -> Dict[str, np.ndarray]:
+                      split: bool = False,
+                      packed: bool = False) -> Dict[str, np.ndarray]:
         """The dict of arrays a train/serve step consumes (shard over axis 0).
 
         ``seg_layout=(block_n, block_e)`` additionally includes the cached
@@ -237,6 +302,10 @@ class PartitionedGraphs:
         — the compacted ``edge_{bnd,int}_idx``/``_valid`` index lists for the
         xla backend and, when ``seg_layout`` is also given, the per-side
         fused layouts ``seg_{perm,src,dst}_{bnd,int}``.
+
+        ``packed=True`` attaches the bucketed per-round packed halo arrays
+        (:meth:`packed_halo`) consumed by ``HaloSpec(packed=True)`` and the
+        halo-mode autotuner.
         """
         h = self.halo
         out = dict(
@@ -264,6 +333,8 @@ class PartitionedGraphs:
                     out[f"seg_perm_{part}"] = lay["perm"]
                     out[f"seg_src_{part}"] = lay["src"]
                     out[f"seg_dst_{part}"] = lay["dst"]
+        if packed:
+            out.update(self.packed_halo())
         return out
 
 
@@ -513,6 +584,67 @@ def build_halo_plan(graphs: List[RankGraph], pad_to: int = 8) -> HaloPlan:
         nbr_send_idx=nbr_send_idx, nbr_send_mask=nbr_send_mask,
         nbr_recv_idx=nbr_recv_idx, nbr_recv_mask=nbr_recv_mask,
     )
+
+
+def packed_halo_arrays(nbr: Dict[str, np.ndarray],
+                       bucket: int = 8) -> Dict[str, np.ndarray]:
+    """Bucketed per-round truncation of dense NEIGHBOR halo arrays.
+
+    The dense ``nbr_*`` arrays are ``[R, K, B]`` with ``B`` the GLOBAL max
+    shared-boundary size over all rank pairs — at realistic rank counts most
+    of every round's buffer is masked padding.  Because the plan builders
+    prefix-pack real entries (mask is a 1.0-prefix), truncating round ``k``
+    to ``w_k = round_up(max real entries over ranks, bucket)`` keeps every
+    real entry: the packed arrays are pure slices of the dense ones, which
+    is what makes the packed wire format bitwise-identical in value.
+
+    Works on both :func:`build_halo_plan` NEIGHBOR arrays and
+    :func:`build_2d_halo_rounds` arrays.  Returns one rectangular array set
+    per round (``pk{k}_send_idx`` [R, w_k], ...), so each can live in a
+    ``ShardedGraph`` and shard over the rank axis.
+    """
+    send_mask, recv_mask = nbr["nbr_send_mask"], nbr["nbr_recv_mask"]
+    R, K, B = send_mask.shape
+    out: Dict[str, np.ndarray] = {}
+    for k in range(K):
+        occ = max(int((send_mask[:, k] > 0).sum(axis=-1).max(initial=0)),
+                  int((recv_mask[:, k] > 0).sum(axis=-1).max(initial=0)))
+        w = min(_round_up(occ, bucket), B)
+        # the truncation must drop only padding (prefix-packed invariant)
+        if float(send_mask[:, k, w:].sum()) or float(recv_mask[:, k, w:].sum()):
+            raise ValueError(
+                f"packed_halo_arrays: round {k} has real entries beyond "
+                f"width {w} — halo arrays are not prefix-packed")
+        for name in ("send_idx", "send_mask", "recv_idx", "recv_mask"):
+            out[f"pk{k}_{name}"] = np.ascontiguousarray(
+                nbr[f"nbr_{name}"][:, k, :w])
+    return out
+
+
+def flat_rounds2d_perms(grid: Tuple[int, int]) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """Flat per-round (src, dst) rank pairs for :func:`build_2d_halo_rounds`.
+
+    Each rounds2d round routes one uniform (da, db) torus shift as <=2
+    chained per-axis ppermute hops; their composition delivers rank
+    ``a*Gb + b``'s buffer to ``(a+da)*Gb + (b+db)`` exactly when that rank
+    exists (partial chains deliver zeros, which the recv mask drops).  The
+    single-device emulator (``halo_sync_stacked``) uses these flat pairs in
+    place of the per-axis collectives; the shift order here mirrors
+    ``build_2d_halo_rounds`` and must stay in sync with it.
+    """
+    Ga, Gb = grid
+    shifts = [(da, db) for da in (-1, 0, 1) for db in (-1, 0, 1)
+              if not (da == 0 and db == 0)]
+    rounds = []
+    for da, db in shifts:
+        perm = []
+        for a in range(Ga):
+            for b in range(Gb):
+                a2, b2 = a + da, b + db
+                if 0 <= a2 < Ga and 0 <= b2 < Gb:
+                    perm.append((a * Gb + b, a2 * Gb + b2))
+        rounds.append(tuple(perm))
+    return tuple(rounds)
 
 
 def pack(graphs: List[RankGraph], n_global: int, pad_to: int = 8) -> PartitionedGraphs:

@@ -27,8 +27,17 @@ from repro.core.graph_state import OVERLAP, NMPPlan, ShardedGraph, as_graph
 from repro.core.halo import halo_sync_reference
 
 
-def _smooth_stacked(lp, h, e, g: ShardedGraph, plan: NMPPlan):
-    """One consistent NMP layer over the stacked ranks (reference halo)."""
+def _smooth_stacked(lp, h, e, g: ShardedGraph, plan: NMPPlan, sync_fn=None):
+    """One consistent NMP layer over the stacked ranks (reference halo).
+
+    ``sync_fn`` (signature of :func:`halo_sync_reference`) overrides the
+    exchange emulator — pass ``repro.core.halo.halo_sync_stacked`` (curried
+    with ``rounds_perms`` for rounds2d specs) to follow the PRODUCTION
+    per-mode/per-wire arithmetic instead of the canonical A2A oracle; the
+    (schedule × halo-mode × wire) autotune probe and the packed-vs-dense
+    bitwise tests run this layer that way.
+    """
+    sync = halo_sync_reference if sync_fn is None else sync_fn
     R = h.shape[0]
     ranks = [g.rank(r) for r in range(R)]
     if plan.schedule == OVERLAP:
@@ -38,7 +47,7 @@ def _smooth_stacked(lp, h, e, g: ShardedGraph, plan: NMPPlan):
                                              plan) for r in range(R)]
         agg = jnp.stack([o[1] for o in outs_b])
         if plan.halo.mode != "none":
-            agg = halo_sync_reference(agg, g, plan.halo, combine="sum")
+            agg = sync(agg, g, plan.halo, combine="sum")
         agg = agg + jnp.stack([o[1] for o in outs_i])
         e_new = jnp.stack([b[0] + i[0] for b, i in zip(outs_b, outs_i)])
     else:
@@ -46,7 +55,7 @@ def _smooth_stacked(lp, h, e, g: ShardedGraph, plan: NMPPlan):
                 for r in range(R)]
         agg = jnp.stack([o[1] for o in outs])
         if plan.halo.mode != "none":
-            agg = halo_sync_reference(agg, g, plan.halo, combine="sum")
+            agg = sync(agg, g, plan.halo, combine="sum")
         e_new = jnp.stack([o[0] for o in outs])
     h_new = jnp.stack([node_update(lp, h[r], agg[r], ranks[r])
                        for r in range(R)])
@@ -104,6 +113,7 @@ def gnn_forward_stacked(
     x: jnp.ndarray,                  # [R, N_pad, F_x]
     graph: ShardedGraph,             # stacked arrays incl. static_edge_feats
     plan: NMPPlan,
+    sync_fn=None,
 ) -> jnp.ndarray:
     """Paper GNN forward over all R ranks on one device (reference halo).
 
@@ -129,7 +139,7 @@ def gnn_forward_stacked(
     h, e = jnp.stack(hs), jnp.stack(es)
 
     for lp in params["mp"]:
-        h, e = _smooth_stacked(lp, h, e, g0, plan)
+        h, e = _smooth_stacked(lp, h, e, g0, plan, sync_fn)
 
     if "coarse" in params:
         h = vcycle_stacked(params["coarse"], h, graph, plan)

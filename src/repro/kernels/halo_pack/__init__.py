@@ -1,0 +1,5 @@
+from repro.kernels.halo_pack.ops import halo_pack, halo_unpack_add
+from repro.kernels.halo_pack.ref import halo_pack_ref, halo_unpack_add_ref
+
+__all__ = ["halo_pack", "halo_unpack_add", "halo_pack_ref",
+           "halo_unpack_add_ref"]

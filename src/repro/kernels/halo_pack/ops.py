@@ -1,0 +1,159 @@
+"""Host wrappers + custom VJPs for the fused halo pack/unpack ops.
+
+Entry points (used by ``repro.core.halo`` when ``HaloSpec(packed=True)``):
+
+* ``halo_pack(x, idx, mask)``        -> ``buf = x[idx] * mask[:, None]``
+* ``halo_unpack_add(a, buf, idx, mask)`` -> ``a.at[idx].add(buf * mask)``
+
+Both are pure data movement, bitwise-equal to the XLA expressions in
+``ref.py`` (tested in ``tests/test_halo_pack.py``).  They form a closed
+adjoint pair, so each op's backward pass is the other op's kernel:
+
+* d pack / d x      = unpack_add(zeros_like(x), g, idx, mask)
+* d unpack / d a    = g
+* d unpack / d buf  = pack(g, idx, mask)
+
+Index lists are graph metadata — the VJPs return zero cotangents for
+them (float0 for the int indices, zeros for the masks), mirroring the
+``fused_nmp_edge_agg`` gradient contract.
+
+Host-side layout: the wire width ``W`` is padded up to a multiple of the
+tile depth ``block_b`` (padding slots: index 0, mask 0 — they move exact
+zeros), indices are clipped into range, and the destination row count is
+rounded up to a multiple of 8 so the unpack kernel's VMEM accumulator
+tiles cleanly.  ``interpret=True`` runs both kernels on CPU for CI.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.halo_pack.kernel import pack_pallas, unpack_add_pallas
+
+#: env var overriding the wire tile depth (rows per kernel tile)
+BLOCK_ENV = "REPRO_HALO_PACK_BLOCK"
+
+
+def pick_block_b(backend: str | None = None,
+                 interpret: bool = False) -> int:
+    """Tile depth for the pack/unpack kernels.
+
+    Wire buffers are narrow (a few bucket-rounded rows per neighbor), so
+    tiles stay shallow: 8 rows in interpret/CPU mode (the interpreter runs
+    the per-row loops eagerly), 128 on TPU to amortize per-row DMA issue
+    overhead.  ``REPRO_HALO_PACK_BLOCK`` overrides.
+    """
+    override = os.environ.get(BLOCK_ENV)
+    if override:
+        return int(override)
+    if backend is None:
+        backend = jax.default_backend()
+    return 8 if (interpret or backend != "tpu") else 128
+
+
+_INT_ZERO = functools.partial(np.zeros, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pack_core(static, x, idx_t, mask_t):
+    (interpret,) = static
+    return pack_pallas(x, idx_t, mask_t, interpret=interpret)
+
+
+def _pack_core_fwd(static, x, idx_t, mask_t):
+    return _pack_core(static, x, idx_t, mask_t), (x, idx_t, mask_t)
+
+
+def _pack_core_bwd(static, res, g):
+    (interpret,) = static
+    x, idx_t, mask_t = res
+    gx = unpack_add_pallas(jnp.zeros_like(x), g.astype(x.dtype), idx_t,
+                           mask_t, interpret=interpret)
+    return gx, _INT_ZERO(idx_t.shape), jnp.zeros_like(mask_t)
+
+
+_pack_core.defvjp(_pack_core_fwd, _pack_core_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _unpack_core(static, a, buf_t, idx_t, mask_t):
+    (interpret,) = static
+    return unpack_add_pallas(a, buf_t, idx_t, mask_t, interpret=interpret)
+
+
+def _unpack_core_fwd(static, a, buf_t, idx_t, mask_t):
+    out = _unpack_core(static, a, buf_t, idx_t, mask_t)
+    return out, (buf_t, idx_t, mask_t)
+
+
+def _unpack_core_bwd(static, res, g):
+    (interpret,) = static
+    buf_t, idx_t, mask_t = res
+    gbuf = pack_pallas(g, idx_t, mask_t.astype(g.dtype), interpret=interpret)
+    return (g, gbuf.astype(buf_t.dtype), _INT_ZERO(idx_t.shape),
+            jnp.zeros_like(mask_t))
+
+
+_unpack_core.defvjp(_unpack_core_fwd, _unpack_core_bwd)
+
+
+def _tile_wire(idx, mask, n_round, block_b, dtype):
+    """Clip + pad a [W] wire index/mask pair into [T, BB] tiles."""
+    w = idx.shape[0]
+    w_pad = -(-max(w, 1) // block_b) * block_b
+    idx_p = jnp.pad(jnp.clip(idx.astype(jnp.int32), 0, n_round - 1),
+                    (0, w_pad - w))
+    mask_p = jnp.pad(mask.astype(dtype), (0, w_pad - w))
+    return idx_p.reshape(-1, block_b), mask_p.reshape(-1, block_b), w_pad
+
+
+def halo_pack(x: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray, *,
+              interpret: bool = False) -> jnp.ndarray:
+    """Fused masked row gather: ``buf = x[idx] * mask[:, None]``.
+
+    Args:
+      x: [N, F] source rows.
+      idx: [W] int row ids (padding slots may be any in-range value).
+      mask: [W] 0/1 send mask (0 on padding — those slots become zeros).
+
+    Returns [W, F] send buffer in ``x.dtype``, bitwise-equal to
+    ``halo_pack_ref``.
+    """
+    n, f = x.shape
+    w = idx.shape[0]
+    block_b = pick_block_b(interpret=interpret)
+    n_round = -(-max(n, 1) // 8) * 8
+    x_k = jnp.pad(x, ((0, n_round - n), (0, 0)))
+    idx_t, mask_t, w_pad = _tile_wire(idx, mask, n_round, block_b, x.dtype)
+    buf = _pack_core((bool(interpret),), x_k, idx_t, mask_t)
+    return buf.reshape(w_pad, f)[:w]
+
+
+def halo_unpack_add(a: jnp.ndarray, buf: jnp.ndarray, idx: jnp.ndarray,
+                    mask: jnp.ndarray, *,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Fused masked scatter-add: ``out = a.at[idx].add(buf * mask[:, None])``.
+
+    Args:
+      a: [N, F] destination rows (the combine seed).
+      buf: [W, F] recv buffer (cast to ``a.dtype`` before accumulation).
+      idx: [W] int destination row ids.
+      mask: [W] 0/1 recv mask (0 on padding — exact-zero no-op adds).
+
+    Returns [N, F] in ``a.dtype``, bitwise-equal to ``halo_unpack_add_ref``
+    (recv ids are unique within a halo round, so add order is moot).
+    """
+    n, f = a.shape
+    w = idx.shape[0]
+    block_b = pick_block_b(interpret=interpret)
+    n_round = -(-max(n, 1) // 8) * 8
+    a_k = jnp.pad(a, ((0, n_round - n), (0, 0)))
+    idx_t, mask_t, w_pad = _tile_wire(idx, mask, n_round, block_b, a.dtype)
+    buf_t = jnp.pad(buf.astype(a.dtype),
+                    ((0, w_pad - w), (0, 0))).reshape(-1, block_b, f)
+    out = _unpack_core((bool(interpret),), a_k, buf_t, idx_t, mask_t)
+    return out[:n]

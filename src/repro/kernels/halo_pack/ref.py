@@ -1,0 +1,23 @@
+"""Plain-XLA references for the fused halo pack/unpack ops.
+
+These are the exact expressions ``core/halo.py`` used before the packed
+wire format existed (``take(send_idx)`` masked multiply on the send side,
+``a.at[recv_idx].add`` on the recv side).  The Pallas ops are pure data
+movement over the same rows, so ``tests/test_halo_pack.py`` pins them
+BITWISE equal to these references — values and gradients.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def halo_pack_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """``buf[i] = x[idx[i]] * mask[i]`` — masked row gather, [W, F]."""
+    return x[idx] * mask[:, None]
+
+
+def halo_unpack_add_ref(a: jnp.ndarray, buf: jnp.ndarray, idx: jnp.ndarray,
+                        mask: jnp.ndarray) -> jnp.ndarray:
+    """``out = a.at[idx].add(buf * mask[:, None])`` — masked scatter-add."""
+    return a.at[idx].add(buf * mask[:, None])

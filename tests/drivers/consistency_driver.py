@@ -16,7 +16,11 @@ grids to the device count; standalone invocations default to 8 devices.
 reproduce the same losses/grads bit-for-bit-ish); ``--partitioner`` selects
 how the mesh is decomposed (block element grids vs spectral bisection) —
 partitioning is a pure performance knob under Eq. 2/3, so every assertion
-must hold identically for either method.
+must hold identically for either method.  ``--halo auto`` swaps the fixed
+mode matrix for the (halo-mode x wire) autotune leg: the measured tuner
+resolves the exchange format on the actual graph (packed Pallas candidates
+included, interpreted on CPU hosts) and the resolved plan must still
+reproduce the R=1 baseline through the real collectives.
 
 Exit code 0 = all assertions passed.
 """
@@ -49,10 +53,11 @@ CASES = {
 
 
 def run_case(mesh_dev, pg, sem_mesh, params, cfg, mode, batch=2,
-             schedule="blocking", wire_dtype=None):
+             schedule="blocking", wire_dtype=None, plan=None):
     """Run loss+grad through the shard_map path on a (data, graph) mesh."""
-    plan = NMPPlan.build(pg, mode, axis="graph", wire_dtype=wire_dtype,
-                         schedule=schedule)
+    if plan is None:
+        plan = NMPPlan.build(pg, mode, axis="graph", wire_dtype=wire_dtype,
+                             schedule=schedule)
     graph = ShardedGraph.build(pg, sem_mesh.coords, plan)
     x_global = gather_node_features(pg, taylor_green_velocity(sem_mesh.coords))
     # batch of identical snapshots (loss must be invariant to B here)
@@ -69,6 +74,12 @@ def main():
                     choices=["blocking", "overlap"])
     ap.add_argument("--partitioner", default="block",
                     choices=["block", "spectral"])
+    ap.add_argument("--halo", default="matrix", choices=["matrix", "auto"],
+                    help="'matrix' runs the fixed A2A/NEIGHBOR/NONE mode "
+                         "sweep; 'auto' instead exercises the (halo-mode x "
+                         "wire) autotuner end-to-end — the measured pick is "
+                         "resolved on the actual graph and then verified "
+                         "against the R=1 baseline on REAL collectives")
     args = ap.parse_args()
     n_dev = len(jax.devices())
     assert n_dev in CASES, f"need 2, 4 or 8 host devices, got {n_dev}"
@@ -86,6 +97,43 @@ def main():
     l1 = float(l1)
     print(f"R=1 loss {l1:.8f} (schedule={args.schedule}, "
           f"partitioner={args.partitioner}, {n_dev} devices)")
+
+    if args.halo == "auto":
+        # ---- mode+wire autotune leg: build with halo mode "auto" and a
+        # candidate bf16 wire, let the measured tuner resolve the (halo-mode
+        # x wire) pair on the actual graph, then push the resolved plan
+        # through the REAL shard_map collectives.  interpret=True lets the
+        # packed Pallas candidates run (interpreted) on CPU hosts; the
+        # consistency bound depends on whether the tuner kept the lossy
+        # wire (it may only ever DROP it, never introduce one unasked). ----
+        for rank_grid, data_sz in CASES[n_dev]:
+            R = int(np.prod(rank_grid))
+            pg = partition_mesh(sem_mesh, rank_grid, method=args.partitioner)
+            mesh_dev = jax.make_mesh((data_sz, R), ("data", "graph"))
+            plan = NMPPlan.build(pg, "auto", axis="graph",
+                                 wire_dtype=jnp.bfloat16,
+                                 schedule=args.schedule, interpret=True)
+            graph = ShardedGraph.build(pg, sem_mesh.coords, plan)
+            plan = plan.autotune(graph, measure=True, hidden=cfg.hidden,
+                                 iters=3)
+            assert plan.halo.mode != "auto", "autotune left mode unresolved"
+            loss, grads = run_case(mesh_dev, pg, sem_mesh, params, cfg,
+                                   plan.halo.mode, batch=data_sz, plan=plan)
+            wire = plan.halo.wire_dtype
+            tol = 2e-2 if wire is not None else 1e-6
+            pick = (f"{plan.halo.mode}"
+                    f"{'-packed' if plan.halo.packed else ''}"
+                    f"|{jnp.dtype(wire).name if wire is not None else 'fp32'}")
+            print(f"R={R} halo=auto pick={pick} loss={loss:.8f} "
+                  f"dev={abs(loss - l1):.2e}")
+            assert abs(loss - l1) < tol * max(1.0, abs(l1)), (R, pick, loss, l1)
+            gtol = (2e-2, 2e-2) if wire is not None else (1e-3, 2e-6)
+            for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(grads)):
+                np.testing.assert_allclose(
+                    b, np.asarray(a), rtol=gtol[0], atol=gtol[1],
+                    err_msg=f"grad mismatch R={R} halo=auto pick={pick}")
+        print("CONSISTENCY DRIVER PASS")
+        return
 
     results = {}
     for rank_grid, data_sz in CASES[n_dev]:

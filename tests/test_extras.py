@@ -1,6 +1,7 @@
 """Extra coverage: halo wire compression, elastic checkpoint restore,
 consistent reductions, sampler block-meta integration."""
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -47,6 +48,68 @@ def test_halo_wire_bf16_compression_close():
     np.testing.assert_allclose(np.asarray(comp), np.asarray(full), rtol=2e-2, atol=2e-2)
     # and it actually changed something (quantization happened)
     assert float(jnp.abs(comp - full).max()) > 0
+
+
+@pytest.mark.parametrize("combine", ["sum", "max"])
+@pytest.mark.parametrize("mode_name", ["a2a", "neighbor", "rounds2d"])
+def test_halo_wire_bf16_mode_combine_matrix(mode_name, combine):
+    """Wire compression composes with every exchange topology and combine.
+
+    The invariant under audit: masking happens BEFORE compression on the
+    send side (``_wire_encode``), and the receive side re-masks with a
+    fresh full-precision neutral — so the bf16-rounded ``max`` neutral
+    (-1e30 -> ~-1.004e30) never reaches the combine, and padded rows never
+    contribute a quantized zero to a ``sum``.  Each bf16 cell must stay
+    within bf16 tolerance of its own full-precision mode AND of the A2A
+    oracle (the topologies agree with each other, compressed or not)."""
+    import dataclasses
+    from repro.core import NEIGHBOR, halo_sync_stacked
+    from repro.core.partition import (build_2d_halo_rounds,
+                                      flat_rounds2d_perms,
+                                      from_element_partition,
+                                      pack, partition_elements)
+
+    mesh = box_mesh((4, 4, 2), p=2)
+    perms = None
+    if mode_name == "rounds2d":
+        Ga, Gb = 2, 2
+        e2r = partition_elements(mesh, (Gb, Ga, 1))
+        graphs = from_element_partition(mesh, e2r, Ga * Gb)
+        pg = pack(graphs, mesh.n_nodes)
+        rounds2d, nbr = build_2d_halo_rounds(graphs, (Ga, Gb),
+                                             ("data", "model"))
+        spec = HaloSpec(mode=NEIGHBOR, rounds2d=rounds2d)
+        graph = ShardedGraph.build(pg, mesh.coords, NMPPlan(halo=spec))
+        graph = graph.with_arrays(**{k: jnp.asarray(v)
+                                     for k, v in nbr.items()})
+        perms = flat_rounds2d_perms((Ga, Gb))
+    else:
+        pg = partition_mesh(mesh, (2, 2, 1))
+        mode = A2A if mode_name == "a2a" else NEIGHBOR
+        plan = NMPPlan.build(pg, mode)
+        graph = ShardedGraph.build(pg, mesh.coords, plan)
+        spec = plan.halo
+
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(pg.R, pg.n_pad, 8)).astype(np.float32))
+    a = a * jnp.asarray(pg.node_mask)[..., None]
+
+    bf16 = dataclasses.replace(spec, wire_dtype=jnp.bfloat16)
+    full = halo_sync_stacked(a, graph, spec, combine=combine,
+                             rounds_perms=perms)
+    comp = halo_sync_stacked(a, graph, bf16, combine=combine,
+                             rounds_perms=perms)
+    assert comp.dtype == full.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(full),
+                               rtol=2e-2, atol=2e-2)
+    # quantization really happened on the wire
+    assert float(jnp.abs(comp - full).max()) > 0
+    # and stays consistent with the canonical-order A2A oracle: no masked
+    # row leaked a compressed neutral/zero into the combine
+    oracle = halo_sync_reference(a, graph, HaloSpec(mode=A2A),
+                                 combine=combine)
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(oracle),
+                               rtol=2e-2, atol=2e-2)
 
 
 def test_elastic_checkpoint_restore_across_partitionings(tmp_path):

@@ -1,0 +1,255 @@
+"""Packed halo wire format: fused Pallas pack/unpack ops vs XLA references,
+bucketed ``pk{k}_*`` array construction, wire-byte accounting, and BITWISE
+packed-vs-dense equality of values and gradients through ``halo_sync_stacked``
+and the full stacked GNN forward (both schedules, 1-rank and multi-rank).
+
+"Bitwise" is asserted as ``max |packed - dense| == 0.0`` — exact equality up
+to the sign of zero (dense rounds may add one more exact +0.0 padding slot
+than the truncated packed buffer)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GNNConfig, HaloSpec, NEIGHBOR, NMPPlan, ShardedGraph,
+                        box_mesh, init_gnn, partition_mesh)
+from repro.core.halo import halo_sync_stacked
+from repro.core.mesh_gen import taylor_green_velocity
+from repro.core.partition import (build_2d_halo_rounds, flat_rounds2d_perms,
+                                  from_element_partition, gather_node_features,
+                                  pack, packed_halo_arrays, partition_elements)
+from repro.core.reference import gnn_forward_stacked
+from repro.kernels.halo_pack import (halo_pack, halo_pack_ref,
+                                     halo_unpack_add, halo_unpack_add_ref)
+
+
+def _bitwise(a, b):
+    assert a.dtype == b.dtype and a.shape == b.shape
+    assert float(jnp.abs(a - b).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# op level: Pallas (interpret) vs XLA reference, values + grads
+# ---------------------------------------------------------------------------
+
+def test_halo_pack_op_bitwise_values_and_grads():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(19, 5)).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(19)[:13].astype(np.int32))
+    mask = jnp.asarray((rng.random(13) < 0.7).astype(np.float32))
+    out = halo_pack(x, idx, mask, interpret=True)
+    _bitwise(out, halo_pack_ref(x, idx, mask))
+
+    w = jnp.asarray(rng.normal(size=out.shape).astype(np.float32))
+    g = jax.grad(lambda v: (halo_pack(v, idx, mask, interpret=True) * w).sum())(x)
+    g_ref = jax.grad(lambda v: (halo_pack_ref(v, idx, mask) * w).sum())(x)
+    _bitwise(g, g_ref)
+
+
+def test_halo_unpack_add_op_bitwise_values_and_grads():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(19, 5)).astype(np.float32))
+    buf = jnp.asarray(rng.normal(size=(13, 5)).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(19)[:13].astype(np.int32))
+    mask = jnp.asarray((rng.random(13) < 0.7).astype(np.float32))
+    out = halo_unpack_add(a, buf, idx, mask, interpret=True)
+    _bitwise(out, halo_unpack_add_ref(a, buf, idx, mask))
+
+    w = jnp.asarray(rng.normal(size=a.shape).astype(np.float32))
+
+    def loss(fn):
+        return lambda aa, bb: (fn(aa, bb, idx, mask) * w).sum()
+    ga, gb = jax.grad(loss(lambda aa, bb, i, m: halo_unpack_add(
+        aa, bb, i, m, interpret=True)), argnums=(0, 1))(a, buf)
+    ga_r, gb_r = jax.grad(loss(halo_unpack_add_ref), argnums=(0, 1))(a, buf)
+    _bitwise(ga, ga_r)
+    _bitwise(gb, gb_r)
+
+
+def test_halo_unpack_add_duplicate_indices_close():
+    """Duplicate destinations (not produced by the halo plans, which keep
+    per-round recv ids unique, but the op must still be correct): the
+    sequential in-kernel adds may re-associate vs the XLA scatter, so this
+    one compares with a float tolerance instead of bitwise."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+    buf = jnp.asarray(rng.normal(size=(9, 3)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 6, size=9).astype(np.int32))
+    mask = jnp.ones((9,), jnp.float32)
+    out = halo_unpack_add(a, buf, idx, mask, interpret=True)
+    ref = halo_unpack_add_ref(a, buf, idx, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_halo_pack_wire_compression_composes():
+    """halo.py compresses AFTER the fused pack — the kernel's output must
+    cast to the wire dtype exactly like the dense masked gather does."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(10)[:6].astype(np.int32))
+    mask = jnp.asarray((rng.random(6) < 0.8).astype(np.float32))
+    fused = halo_pack(x, idx, mask, interpret=True).astype(jnp.bfloat16)
+    dense = halo_pack_ref(x, idx, mask).astype(jnp.bfloat16)
+    _bitwise(fused, dense)
+
+
+# ---------------------------------------------------------------------------
+# format level: bucketed arrays + wire-byte accounting
+# ---------------------------------------------------------------------------
+
+def _neighbor_case(grid=(2, 2, 1)):
+    mesh = box_mesh((4, 2, 2), p=2)
+    pg = partition_mesh(mesh, grid)
+    plan = NMPPlan.build(pg, NEIGHBOR, packed=True, interpret=True)
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
+    return mesh, pg, plan, graph
+
+
+def test_packed_halo_arrays_are_prefix_truncations():
+    _, pg, _, graph = _neighbor_case()
+    h = pg.halo
+    K, B = h.nbr_send_idx.shape[1], h.nbr_send_idx.shape[2]
+    pk = pg.packed_halo()
+    assert len(pk) == 4 * K
+    for k in range(K):
+        w = pk[f"pk{k}_send_idx"].shape[-1]
+        assert w <= B and w % 8 == 0
+        # pure truncation of the dense arrays (what makes packed bitwise)
+        np.testing.assert_array_equal(pk[f"pk{k}_send_idx"],
+                                      h.nbr_send_idx[:, k, :w])
+        np.testing.assert_array_equal(pk[f"pk{k}_recv_mask"],
+                                      h.nbr_recv_mask[:, k, :w])
+        # nothing real beyond the truncation
+        assert float(h.nbr_send_mask[:, k, w:].sum()) == 0.0
+        # and the stacked graph carries them
+        assert graph[f"pk{k}_send_idx"].shape == (pg.R, w)
+
+
+def test_packed_halo_arrays_rejects_non_prefix_packed():
+    _, pg, _, _ = _neighbor_case()
+    h = pg.halo
+    bad = dict(nbr_send_idx=h.nbr_send_idx.copy(),
+               nbr_send_mask=np.zeros_like(h.nbr_send_mask),
+               nbr_recv_idx=h.nbr_recv_idx.copy(),
+               nbr_recv_mask=np.zeros_like(h.nbr_recv_mask))
+    bad["nbr_send_mask"][0, 0, -1] = 1.0        # lone real entry at the tail
+    with pytest.raises(ValueError, match="prefix-packed"):
+        packed_halo_arrays(bad, bucket=8)
+
+
+def test_wire_bytes_packed_not_worse_than_dense():
+    _, pg, _, _ = _neighbor_case()
+    a2a = pg.wire_bytes("a2a", feat_dim=8)
+    dense = pg.wire_bytes("neighbor", feat_dim=8)
+    packed = pg.wire_bytes("neighbor", packed=True, feat_dim=8)
+    assert packed["max"] <= dense["max"] and packed["total"] <= dense["total"]
+    assert packed["total"] <= a2a["total"]
+    # bf16 wire halves the payload exactly
+    half = pg.wire_bytes("neighbor", packed=True, feat_dim=8,
+                         wire_dtype=np.float16)
+    assert half["total"] * 2 == packed["total"]
+    with pytest.raises(ValueError, match="neighbor-only"):
+        pg.wire_bytes("a2a", packed=True)
+
+
+# ---------------------------------------------------------------------------
+# exchange level: packed vs dense through halo_sync_stacked, bitwise
+# ---------------------------------------------------------------------------
+
+def _stacked_aggregate(pg, f=6, seed=3):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(pg.R, pg.n_pad, f)).astype(np.float32))
+    return a * jnp.asarray(pg.node_mask)[..., None]
+
+
+def test_packed_neighbor_bitwise_values_and_grads():
+    _, pg, plan, graph = _neighbor_case()
+    packed = plan.halo
+    dense = dataclasses.replace(packed, packed=False)
+    assert packed.packed and packed.interpret
+    a = _stacked_aggregate(pg)
+    out_d = halo_sync_stacked(a, graph, dense)
+    out_p = halo_sync_stacked(a, graph, packed)
+    _bitwise(out_p, out_d)
+    # the exchange did something (otherwise the test is vacuous)
+    assert float(jnp.abs(out_d - a).max()) > 0
+
+    w = jnp.asarray(np.random.default_rng(4).normal(
+        size=out_d.shape).astype(np.float32))
+    g_d = jax.grad(lambda v: (halo_sync_stacked(v, graph, dense) * w).sum())(a)
+    g_p = jax.grad(lambda v: (halo_sync_stacked(v, graph, packed) * w).sum())(a)
+    _bitwise(g_p, g_d)
+
+
+def test_packed_neighbor_combine_max_bitwise():
+    """combine='max' keeps the XLA scatter path but still runs on the narrow
+    packed arrays — same results, smaller wire."""
+    _, pg, plan, graph = _neighbor_case()
+    packed = plan.halo
+    dense = dataclasses.replace(packed, packed=False)
+    a = _stacked_aggregate(pg, seed=5)
+    _bitwise(halo_sync_stacked(a, graph, packed, combine="max"),
+             halo_sync_stacked(a, graph, dense, combine="max"))
+
+
+def test_packed_single_rank_is_identity():
+    _, pg, plan, graph = _neighbor_case(grid=(1, 1, 1))
+    a = _stacked_aggregate(pg)
+    _bitwise(halo_sync_stacked(a, graph, plan.halo), a)
+
+
+def test_packed_rounds2d_bitwise():
+    mesh = box_mesh((4, 4, 2), p=2)
+    Ga, Gb = 2, 2
+    e2r = partition_elements(mesh, (Gb, Ga, 1))
+    graphs = from_element_partition(mesh, e2r, Ga * Gb)
+    pg = pack(graphs, mesh.n_nodes)
+    rounds2d, nbr = build_2d_halo_rounds(graphs, (Ga, Gb), ("data", "model"))
+    dense = HaloSpec(mode=NEIGHBOR, rounds2d=rounds2d, interpret=True)
+    packed = dataclasses.replace(dense, packed=True)
+    graph = ShardedGraph.build(pg, mesh.coords, NMPPlan(halo=dense))
+    graph = graph.with_arrays(
+        **{k: jnp.asarray(v) for k, v in nbr.items()},
+        **{k: jnp.asarray(v) for k, v in packed_halo_arrays(nbr).items()})
+    perms = flat_rounds2d_perms((Ga, Gb))
+    assert len(perms) == len(rounds2d)
+    a = _stacked_aggregate(pg, seed=6)
+    out_d = halo_sync_stacked(a, graph, dense, rounds_perms=perms)
+    out_p = halo_sync_stacked(a, graph, packed, rounds_perms=perms)
+    _bitwise(out_p, out_d)
+    assert float(jnp.abs(out_d - a).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# model level: full stacked GNN forward + parameter grads, both schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["blocking", "overlap"])
+@pytest.mark.parametrize("grid", [(1, 1, 1), (2, 2, 1)])
+def test_packed_full_forward_bitwise(schedule, grid):
+    mesh = box_mesh((4, 2, 2), p=2)
+    pg = partition_mesh(mesh, grid)
+    plan_p = NMPPlan.build(pg, NEIGHBOR, packed=True, schedule=schedule,
+                           interpret=True)
+    plan_d = NMPPlan.build(pg, NEIGHBOR, packed=False, schedule=schedule,
+                           interpret=True)
+    graph = ShardedGraph.build(pg, mesh.coords, plan_p)
+    cfg = GNNConfig.small()
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(gather_node_features(pg, taylor_green_velocity(mesh.coords)))
+
+    def fwd(p, plan):
+        return gnn_forward_stacked(p, x, graph, plan, sync_fn=halo_sync_stacked)
+
+    y_d = fwd(params, plan_d)
+    y_p = fwd(params, plan_p)
+    _bitwise(y_p, y_d)
+
+    g_d = jax.grad(lambda p: (fwd(p, plan_d) ** 2).sum())(params)
+    g_p = jax.grad(lambda p: (fwd(p, plan_p) ** 2).sum())(params)
+    for ld, lp in zip(jax.tree_util.tree_leaves(g_d),
+                      jax.tree_util.tree_leaves(g_p)):
+        _bitwise(lp, ld)

@@ -233,6 +233,93 @@ def test_unresolved_auto_plan_errors_at_dispatch():
         nmp_impl(plan)
 
 
+# ---------------------------------------------------------------------------
+# halo mode "auto": the (schedule x halo-mode x wire) cross-product
+# ---------------------------------------------------------------------------
+
+def _mode_auto_case(grid=(2, 2, 1), **plan_kw):
+    mesh = box_mesh((4, 2, 2), p=2)
+    pg = partition_mesh(mesh, grid)
+    plan = NMPPlan.build(pg, "auto", schedule="auto", interpret=True,
+                         **plan_kw)
+    graph = ShardedGraph.build(pg, mesh.coords, plan)
+    return plan, graph
+
+
+def test_autotune_mode_auto_heuristic_picks_packed_neighbor():
+    plan, graph = _mode_auto_case()
+    out = plan.autotune(graph, measure=False)
+    assert out.halo.mode == "neighbor" and out.halo.packed
+    assert out.halo.wire_dtype is None          # never introduces lossy wire
+    frac = interior_frac(graph.levels[0])
+    assert out.schedule == ("overlap" if frac < 0.5 else "blocking")
+    # the resolved plan dispatches and keeps the coarse specs' own perms
+    nmp_impl(out)
+    assert out.halo.perms == plan.halo.perms
+
+
+def test_autotune_mode_auto_r1_resolves_none():
+    plan, graph = _mode_auto_case((1, 1, 1))
+    out = plan.autotune(graph)
+    assert out.schedule == "blocking"
+    assert out.halo.mode == "none" and not out.halo.packed
+    assert out.halo.wire_dtype is None
+
+
+def test_autotune_mode_auto_keeps_requested_wire_in_heuristic():
+    plan, graph = _mode_auto_case(wire_dtype=jnp.bfloat16)
+    out = plan.autotune(graph, measure=False)
+    assert jnp.dtype(out.halo.wire_dtype).name == "bfloat16"
+
+
+def test_autotune_mode_auto_measured_argmin_cached(monkeypatch):
+    """Mode-auto resolution argmins the candidate table and caches the
+    triple: the (expensive) sweep runs once per (graph, policy)."""
+    plan, graph = _mode_auto_case()
+    calls = []
+    table = {("blocking", "a2a", None): 3.0,
+             ("blocking", "neighbor", None): 2.0,
+             ("overlap", "neighbor-packed", None): 1.0}
+
+    def fake_sweep(plan, graph, hidden, iters, schedules, modes, wires):
+        calls.append(1)
+        return dict(table)
+
+    monkeypatch.setattr(consistent_mp, "measure_plan_candidates", fake_sweep)
+    monkeypatch.setattr(consistent_mp, "_SCHEDULE_CACHE", {})
+    p1 = plan.autotune(graph, measure=True)
+    p2 = plan.autotune(graph, measure=True)
+    assert p1.schedule == p2.schedule == "overlap"
+    assert p1.halo.mode == "neighbor" and p1.halo.packed
+    assert len(calls) == 1
+
+
+def test_measure_plan_candidates_real_sweep_matches_autotune():
+    """The miniature of the bench acceptance check: a real measured sweep on
+    a small graph covers the full candidate grid, and autotune's pick IS the
+    argmin of the same memoized table."""
+    from repro.core import measure_plan_candidates
+    plan, graph = _mode_auto_case((2, 1, 1))
+    table = measure_plan_candidates(plan, graph, hidden=8, iters=1)
+    assert set(table) == {(s, m, None)
+                          for s in ("blocking", "overlap")
+                          for m in ("a2a", "neighbor", "neighbor-packed")}
+    assert all(np.isfinite(t) and t > 0 for t in table.values())
+    out = plan.autotune(graph, measure=True, hidden=8, iters=1)
+    best_s, best_m, best_w = min(table, key=table.get)
+    assert out.schedule == best_s
+    assert out.halo.packed == best_m.endswith("-packed")
+    assert out.halo.mode == best_m.replace("-packed", "")
+    assert out.halo.wire_dtype is None and best_w is None
+
+
+def test_unresolved_mode_auto_errors_at_exchange():
+    from repro.core.halo import halo_sync
+    plan, graph = _mode_auto_case()
+    with pytest.raises(ValueError, match="autotune"):
+        halo_sync(jnp.zeros((8, 4)), graph.rank(0), plan.halo)
+
+
 def test_mesh_node2part_matches_partition_mesh_spectral():
     """partition_mesh(method='spectral') and the explicit mesh_node2part +
     node2part path produce the same decomposition (the multilevel driver

@@ -21,6 +21,7 @@ tests/drivers/resilience_driver.py and the CI resilience leg):
     mid-save leaving no COMMIT, StragglerMonitor EWMA threshold behavior.
 """
 import json
+import os
 
 import numpy as np
 import pytest
@@ -356,3 +357,98 @@ def test_straggler_ewma_threshold_behavior():
     assert mon2.end_step(12) is None
     mon2.reset()
     assert mon2.mean is None and mon2.n == 0 and len(mon2.events) == 1
+
+
+# ---------------------------------------------------------------------------
+# preemption: SIGTERM -> early checkpoint -> clean exit -> resume
+# ---------------------------------------------------------------------------
+
+_PREEMPT_CHILD = r"""
+import json, os, sys
+import jax.numpy as jnp
+from repro.runtime.fault_tolerance import ResilientConfig, run_resilient
+
+ckpt_dir, out_path = sys.argv[1], sys.argv[2]
+
+def init_state():
+    return {"w": jnp.zeros(4), "step": jnp.asarray(0)}
+
+def step_fn(state, batch):
+    import time
+    time.sleep(0.05)                      # slow enough to be hit mid-run
+    w = state["w"] + batch
+    return {"w": w, "step": state["step"] + 1}, {"loss": float(w.sum())}
+
+def batch_fn(step):
+    return jnp.full((4,), float(step % 7) * 0.25)
+
+cfg = ResilientConfig(ckpt_dir=ckpt_dir, ckpt_every=1000)  # never periodic
+print("READY", flush=True)
+state, hist = run_resilient(init_state, step_fn, batch_fn, 10000, cfg)
+with open(out_path, "w") as f:
+    json.dump({"preempted_at": hist["preempted_at"],
+               "n_losses": len(hist["losses"])}, f)
+"""
+
+
+def test_sigterm_preemption_checkpoints_and_resumes(tmp_path):
+    """SIGTERM mid-run: the child commits an early 'preempted' checkpoint,
+    exits 0 (clean return, not a signal death), and a fresh run_resilient
+    resumes from exactly the preempted step with a continuous bitwise
+    history — the zero-lost-work eviction path."""
+    import signal as _signal
+    import subprocess
+    import sys
+    import time as _time
+
+    ckpt_dir = tmp_path / "ckpt"
+    out_path = tmp_path / "hist.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _PREEMPT_CHILD, str(ckpt_dir), str(out_path)],
+        stdout=subprocess.PIPE, env=env, text=True)
+    assert proc.stdout.readline().strip() == "READY"
+    _time.sleep(0.5)                      # let a few 50 ms steps land
+    proc.send_signal(_signal.SIGTERM)
+    assert proc.wait(timeout=60) == 0     # clean return, not -SIGTERM
+
+    hist = json.loads(out_path.read_text())
+    step = hist["preempted_at"]
+    assert step is not None and hist["n_losses"] == step + 1
+    # the early checkpoint is committed and carries the preemption reason
+    assert ckpt.latest_step(ckpt_dir) == step
+    _, manifest = ckpt.restore_with_fallback(
+        ckpt_dir, {"w": jnp.zeros(4), "step": jnp.asarray(0)})
+    assert manifest["extra"]["reason"] == "preempted"
+
+    # the relaunch resumes from the preempted step and finishes the run
+    init_state, step_fn, batch_fn = _toy()
+    n_steps = step + 5
+    state, hist2 = run_resilient(init_state, step_fn, batch_fn, n_steps,
+                                 _rc(ckpt_dir, ckpt_every=1000))
+    assert hist2["resume_steps"] == [step]
+    ref_state, ref = run_resilient(init_state, step_fn, batch_fn, n_steps,
+                                   _rc(tmp_path / "ref"))
+    assert hist2["losses"] == ref["losses"]          # bitwise incl. replay
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.asarray(ref_state["w"]))
+
+
+def test_preemption_guard_restores_previous_handler():
+    """The guard is scoped: inside, SIGTERM sets the flag without killing
+    the process; after exit, the previous handler is back in place."""
+    import signal as _signal
+    from repro.runtime.fault_tolerance import preemption_guard
+
+    prev = _signal.getsignal(_signal.SIGTERM)
+    with preemption_guard() as flag:
+        assert not flag["preempted"]
+        os.kill(os.getpid(), _signal.SIGTERM)
+        assert flag["preempted"] and flag["signum"] == _signal.SIGTERM
+    assert _signal.getsignal(_signal.SIGTERM) == prev
+    # disabled guard installs nothing
+    with preemption_guard(enabled=False) as flag:
+        assert _signal.getsignal(_signal.SIGTERM) == prev
+        assert not flag["preempted"]
